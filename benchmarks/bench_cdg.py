@@ -1,0 +1,112 @@
+"""Paper §7.2-7.3 / Table 2 / Figs. 5-6: the two concrete workflows from
+the abstract DG of Fig. 3b.
+
+c-DG1 demonstrates asynchronicity HURTING (I ~= -0.015): the asynchronous
+task sets are tiny (6-8% of TTX) so the 2% async overhead outweighs the
+masking gain.  c-DG2 demonstrates a large win (I ~= 0.26): t(T3,T6) ~
+t(T4,T5)+t(T7) gives near-perfect TX masking.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.core import (CDG_SEQUENTIAL_GROUPS, ENTK_OVERHEAD, ASYNC_OVERHEAD,
+                        SimOptions, async_ttx, cdg_dag,
+                        cdg_sequential_stage_tx, relative_improvement,
+                        sequential_ttx_grouped, simulate, summit_pool, wla)
+
+PAPER = {
+    "c-DG1": dict(t_seq=2000.0, t_seq_meas=1945.0, t_async_pred=1972.0,
+                  t_async_meas=1975.0, i_pred=0.014, i_meas=-0.015,
+                  doa_dep=2, doa_res=2, wla=2),
+    "c-DG2": dict(t_seq=2000.0, t_seq_meas=1856.0, t_async_pred=1378.0,
+                  t_async_meas=1372.0, i_pred=0.311, i_meas=0.261,
+                  doa_dep=2, doa_res=2, wla=2),
+}
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "paper")
+
+
+def run(which: str, write_csv: bool = True) -> dict:
+    """c-DG2's measured full masking requires GPU sharing: its rank-2 task
+    sets demand 112 GPUs on the 96-GPU allocation, yet the paper measures
+    t_async ~= the perfectly-masked 1372 s.  We therefore report BOTH a
+    strict-exclusive-GPU schedule (honest contention) and a shared-GPU
+    schedule (reproduces the paper); see DESIGN.md §Approximations."""
+    import dataclasses as _dc
+    pool = summit_pool(16)
+    pool_shared = _dc.replace(pool, oversubscribe_gpus=True)
+    dag = cdg_dag(which)
+
+    stage_tx = cdg_sequential_stage_tx(which)
+    t_seq_model = sequential_ttx_grouped(stage_tx)
+    t_async_model, _ = async_ttx(dag)
+    t_async_pred = t_async_model * (1 + ENTK_OVERHEAD)
+    w = wla(dag, pool, "minimal")
+    if w > 0:
+        t_async_pred *= (1 + ASYNC_OVERHEAD)
+
+    seq = simulate(dag, pool, "sequential",
+                   sequential_stage_groups=CDG_SEQUENTIAL_GROUPS,
+                   options=SimOptions(seed=11))
+    asy = simulate(dag, pool, "async", options=SimOptions(seed=11))
+    asy_shared = simulate(dag, pool_shared, "async",
+                          options=SimOptions(seed=11))
+
+    out = dict(
+        which=which,
+        doa_dep=dag.doa_dep(), wla=w,
+        t_seq_model=round(t_seq_model, 1),
+        t_async_pred=round(t_async_pred, 1),
+        t_seq_sim=round(seq.makespan, 1),
+        t_async_sim_strict=round(asy.makespan, 1),
+        t_async_sim_shared=round(asy_shared.makespan, 1),
+        i_pred=round(relative_improvement(t_seq_model, t_async_pred), 3),
+        i_sim_strict=round(
+            relative_improvement(seq.makespan, asy.makespan), 3),
+        i_sim_shared=round(
+            relative_improvement(seq.makespan, asy_shared.makespan), 3),
+        gpu_util_seq=round(seq.gpu_utilization, 3),
+        gpu_util_async=round(asy.gpu_utilization, 3),
+        paper=PAPER[which],
+    )
+    if write_csv:
+        os.makedirs(ART_DIR, exist_ok=True)
+        fig = "fig5" if which == "c-DG1" else "fig6"
+        for tag, res in (("seq", seq), ("async", asy)):
+            ts, cpu, gpu = res.utilization_trace()
+            with open(os.path.join(ART_DIR, f"{fig}_{tag}.csv"), "w",
+                      newline="") as f:
+                wtr = csv.writer(f)
+                wtr.writerow(["t", "cpus", "gpus"])
+                wtr.writerows(zip(ts, cpu, gpu))
+    return out
+
+
+def main():
+    for which in ("c-DG1", "c-DG2"):
+        out = run(which)
+        paper = out.pop("paper")
+        print(f"== {which} (Table 2 workload) ==")
+        for k, v in out.items():
+            print(f"  {k:14s} {v}")
+        print(f"  paper: i_pred={paper['i_pred']} i_meas={paper['i_meas']} "
+              f"t_async_meas={paper['t_async_meas']}")
+        assert out["doa_dep"] == paper["doa_dep"]
+        assert out["wla"] == paper["wla"]
+        if which == "c-DG1":
+            # the paper's headline: asynchronicity does NOT help here
+            assert abs(out["i_sim_strict"]) < 0.06, out["i_sim_strict"]
+        else:
+            assert out["i_sim_strict"] > 0.18, out["i_sim_strict"]
+            # shared-GPU schedule reproduces the paper's measured TTX
+            assert abs(out["t_async_sim_shared"] - paper["t_async_meas"]) \
+                / paper["t_async_meas"] < 0.08, out["t_async_sim_shared"]
+    print("  agreement: OK")
+
+
+if __name__ == "__main__":
+    main()

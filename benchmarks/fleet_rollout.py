@@ -1,0 +1,56 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf fleet rollout: apply the confirmed pure-DP recipe (hillclimb
+cell 1) to the remaining small-model collective-bound train cells and
+measure the generalisation across families (linear-attention, hybrid
+SSM, SWA dense, encoder-decoder).
+
+Run:  PYTHONPATH=src:. python -m benchmarks.fleet_rollout
+"""
+
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.runtime import ShardingRules
+
+from benchmarks.roofline import analyse
+
+#: the confirmed recipe: batch over every mesh axis, nothing else sharded
+PURE_DP = dict(batch=("pod", "data", "model"), embed=None, ffn=None,
+               heads=None, kv_heads=None, vocab=None, act_ffn=None,
+               act_heads=None, act_vocab=None)
+
+ARCHS = ("rwkv6-1.6b", "zamba2-1.2b", "h2o-danube-1.8b", "whisper-tiny")
+
+
+def main():
+    rows = []
+    for arch in ARCHS:
+        base_path = os.path.join(
+            os.path.dirname(__file__), "..", "experiments", "dryrun",
+            "single_pod_16x16", f"{arch}__train_4k.json")
+        with open(base_path) as f:
+            base = json.load(f)
+        rec = run_cell(arch, "train_4k", multi_pod=False,
+                       rules=ShardingRules().override(**PURE_DP),
+                       tag="__hc_dp256", verbose=False)
+        if rec.get("status") == "error":
+            print(arch, "FAIL", rec.get("error", "")[:300])
+            continue
+        b, v = analyse(base), analyse(rec)
+        rows.append((arch, b, v))
+        print(f"  {arch:18s} collective {b['collective_s']:.3e} -> "
+              f"{v['collective_s']:.3e}  RF {b['roofline_fraction']:.3f} -> "
+              f"{v['roofline_fraction']:.3f}  dominant {b['dominant']} -> "
+              f"{v['dominant']}")
+    # the recipe must decisively win on every rollout target
+    for arch, b, v in rows:
+        assert v["roofline_fraction"] > 5 * b["roofline_fraction"], arch
+        assert v["dominant"] == "compute", arch
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lower the three chosen cells with variant
+sharding rules / perf flags / mesh aspect ratios and report
+hypothesis -> before -> after.  The full hypothesis log (confirmed AND
+refuted) is in EXPERIMENTS.md §Perf; by default this re-runs only the
+final confirmed variant per cell (--all re-runs every iteration).
+
+Cells (selection rule from the assignment):
+  qwen2-0.5b x train_4k           worst roofline fraction (0.047)
+  llama4-scout-17b-a16e x train_4k    most collective-bound (21.3 s/step)
+  qwen3-moe-30b-a3b x decode_32k      serving path (the paper's async focus)
+
+Run:  PYTHONPATH=src:. python -m benchmarks.hillclimb [--all] [--cell N]
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import OUT_DIR, run_cell
+from repro.runtime import ShardingRules
+
+from benchmarks.roofline import analyse
+
+
+def load(arch, shape, tag=""):
+    p = os.path.join(OUT_DIR, "single_pod_16x16",
+                     f"{arch}__{shape}{tag}.json")
+    with open(p) as f:
+        return json.load(f)
+
+
+def report(title, base, var):
+    b, v = analyse(base), analyse(var)
+    print(f"\n  -- {title}")
+    for k in ("compute_s", "memory_s", "collective_s", "step_time_s",
+              "roofline_fraction"):
+        delta = (v[k] / b[k] - 1) * 100 if b[k] else 0.0
+        print(f"     {k:18s} {b[k]:.4e} -> {v[k]:.4e}  ({delta:+.1f}%)")
+    print(f"     dominant           {b['dominant']} -> {v['dominant']}")
+    return b, v
+
+
+def V(tag, hypothesis, *, rules=None, flags=None, mesh=None, final=False):
+    return dict(tag=tag, hypothesis=hypothesis, rules=rules, flags=flags,
+                mesh=mesh, final=final)
+
+
+#: full iteration history per cell (see EXPERIMENTS.md §Perf for outcomes)
+VARIANTS = [
+    ("qwen2-0.5b", "train_4k", [
+        V("__hc_dp", "H1 (refuted, -0.3%): drop FSDP 'embed' sharding",
+          rules=lambda: ShardingRules().override(embed=None)),
+        V("__hc_dp_seq", "H2 (refuted, +37%): add sequence parallelism",
+          rules=lambda: ShardingRules().override(embed=None, seq="model")),
+        # H3 (refuted, +197%): pin flash-scan shardings — code-level, reverted
+        V("__hc_dp256", "H4 (CONFIRMED, collective -96.2%, RF 0.046 -> "
+          "0.849): 0.5B params need no model parallelism on 256 chips — "
+          "pure DP, batch over (data x model), params replicated "
+          "(opt state 6 GB/dev fits); only the gradient all-reduce remains",
+          rules=lambda: ShardingRules().override(
+              batch=("pod", "data", "model"), embed=None, ffn=None,
+              heads=None, kv_heads=None, vocab=None, act_ffn=None,
+              act_heads=None, act_vocab=None),
+          final=True),
+    ]),
+    ("llama4-scout-17b-a16e", "train_4k", [
+        V("__hc_bf16", "H1 (refuted, +100%): bf16-cast expert stacks before "
+          "the shard_map boundary", flags={"moe_gather_bf16": True}),
+        V("__hc_mesh32x8", "H3 (refuted, -0.5%): mesh 32x8 so the model "
+          "axis divides 40 heads", mesh=(32, 8)),
+        V("__hc_hp32x8", "H4 (refuted, +0.1%): + explicit head-parallel "
+          "shard_map attention", mesh=(32, 8),
+          flags={"headparallel_attn": True}),
+        # H5 (refuted, +0.0%): + ZeRO-3 model-keeping gathers
+        # H5b (refuted, +58%): remat=False ablation (14.7s)
+        V("__hc_dp_ep", "H6 (CONFIRMED, collective -77.9%, RF 0.100 -> "
+          "0.454): full-DP dense path (batch over data x model, dense "
+          "weights gathered bf16 per layer, ZeRO-3) + experts EP over "
+          "'model' with bf16 gathers; remaining ~236GB all-gather is "
+          "~1.8x the ZeRO bf16 weight-gather floor",
+          rules=lambda: ShardingRules().override(
+              batch=("pod", "data", "model")),
+          flags={"zero3_gather": True, "zero3_full": True,
+                 "moe_gather_bf16": True},
+          final=True),
+    ]),
+    ("qwen3-moe-30b-a3b", "decode_32k", [
+        V("__hc_flashdec", "H1 (confirmed direction, -87.1%): explicit "
+          "shard_map flash-decoding — partial softmax per sequence shard, "
+          "psum log-sum-exp combine, local cache scatter",
+          flags={"sharded_decode": True}),
+        V("__hc_flashdec_resident", "H2 (CONFIRMED, collective -99.96%, "
+          "step 1.18s -> 2.5ms, now memory-bound = at the decode "
+          "bandwidth roofline): + serving weights resident per model rank "
+          "(no ZeRO 'data' sharding to re-gather at every layer)",
+          rules=lambda: ShardingRules().override(embed=None),
+          flags={"sharded_decode": True},
+          final=True),
+    ]),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", type=int, default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="re-run every iteration, not just the finals")
+    args = ap.parse_args()
+    cells = VARIANTS if args.cell is None else [VARIANTS[args.cell]]
+
+    results = []
+    for arch, shape, variants in cells:
+        base = load(arch, shape)
+        print(f"\n== hillclimb: {arch} x {shape} "
+              f"(baseline dominant: {analyse(base)['dominant']}) ==")
+        for var in variants:
+            if not args.all and not var["final"]:
+                print(f"  [skip non-final] {var['tag']}: "
+                      f"{var['hypothesis'][:72]}")
+                continue
+            print(f"\n  hypothesis: {var['hypothesis']}")
+            rec = run_cell(
+                arch, shape, multi_pod=False,
+                rules=var["rules"]() if var["rules"] else ShardingRules(),
+                flags=var["flags"], tag=var["tag"],
+                mesh_shape=var["mesh"], verbose=False)
+            if rec.get("status") == "error":
+                print("  FAILED:", rec.get("error"))
+                continue
+            results.append(report(var["tag"], base, rec))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Deliverable (g): roofline analysis per (arch x shape x mesh).
+
+Three terms per cell, all per-device seconds for one step:
+
+  compute    = analytic matmul/scan FLOPs   / peak bf16 FLOP/s
+  memory     = analytic HBM traffic floor   / HBM bandwidth
+  collective = loop-weighted HLO collective bytes / ICI link bandwidth
+
+METHODOLOGY (full discussion in EXPERIMENTS.md §Roofline):
+- collective bytes come from the COMPILED partitioned HLO (dry-run
+  artifact), with while-loop bodies weighted by their known trip counts
+  (XLA's own cost_analysis counts a scanned layer once; a 40-layer scan
+  would otherwise be 40x under-counted).
+- compute/memory come from the structural model in launch/analytic.py:
+  XLA:CPU's flop counter has the same while-body blindness, and its
+  'bytes accessed' reflects CPU fusion, not TPU VMEM reuse.  The raw XLA
+  numbers are still recorded in the artifacts for reference.
+- roofline_fraction = (MODEL_FLOPS/dev / peak) / max(terms): the fraction
+  of peak the step achieves if it hits this roofline (MFU bound).
+- useful_ratio = MODEL_FLOPS / analytic FLOPs: how much compiled compute
+  is 6ND-useful (remat + attention + routing overhead shows up here).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.analytic import analyse_cell
+from repro.launch.mesh import TPU_V5E
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def analyse(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec.get("devices", 256)
+    cell = analyse_cell(cfg, shape, rec.get("params", 0),
+                        rec.get("active_params", rec.get("params", 0)),
+                        batch_axes_size=n_dev)
+    flops_dev, hbm_dev, model_dev = cell.per_device(n_dev)
+    coll = rec.get("collectives_weighted", rec.get("collectives", {}))
+    coll_bytes = float(coll.get("total_bytes", 0.0))
+
+    compute_s = flops_dev / TPU_V5E["peak_bf16_flops"]
+    memory_s = hbm_dev / TPU_V5E["hbm_bytes_per_s"]
+    collective_s = coll_bytes / TPU_V5E["ici_bytes_per_s"]
+    step = max(compute_s, memory_s, collective_s)
+    dominant = ("compute" if step == compute_s else
+                "memory" if step == memory_s else "collective")
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, step_time_s=step,
+        model_flops=cell.model_flops,
+        useful_ratio=cell.model_flops / max(cell.flops_global, 1.0),
+        roofline_fraction=(model_dev / TPU_V5E["peak_bf16_flops"]) / step
+        if step else 0.0,
+        collective_bytes=coll_bytes,
+        xla_flops_per_dev=rec.get("cost", {}).get("flops"),
+        tokens_per_s_roofline=(
+            shape.seq_len * shape.global_batch / step
+            if shape.mode != "decode" else shape.global_batch / step)
+        if step else 0.0,
+    )
+
+
+def load_cells(mesh: str = "single_pod_16x16", tag: str = "") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRY_DIR, mesh, f"*{tag}.json"))):
+        if tag == "" and "__hc" in os.path.basename(p):
+            continue
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("status") == "run" and "roofline" in rec:
+            out.append(rec)
+    return out
+
+
+def table(mesh: str = "single_pod_16x16", tag: str = "") -> list[dict]:
+    return [analyse(rec) for rec in load_cells(mesh, tag)]
+
+
+def main():
+    print("== Roofline (single-pod 16x16, per-device terms, seconds) ==")
+    rows = table()
+    for a in rows:
+        print(f"  {a['arch']:24s}{a['shape']:13s}"
+              f"c={a['compute_s']:.3e} m={a['memory_s']:.3e} "
+              f"x={a['collective_s']:.3e}  {a['dominant']:10s} "
+              f"useful={a['useful_ratio']:.2f} "
+              f"RF={a['roofline_fraction']:.3f}")
+    assert len(rows) >= 33, f"expected >= 33 compiled cells, got {len(rows)}"
+    for a in rows:
+        assert a["step_time_s"] > 0, a
+        assert 0 < a["useful_ratio"] <= 1.05, (
+            a["arch"], a["shape"], a["useful_ratio"])
+    worst = sorted(rows, key=lambda a: a["roofline_fraction"])[:3]
+    print("  worst roofline fractions:",
+          [(w["arch"], w["shape"], round(w["roofline_fraction"], 3))
+           for w in worst])
+    by_dom = {}
+    for a in rows:
+        by_dom[a["dominant"]] = by_dom.get(a["dominant"], 0) + 1
+    print("  dominant-term histogram:", by_dom)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

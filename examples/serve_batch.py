@@ -1,0 +1,59 @@
+"""Batched serving example: prefill + decode across heterogeneous
+architectures (dense / MoE / RWKV6 / hybrid), demonstrating the unified
+cache-specs + decode-step API the serving runtime is built on.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.models.params import init_params
+from repro.runtime.steps import build_decode_step, build_prefill_step
+
+ARCHS = ("qwen2-0.5b", "qwen3-moe-30b-a3b", "rwkv6-1.6b", "zamba2-1.2b")
+B, PROMPT, GEN, CACHE = 4, 24, 12, 64
+
+
+def serve_one(arch: str):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.PRNGKey(0))
+
+    prefill, _ = build_prefill_step(model)
+    batch = model.make_batch(jax.random.PRNGKey(1), batch=B, seq=PROMPT,
+                             mode="prefill")
+    batch.pop("labels", None)
+    t0 = time.perf_counter()
+    nxt = jnp.argmax(prefill(params, batch), axis=-1).astype(jnp.int32)
+    t_prefill = time.perf_counter() - t0
+
+    decode, _ = build_decode_step(model, batch=B, s_max=CACHE)
+    cache = init_params(model.cache_specs(B, CACHE), jax.random.PRNGKey(2))
+    toks = [np.asarray(nxt)]
+    t0 = time.perf_counter()
+    for i in range(GEN):
+        nxt, _, cache = decode(params, cache, nxt[:, None],
+                               jnp.full((B,), PROMPT + i, jnp.int32))
+        toks.append(np.asarray(nxt))
+    dt = time.perf_counter() - t0
+    gen = np.stack(toks, 1)
+    assert gen.shape == (B, GEN + 1) and (gen >= 0).all()
+    print(f"  {arch:22s} prefill {t_prefill:6.2f}s   decode "
+          f"{B * GEN / dt:7.1f} tok/s   sample {gen[0][:6]}")
+
+
+def main():
+    print(f"batched serving: {B} requests, prompt {PROMPT}, +{GEN} tokens")
+    for arch in ARCHS:
+        serve_one(arch)
+    print("OK: one serving loop, four architecture families")
+
+
+if __name__ == "__main__":
+    main()

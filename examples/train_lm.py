@@ -1,0 +1,112 @@
+"""End-to-end driver: train a ~100M-param qwen2-style LM for a few hundred
+steps on CPU with the full production substrate — sharded-ready step
+builder, WSD/cosine schedule, grad accumulation, async checkpointing, an
+injected node failure with elastic restart, and a loss that demonstrably
+goes down.
+
+Run:  PYTHONPATH=src python examples/train_lm.py            (~100M, slow on CPU)
+Fast: PYTHONPATH=src python examples/train_lm.py --small --steps 60  (~3 min)
+"""
+
+import argparse
+import dataclasses
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_pytree
+from repro.configs import get_config
+from repro.data import SyntheticTokenDataset
+from repro.models.api import build_model
+from repro.models.params import count_params
+from repro.runtime import TrainOptions
+from repro.runtime.steps import build_train_step, make_train_state
+
+CKPT = "/tmp/repro_train_lm"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step "
+                         "(default: steps//2)")
+    ap.add_argument("--small", action="store_true",
+                    help="~33M variant for quick CPU validation")
+    args = ap.parse_args(argv)
+    fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+
+    if args.small:
+        # ~33M params: same family, small vocab — minutes on one CPU core
+        cfg = dataclasses.replace(
+            get_config("qwen2-0.5b"), num_layers=8, d_model=512,
+            num_heads=8, num_kv_heads=2, head_dim=64, d_ff=1536,
+            vocab_size=8192, max_position=args.seq)
+    else:
+        # ~103M params: qwen2-0.5b geometry scaled down
+        cfg = dataclasses.replace(
+            get_config("qwen2-0.5b"), num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=32768, max_position=args.seq)
+    model = build_model(cfg)
+    n = count_params(model.specs())
+    print(f"model: {n / 1e6:.1f}M params "
+          f"({cfg.num_layers}L x {cfg.d_model}d, vocab {cfg.vocab_size})")
+
+    opts = TrainOptions(peak_lr=1e-3, warmup=20, total_steps=args.steps,
+                        schedule="wsd", microbatches=2)
+    step_fn, _ = build_train_step(model, opts=opts)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    ds = SyntheticTokenDataset(cfg.vocab_size, args.seq, args.batch, seed=42)
+
+    shutil.rmtree(CKPT, ignore_errors=True)
+    mgr = CheckpointManager(CKPT, interval=25, max_keep=2)
+
+    losses = {}
+    s, injected = 0, False
+    t0 = time.perf_counter()
+    while s < args.steps:
+        if s == fail_at and not injected:
+            injected = True
+            # simulate losing the allocation: drop in-memory state,
+            # restore from the latest async checkpoint
+            mgr.wait()
+            ls = latest_step(CKPT)
+            print(f"!! injected node failure at step {s}; "
+                  f"restoring from checkpoint step {ls}")
+            assert ls is not None, "no checkpoint to restore from"
+            state = restore_pytree(state, CKPT, ls)
+            s = ls + 1
+            continue
+        hb = ds.host_batch(s)
+        batch = {k: jnp.asarray(v) for k, v in hb.items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses[s] = loss
+        mgr.maybe_save(state, s)
+        if s % 20 == 0:
+            rate = (s + 1) / (time.perf_counter() - t0)
+            print(f"step {s:4d}  loss {loss:.4f}  lr "
+                  f"{float(metrics['lr']):.2e}  ({rate:.2f} steps/s)")
+        s += 1
+    mgr.close()
+
+    first = losses[min(losses)]
+    last = sum(losses[k] for k in sorted(losses)[-10:]) / 10
+    print(f"loss: {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(failure injected and recovered: {injected})")
+    drop = 0.5 if args.steps >= 100 else 0.15
+    assert last < first - drop, f"loss must drop by > {drop} nats"
+    # determinism check: batch at a step is identical across restarts
+    b1 = ds.host_batch(7)["tokens"]
+    b2 = ds.host_batch(7)["tokens"]
+    assert (b1 == b2).all()
+    print("OK: loss decreased; pipeline deterministic; restart transparent")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Core of the reproduction: asynchronous execution of heterogeneous tasks
+(Pascuzzi et al., 2022) — DG model, DOA/WLA metrics, makespan model,
+discrete-event simulator, and a real asynchronous executor."""
+
+from .dag import DAG, TaskSet
+from .resources import (NodeSpec, PoolSpec, Resources, doa_res, summit_pool,
+                        tpu_pod_pool, wla)
+from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
+                    maskable_stages, predict, relative_improvement,
+                    sequential_ttx, sequential_ttx_grouped,
+                    staggered_async_ttx)
+from .simulator import SimOptions, SimResult, TaskRecord, simulate
+from .executor import ExecResult, RealExecutor
+from .scheduler import (ExecutionPolicy, adaptive_policy, async_policy,
+                        sequential_policy)
+from .adaptive import PolicyComparison, compare_policies
+from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
+                       Pipeline, Stage, cdg_dag, cdg_sequential_stage_tx,
+                       ddmd_sequential_stage_groups, ddmd_stage_tx,
+                       deepdrivemd_dag, fig2a_chain, fig2b_fork,
+                       fig2b_with_paper_tx, fig2d_independent,
+                       pipelines_to_dag)
+
+__all__ = [s for s in dir() if not s.startswith("_")]

@@ -1,0 +1,295 @@
+"""Task-set dependency graphs (DGs) and the dependency-permitted degree of
+asynchronicity (DOA_dep) from §5.1 of the paper.
+
+A workflow is a DAG whose nodes are *task sets* (groups of identical tasks
+that may execute concurrently, e.g. "all 96 Simulation tasks") and whose
+edges are data dependencies.  Task-set indices are ordered breadth-first, as
+in the paper's Fig. 2 / Fig. 3.
+
+``DOA_dep`` is defined by the paper as "the number of independent execution
+branches minus 1".  Operationally we count branches as::
+
+    branches = (#source nodes) + sum_v max(0, outdeg(v) - 1)
+                                - sum_v max(0, indeg(v) - 1)
+
+i.e. every fork with diverging paths opens a new branch and every
+convergence closes one.  This reproduces the paper's published values for
+every DG it analyses: Fig. 2a -> 0, Fig. 2b -> 1, Fig. 2d -> n,
+Fig. 3a (DeepDriveMD, 3 staggered iterations) -> 2, and Fig. 3b -> 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Iterable, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSet:
+    """A set of identical tasks (one DG node).
+
+    Attributes mirror the paper's Table 1 / Table 2 columns.
+
+    ``tx_mean`` is the mean task execution time (TX) in seconds; actual TX
+    values are sampled as ``N(tx_mean, tx_sigma)`` with an *absolute* sigma
+    of 0.05 s (Table 2: "sampled from N(mu, sigma=0.05)") to "mimic the
+    stochastic behaviour of actual executables".  Set a larger ``tx_sigma``
+    to study noisy tasks / stragglers.
+    """
+
+    name: str
+    num_tasks: int
+    cpus_per_task: int
+    gpus_per_task: int
+    tx_mean: float
+    tx_sigma: float = 0.05
+    #: payload factory: called as payload(task_index) -> None to run a real
+    #: task body (e.g. a jitted JAX step) in the RealExecutor.  The analytic
+    #: model and the discrete-event simulator never call it.
+    payload: Callable[[int], object] | None = None
+    #: task type tag (``simulation`` | ``aggregation`` | ``training`` |
+    #: ``inference`` | ...), used for reporting and adaptive policies.
+    kind: str = "generic"
+
+    @property
+    def full_set_cpus(self) -> int:
+        return self.num_tasks * self.cpus_per_task
+
+    @property
+    def full_set_gpus(self) -> int:
+        return self.num_tasks * self.gpus_per_task
+
+    def with_(self, **kw) -> "TaskSet":
+        return dataclasses.replace(self, **kw)
+
+
+class DAG:
+    """A directed acyclic graph of :class:`TaskSet` nodes."""
+
+    def __init__(self, task_sets: Iterable[TaskSet] = (),
+                 edges: Iterable[tuple[str, str]] = ()):
+        self._nodes: dict[str, TaskSet] = {}
+        self._children: dict[str, list[str]] = {}
+        self._parents: dict[str, list[str]] = {}
+        for ts in task_sets:
+            self.add(ts)
+        for u, v in edges:
+            self.add_edge(u, v)
+
+    # -- construction -----------------------------------------------------
+    def add(self, ts: TaskSet) -> TaskSet:
+        if ts.name in self._nodes:
+            raise ValueError(f"duplicate task set {ts.name!r}")
+        self._nodes[ts.name] = ts
+        self._children[ts.name] = []
+        self._parents[ts.name] = []
+        return ts
+
+    def add_edge(self, parent: str, child: str) -> None:
+        if parent not in self._nodes or child not in self._nodes:
+            raise KeyError(f"unknown task set in edge ({parent!r}, {child!r})")
+        if child in self._children[parent]:
+            return
+        self._children[parent].append(child)
+        self._parents[child].append(parent)
+        if self._has_cycle():
+            self._children[parent].remove(child)
+            self._parents[child].remove(parent)
+            raise ValueError(f"edge ({parent!r}, {child!r}) creates a cycle")
+
+    def replace(self, name: str, **kw) -> None:
+        self._nodes[name] = self._nodes[name].with_(**kw)
+
+    # -- queries ----------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._nodes
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def node(self, name: str) -> TaskSet:
+        return self._nodes[name]
+
+    @property
+    def nodes(self) -> Mapping[str, TaskSet]:
+        return dict(self._nodes)
+
+    def children(self, name: str) -> Sequence[str]:
+        return tuple(self._children[name])
+
+    def parents(self, name: str) -> Sequence[str]:
+        return tuple(self._parents[name])
+
+    def edges(self) -> list[tuple[str, str]]:
+        return [(u, v) for u, cs in self._children.items() for v in cs]
+
+    def sources(self) -> list[str]:
+        return [n for n in self._nodes if not self._parents[n]]
+
+    def sinks(self) -> list[str]:
+        return [n for n in self._nodes if not self._children[n]]
+
+    def _has_cycle(self) -> bool:
+        try:
+            self.topological_order()
+            return False
+        except ValueError:
+            return True
+
+    def topological_order(self) -> list[str]:
+        indeg = {n: len(ps) for n, ps in self._parents.items()}
+        q = deque(sorted(n for n, d in indeg.items() if d == 0))
+        out: list[str] = []
+        while q:
+            n = q.popleft()
+            out.append(n)
+            for c in self._children[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    q.append(c)
+        if len(out) != len(self._nodes):
+            raise ValueError("graph has a cycle")
+        return out
+
+    def ranks(self) -> dict[str, int]:
+        """Breadth-first rank of each task set (paper Fig. 2/3 y-axis)."""
+        r: dict[str, int] = {}
+        for n in self.topological_order():
+            ps = self._parents[n]
+            r[n] = 0 if not ps else 1 + max(r[p] for p in ps)
+        return r
+
+    def rank_groups(self) -> list[list[str]]:
+        """Task sets grouped by rank, rank-ascending (PST stages)."""
+        r = self.ranks()
+        depth = max(r.values(), default=-1) + 1
+        groups: list[list[str]] = [[] for _ in range(depth)]
+        for n in self.topological_order():
+            groups[r[n]].append(n)
+        return groups
+
+    # -- the paper's §5.1 -------------------------------------------------
+    def _chains_and_union(self) -> tuple[list[list[str]], dict[str, int], list[int]]:
+        """DFS branch discovery.
+
+        Returns ``(chains, owner, uf)`` where ``chains`` are the maximal
+        fork-opened chains, ``owner[name]`` the chain id a task set was
+        discovered on, and ``uf`` a union-find over chain ids in which the
+        chains of converging sub-paths (nodes with indeg > 1) have been
+        merged — converging paths must synchronise at the join, so they are
+        not *independent* branches in the paper's sense.
+        """
+        chains: list[list[str]] = []
+        owner: dict[str, int] = {}
+        uf: list[int] = []
+
+        def find(x: int) -> int:
+            while uf[x] != x:
+                uf[x] = uf[uf[x]]
+                x = uf[x]
+            return x
+
+        def union(a: int, b: int) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                uf[max(ra, rb)] = min(ra, rb)
+
+        for n in self.topological_order():
+            ps = self._parents[n]
+            if not ps:
+                owner[n] = len(chains)
+                chains.append([n])
+                uf.append(len(uf))
+                continue
+            first = ps[0]
+            b = owner[first]
+            if self._children[first].index(n) == 0 and chains[b][-1] == first:
+                owner[n] = b
+                chains[b].append(n)
+            else:
+                owner[n] = len(chains)
+                chains.append([n])
+                uf.append(len(uf))
+            if len(ps) > 1:  # a join: converging branches collapse into one
+                for p in ps:
+                    union(owner[p], owner[n])
+        # path-compress all
+        for i in range(len(uf)):
+            uf[i] = find(i)
+        return chains, owner, uf
+
+    def branches(self) -> list[list[str]]:
+        """Maximal fork-opened chains (pre-join-merge); see `branch_ids`."""
+        return self._chains_and_union()[0]
+
+    def branch_ids(self) -> dict[str, int]:
+        """Final independent-branch id per task set (joins merged)."""
+        _, owner, uf = self._chains_and_union()
+        return {n: uf[b] for n, b in owner.items()}
+
+    def num_branches(self) -> int:
+        """Number of independent execution branches (see module docstring).
+
+        Equals ``#sources + sum max(0, outdeg-1) - sum max(0, indeg-1)`` on
+        graphs without redundant joins; computed robustly via union-find.
+        """
+        if not self._nodes:
+            return 0
+        return len(set(self.branch_ids().values()))
+
+    def doa_dep(self) -> int:
+        """Dependency-permitted degree of asynchronicity (paper §5.1)."""
+        return max(0, self.num_branches() - 1)
+
+    def critical_path_tx(self) -> float:
+        """Lower bound on makespan: longest tx_mean-weighted path."""
+        best: dict[str, float] = {}
+        for n in self.topological_order():
+            ps = self._parents[n]
+            base = max((best[p] for p in ps), default=0.0)
+            best[n] = base + self._nodes[n].tx_mean
+        return max(best.values(), default=0.0)
+
+    def total_tx(self) -> float:
+        return sum(ts.tx_mean for ts in self._nodes.values())
+
+    def validate(self) -> None:
+        self.topological_order()
+        for ts in self._nodes.values():
+            if ts.num_tasks <= 0:
+                raise ValueError(f"{ts.name}: num_tasks must be positive")
+            if ts.tx_mean < 0:
+                raise ValueError(f"{ts.name}: negative TX")
+            if ts.cpus_per_task < 0 or ts.gpus_per_task < 0:
+                raise ValueError(f"{ts.name}: negative resources")
+
+    def copy(self) -> "DAG":
+        g = DAG()
+        for ts in self._nodes.values():
+            g.add(ts)
+        for u, v in self.edges():
+            g.add_edge(u, v)
+        return g
+
+    def with_sequential_barriers(
+            self, stage_groups: Sequence[Sequence[str]] | None = None) -> "DAG":
+        """Return the BSP/sequential version of this DG: an edge from every
+        task set in stage s to every task set in stage s+1 (PST stage
+        barriers), which is how the paper's sequential mode executes.
+
+        ``stage_groups`` overrides the default rank-per-stage mapping; the
+        paper's c-DG workflows use one stage per task *type* group
+        (T0 | {T1,T2} | {T3,T6} | {T4,T5} | T7), which is how their
+        sequential TTX sums to ~2000 s.
+        """
+        g = self.copy()
+        groups = [list(s) for s in (stage_groups or g.rank_groups())]
+        for a, b in zip(groups, groups[1:]):
+            for u in a:
+                for v in b:
+                    try:
+                        g.add_edge(u, v)
+                    except ValueError:
+                        pass  # edge already implied; never cycles by stage order
+        return g

@@ -1,0 +1,43 @@
+"""Execution policies: named bundles of (mode, dependency granularity,
+stage grouping) consumed by both the simulator and the real executor."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .dag import DAG
+from .resources import PoolSpec
+from .simulator import Mode, SimOptions, SimResult, simulate
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a workflow DG is scheduled onto an allocation."""
+
+    mode: Mode = "async"
+    task_level: bool = False
+    sequential_stage_groups: Sequence[Sequence[str]] | None = None
+    name: str = ""
+
+    def simulate(self, dag: DAG, pool: PoolSpec,
+                 options: SimOptions = SimOptions()) -> SimResult:
+        return simulate(
+            dag, pool, self.mode, options=options,
+            task_level=self.task_level,
+            sequential_stage_groups=self.sequential_stage_groups)
+
+
+def sequential_policy(stage_groups=None) -> ExecutionPolicy:
+    """The paper's BSP/sequential mode (PST stage barriers)."""
+    return ExecutionPolicy("sequential", False, stage_groups, "sequential")
+
+
+def async_policy() -> ExecutionPolicy:
+    """The paper's asynchronous mode (set-level dependencies only)."""
+    return ExecutionPolicy("async", False, None, "async")
+
+
+def adaptive_policy() -> ExecutionPolicy:
+    """Task-level asynchronicity (the paper's future work; see adaptive.py)."""
+    return ExecutionPolicy("async", True, None, "adaptive")

@@ -1,0 +1,291 @@
+"""Discrete-event simulator for workflow execution on an allocation.
+
+This is the framework's "measured" analogue of the paper's Summit runs: it
+executes a task-set DG on a :class:`~repro.core.resources.PoolSpec` with a
+backfilling resource scheduler (the RADICAL-Pilot agent analogue), sampled
+task durations (``N(mu, 0.05 mu)``, Table 1/2 captions), EnTK-like dispatch
+overheads, and optional straggler injection + duplicate-dispatch
+mitigation.  A pure event loop over aggregate resource counters, it
+simulates thousands of nodes and ~10^5 tasks in well under a second.
+
+Modes:
+  ``async``       dependency-driven dispatch (the paper's asynchronous mode)
+  ``sequential``  PST stage barriers (the paper's sequential/BSP mode)
+
+Task-level asynchronicity (the paper's future work, our ``adaptive``
+scheduler) is enabled with ``task_level=True``: a task becomes eligible as
+soon as its *matching* parent tasks complete instead of waiting for whole
+parent sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from collections import deque
+from typing import Literal, Sequence
+
+from .dag import DAG
+from .resources import PoolSpec
+
+Mode = Literal["async", "sequential"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskRecord:
+    set_name: str
+    index: int
+    start: float
+    end: float
+    cpus: int
+    gpus: int
+    duplicate: bool = False
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    records: list[TaskRecord]
+    pool_cpus: int
+    pool_gpus: int
+    mode: str
+    #: fraction of (resource x makespan) area actually used
+    cpu_utilization: float = 0.0
+    gpu_utilization: float = 0.0
+    tasks_total: int = 0
+    duplicates: int = 0
+
+    def throughput(self) -> float:
+        return self.tasks_total / self.makespan if self.makespan else 0.0
+
+    def utilization_trace(self, resolution: int = 256
+                          ) -> tuple[list[float], list[int], list[int]]:
+        """(time, cpus_in_use, gpus_in_use) sampled on a uniform grid —
+        the data behind the paper's Figs. 4-6."""
+        ts = [self.makespan * i / (resolution - 1) for i in range(resolution)]
+        cpu = [0] * resolution
+        gpu = [0] * resolution
+        for r in self.records:
+            for i, t in enumerate(ts):
+                if r.start <= t < r.end:  # instantaneous usage at time t
+                    cpu[i] += r.cpus
+                    gpu[i] += r.gpus
+        return ts, cpu, gpu
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOptions:
+    seed: int = 0
+    sample_tx: bool = True
+    #: EnTK-like middleware overhead: fractional stretch on every task
+    #: duration (Table 3 caption: ~4%).
+    entk_overhead: float = 0.04
+    #: extra fractional overhead when running in asynchronous mode (~2%).
+    async_overhead: float = 0.02
+    #: fixed per-task dispatch latency (s).
+    launch_latency: float = 0.5
+    #: straggler injection: with probability p a task runs xfactor slower.
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    #: duplicate-dispatch mitigation: relaunch a task if it exceeds
+    #: ``threshold x`` its set's mean sampled duration; first finish wins.
+    mitigate_stragglers: bool = False
+    mitigation_threshold: float = 2.0
+
+
+def simulate(dag: DAG, pool: PoolSpec, mode: Mode = "async", *,
+             options: SimOptions = SimOptions(),
+             task_level: bool = False,
+             sequential_stage_groups: Sequence[Sequence[str]] | None = None,
+             ) -> SimResult:
+    """Run one workflow execution and return its schedule."""
+    rng = random.Random(options.seed)
+    g = dag if mode == "async" else dag.with_sequential_barriers(
+        sequential_stage_groups)
+    total = pool.total
+    cpus_free = total.cpus
+    gpus_free = total.gpus
+
+    overhead = (1 + options.entk_overhead)
+    if mode == "async":
+        overhead *= (1 + options.async_overhead)
+
+    # ---- expand task sets into tasks -------------------------------------
+    order = g.topological_order()
+    ranks = g.ranks()
+    durations: dict[tuple[str, int], float] = {}
+    for name in order:
+        ts = g.node(name)
+        for i in range(ts.num_tasks):
+            mu = ts.tx_mean
+            d = (rng.gauss(mu, ts.tx_sigma)
+                 if options.sample_tx and mu > 0 else mu)
+            d = max(0.0, d)
+            if options.straggler_prob and rng.random() < options.straggler_prob:
+                d *= options.straggler_factor
+            durations[(name, i)] = d * overhead
+
+    remaining_parent_tasks: dict[tuple[str, int], int] = {}
+    set_remaining: dict[str, int] = {n: g.node(n).num_tasks for n in order}
+
+    def parents_satisfied(name: str, i: int) -> bool:
+        return remaining_parent_tasks[(name, i)] == 0
+
+    # dependency bookkeeping
+    if task_level:
+        # task i of a child set depends on task j of each parent set with
+        # j = i mapped proportionally (i * np // nc); a parent task may
+        # therefore unlock several child tasks.
+        child_waiters: dict[tuple[str, int], list[tuple[str, int]]] = {}
+        for name in order:
+            nc = g.node(name).num_tasks
+            for i in range(nc):
+                cnt = 0
+                for p in g.parents(name):
+                    np_ = g.node(p).num_tasks
+                    j = i * np_ // nc
+                    child_waiters.setdefault((p, j), []).append((name, i))
+                    cnt += 1
+                remaining_parent_tasks[(name, i)] = cnt
+    else:
+        # set-level: every task of a child set waits for *all* tasks of all
+        # parent sets (the paper's stage semantics).
+        for name in order:
+            cnt = sum(g.node(p).num_tasks for p in g.parents(name))
+            for i in range(g.node(name).num_tasks):
+                remaining_parent_tasks[(name, i)] = cnt
+
+    # ---- event loop -------------------------------------------------------
+    # Ready bookkeeping is PER SET: all tasks of a set share (rank, topo
+    # position, resource footprint), so scheduling scans O(#sets) instead
+    # of O(#tasks) — the loop stays fast at 10^5+ tasks (4096-node runs).
+    topo_pos = {n: k for k, n in enumerate(order)}
+    set_priority = sorted(order, key=lambda n: (ranks[n], topo_pos[n]))
+    ready_sets: dict[str, deque] = {n: deque() for n in order}
+    finished: set[tuple[str, int]] = set()
+    running: dict[tuple[str, int], float] = {}
+    launched: set[tuple[str, int]] = set()
+    records: list[TaskRecord] = []
+    events: list[tuple[float, int, str, int, bool]] = []  # (t, seq, name, i, dup)
+    seq = 0
+    now = 0.0
+    duplicates = 0
+    duplicated: set[tuple[str, int]] = set()
+    set_durations: dict[str, list[float]] = {}
+
+    def push_ready(name: str, i: int) -> None:
+        ready_sets[name].append(i)
+
+    for name in order:
+        if not g.parents(name):
+            for i in range(g.node(name).num_tasks):
+                push_ready(name, i)
+
+    def try_start() -> None:
+        nonlocal cpus_free, gpus_free, seq
+        # backfill: walk sets in priority order, start whatever fits
+        for name in set_priority:
+            q = ready_sets[name]
+            if not q:
+                continue
+            ts = g.node(name)
+            need_c = ts.cpus_per_task if not pool.oversubscribe_cpus else 0
+            need_g = ts.gpus_per_task if not pool.oversubscribe_gpus else 0
+            n_fit = len(q)
+            if need_c:
+                n_fit = min(n_fit, cpus_free // need_c)
+            if need_g:
+                n_fit = min(n_fit, gpus_free // need_g)
+            for _ in range(max(0, n_fit)):
+                i = q.popleft()
+                if (name, i) in finished or (name, i) in launched:
+                    continue
+                if not pool.oversubscribe_cpus:
+                    cpus_free -= ts.cpus_per_task
+                if not pool.oversubscribe_gpus:
+                    gpus_free -= ts.gpus_per_task
+                launched.add((name, i))
+                end = now + options.launch_latency + durations[(name, i)]
+                running[(name, i)] = now
+                heapq.heappush(events, (end, seq, name, i, False))
+                seq += 1
+
+    def complete(name: str, i: int) -> None:
+        nonlocal cpus_free, gpus_free
+        ts = g.node(name)
+        start = running.pop((name, i))
+        if not pool.oversubscribe_cpus:
+            cpus_free = min(total.cpus, cpus_free + ts.cpus_per_task)
+        if not pool.oversubscribe_gpus:
+            gpus_free += ts.gpus_per_task
+        finished.add((name, i))
+        records.append(TaskRecord(name, i, start, now,
+                                  ts.cpus_per_task, ts.gpus_per_task))
+        set_durations.setdefault(name, []).append(now - start)
+        set_remaining[name] -= 1
+        if task_level:
+            for (cn, ci) in child_waiters.get((name, i), ()):  # type: ignore[union-attr]
+                remaining_parent_tasks[(cn, ci)] -= 1
+                if remaining_parent_tasks[(cn, ci)] == 0:
+                    push_ready(cn, ci)
+        elif set_remaining[name] == 0:
+            for c in g.children(name):
+                nt = g.node(name).num_tasks
+                for j in range(g.node(c).num_tasks):
+                    remaining_parent_tasks[(c, j)] -= nt
+                    if remaining_parent_tasks[(c, j)] == 0:
+                        push_ready(c, j)
+
+    try_start()
+    event_count = 0
+    while events:
+        now_, _, name, i, dup = heapq.heappop(events)
+        now = now_
+        if (name, i) in finished:
+            continue  # a duplicate already finished this task
+        complete(name, i)
+        event_count += 1
+        # straggler mitigation: inspect running tasks, duplicate laggards.
+        # The scan is O(running); amortise it by checking every 32
+        # completions (watchdogs poll, they don't run per-event).
+        if options.mitigate_stragglers and event_count % 32 == 0:
+            for (rn, ri), st in list(running.items()):
+                if (rn, ri) in duplicated:
+                    continue
+                ds = set_durations.get(rn)
+                if not ds:
+                    continue
+                mean = sum(ds) / len(ds)
+                if (now - st) > options.mitigation_threshold * mean:
+                    # relaunch with a fresh (non-straggler) duration
+                    ts = g.node(rn)
+                    d = ts.tx_mean * overhead
+                    heapq.heappush(events, (now + options.launch_latency + d,
+                                            seq, rn, ri, True))
+                    seq += 1
+                    duplicates += 1
+                    duplicated.add((rn, ri))
+                    running[(rn, ri)] = min(running[(rn, ri)], st)
+        try_start()
+
+    makespan = max((r.end for r in records), default=0.0)
+    cpu_area = sum(r.duration * r.cpus for r in records)
+    gpu_area = sum(r.duration * r.gpus for r in records)
+    return SimResult(
+        makespan=makespan,
+        records=records,
+        pool_cpus=total.cpus,
+        pool_gpus=total.gpus,
+        mode=mode if not task_level else f"{mode}+task_level",
+        cpu_utilization=(cpu_area / (total.cpus * makespan)
+                         if makespan and total.cpus else 0.0),
+        gpu_utilization=(gpu_area / (total.gpus * makespan)
+                         if makespan and total.gpus else 0.0),
+        tasks_total=len(records),
+        duplicates=duplicates,
+    )

@@ -1,0 +1,244 @@
+"""Workflow construction: the Pipeline-Stage-Task (PST) API (EnTK
+analogue, Ref. [3] of the paper) and builders for every DG the paper uses:
+
+- the Fig. 2 abstract DGs (chain / fork / arbitrary / fully independent);
+- the DeepDriveMD workflow (Table 1 task sets, Fig. 3a staggered DG);
+- the abstract DG of Fig. 3b with the c-DG1 / c-DG2 concrete assignments
+  (Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .dag import DAG, TaskSet
+
+
+# ---------------------------------------------------------------------------
+# PST (Pipeline / Stage / Task) — the EnTK programming model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Stage:
+    """One PST stage: task sets that execute under a common barrier."""
+
+    task_sets: list[TaskSet]
+    name: str = ""
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """A sequence of stages with barrier semantics between them."""
+
+    stages: list[Stage]
+    name: str = "pipeline"
+
+    def to_dag(self) -> DAG:
+        g = DAG()
+        prev: list[str] = []
+        for s in self.stages:
+            cur = []
+            for ts in s.task_sets:
+                g.add(ts)
+                cur.append(ts.name)
+            for u in prev:
+                for v in cur:
+                    g.add_edge(u, v)
+            prev = cur
+        return g
+
+
+def pipelines_to_dag(pipelines: Sequence[Pipeline]) -> DAG:
+    """Independent pipelines side by side (workflow-level asynchronicity)."""
+    g = DAG()
+    for p in pipelines:
+        sub = p.to_dag()
+        for ts in sub.nodes.values():
+            g.add(ts)
+        for u, v in sub.edges():
+            g.add_edge(u, v)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 abstract DGs
+# ---------------------------------------------------------------------------
+
+def _ts(name: str, tx: float = 100.0, **kw) -> TaskSet:
+    kw.setdefault("num_tasks", 1)
+    kw.setdefault("cpus_per_task", 1)
+    kw.setdefault("gpus_per_task", 0)
+    return TaskSet(name=name, tx_mean=tx, **kw)
+
+
+def fig2a_chain(n: int = 4) -> DAG:
+    """Linear chain: DOA_dep = 0."""
+    g = DAG()
+    prev = None
+    for i in range(n):
+        g.add(_ts(f"T{i}"))
+        if prev is not None:
+            g.add_edge(prev, f"T{i}")
+        prev = f"T{i}"
+    return g
+
+
+def fig2b_fork() -> DAG:
+    """T0 forks into chains {T1,T3,T5} and {T2,T4}: DOA_dep = 1."""
+    g = DAG()
+    for i in range(6):
+        g.add(_ts(f"T{i}"))
+    for u, v in [("T0", "T1"), ("T0", "T2"), ("T1", "T3"), ("T2", "T4"),
+                 ("T3", "T5")]:
+        g.add_edge(u, v)
+    return g
+
+
+def fig2b_with_paper_tx() -> DAG:
+    """Fig. 2b with the §5.3 masking example TXs:
+    t0=500, t1=t2=1000, t3=t5=2000, t4=4000 -> t_seq=7500, t_async=5500."""
+    g = fig2b_fork()
+    for name, tx in [("T0", 500.0), ("T1", 1000.0), ("T2", 1000.0),
+                     ("T3", 2000.0), ("T4", 4000.0), ("T5", 2000.0)]:
+        g.replace(name, tx_mean=tx)
+    return g
+
+
+def fig2d_independent(n: int = 5) -> DAG:
+    """n+1 fully independent task sets: DOA_dep = n."""
+    g = DAG()
+    for i in range(n + 1):
+        g.add(_ts(f"T{i}"))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# DeepDriveMD (Table 1, Fig. 3a)
+# ---------------------------------------------------------------------------
+
+#: Table 1 of the paper (TXs already scaled down by 4 as published).
+DDMD_TABLE1 = dict(
+    simulation=dict(cpus=4, gpus=1, n=96, tx=340.0),
+    aggregation=dict(cpus=32, gpus=0, n=16, tx=85.0),
+    training=dict(cpus=4, gpus=1, n=1, tx=63.0),
+    inference=dict(cpus=16, gpus=1, n=96, tx=38.0),
+)
+
+DDMD_STAGE_ORDER = ("simulation", "aggregation", "training", "inference")
+
+
+def ddmd_task_sets(iteration: int, table: dict = DDMD_TABLE1,
+                   payloads: dict[str, Callable[[int], object]] | None = None,
+                   ) -> dict[str, TaskSet]:
+    payloads = payloads or {}
+    out = {}
+    for kind in DDMD_STAGE_ORDER:
+        p = table[kind]
+        out[kind] = TaskSet(
+            name=f"{kind[:5]}{iteration}", num_tasks=p["n"],
+            cpus_per_task=p["cpus"], gpus_per_task=p["gpus"],
+            tx_mean=p["tx"], kind=kind, payload=payloads.get(kind))
+    return out
+
+
+def deepdrivemd_dag(n_iterations: int = 3, table: dict = DDMD_TABLE1,
+                    payloads: dict[str, Callable[[int], object]] | None = None,
+                    ) -> DAG:
+    """Fig. 3a: staggered iterations.
+
+    Iteration i's Simulation forks the chain Aggregation_i -> Training_i ->
+    Inference_i *and* paces Simulation_{i+1}; with three iterations the DG
+    has three independent chains beginning at rank 1 -> DOA_dep = 2.
+    """
+    g = DAG()
+    sets = [ddmd_task_sets(i, table, payloads) for i in range(n_iterations)]
+    for s in sets:
+        for ts in s.values():
+            g.add(ts)
+    for i, s in enumerate(sets):
+        g.add_edge(s["simulation"].name, s["aggregation"].name)
+        g.add_edge(s["aggregation"].name, s["training"].name)
+        g.add_edge(s["training"].name, s["inference"].name)
+        if i + 1 < n_iterations:
+            g.add_edge(s["simulation"].name, sets[i + 1]["simulation"].name)
+    return g
+
+
+def ddmd_sequential_stage_groups(n_iterations: int = 3) -> list[list[str]]:
+    """Sequential mode runs iterations back to back, one stage per task set."""
+    groups = []
+    for i in range(n_iterations):
+        for kind in DDMD_STAGE_ORDER:
+            groups.append([f"{kind[:5]}{i}"])
+    return groups
+
+
+def ddmd_stage_tx(table: dict = DDMD_TABLE1) -> list[float]:
+    return [table[k]["tx"] for k in DDMD_STAGE_ORDER]
+
+
+# ---------------------------------------------------------------------------
+# Abstract DG of Fig. 3b + concrete c-DG1 / c-DG2 (Table 2)
+# ---------------------------------------------------------------------------
+
+#: Table 2.  "Mean TTX Fraction" x 2000 s gives each group's task TX.
+CDG_TABLE2 = {
+    "c-DG1": dict(
+        T0=dict(cpus=16, gpus=1, n=96, frac=0.38),
+        T12=dict(cpus=40, gpus=0, n=32, frac=0.11),
+        T36=dict(cpus=4, gpus=0, n=16, frac=0.06),
+        T45=dict(cpus=32, gpus=1, n=16, frac=0.08),
+        T7=dict(cpus=4, gpus=1, n=96, frac=0.36),
+    ),
+    "c-DG2": dict(
+        T0=dict(cpus=16, gpus=1, n=96, frac=0.19),
+        T12=dict(cpus=40, gpus=0, n=32, frac=0.08),
+        T36=dict(cpus=4, gpus=1, n=96, frac=0.38),
+        T45=dict(cpus=32, gpus=1, n=16, frac=0.12),
+        T7=dict(cpus=4, gpus=0, n=16, frac=0.23),
+    ),
+}
+
+#: Fig. 3b edge set (see DESIGN.md): T0 forks to T1/T2; T1 -> {T3, T5};
+#: T2 -> {T4, T6}; T4 and T5 converge on T7.  Ranks: T0 | T1 T2 |
+#: T3 T4 T5 T6 | T7 (breadth-first indices as in the paper).
+CDG_EDGES = [("T0", "T1"), ("T0", "T2"), ("T1", "T3"), ("T1", "T5"),
+             ("T2", "T4"), ("T2", "T6"), ("T4", "T7"), ("T5", "T7")]
+
+CDG_GROUP_OF = {"T0": "T0", "T1": "T12", "T2": "T12", "T3": "T36",
+                "T6": "T36", "T4": "T45", "T5": "T45", "T7": "T7"}
+
+#: the paper's sequential mode runs one stage per task-type group.
+CDG_SEQUENTIAL_GROUPS = [["T0"], ["T1", "T2"], ["T3", "T6"], ["T4", "T5"],
+                         ["T7"]]
+
+
+def cdg_dag(which: str = "c-DG2", total_ttx: float = 2000.0,
+            payloads: dict[str, Callable[[int], object]] | None = None) -> DAG:
+    """Table 2's ``# Tasks`` column counts tasks per *group* ("their
+    respective task sets are grouped within braces"), so a two-set group
+    splits its count across both sets — e.g. c-DG2's {T3, T6} has 96 tasks
+    total = 48 per set, which is exactly what makes the five-stage
+    sequential execution fit the 96-GPU allocation in single waves."""
+    table = CDG_TABLE2[which]
+    payloads = payloads or {}
+    group_sizes: dict[str, int] = {}
+    for name, group in CDG_GROUP_OF.items():
+        group_sizes[group] = group_sizes.get(group, 0) + 1
+    g = DAG()
+    for name, group in CDG_GROUP_OF.items():
+        p = table[group]
+        g.add(TaskSet(name=name, num_tasks=max(1, p["n"] // group_sizes[group]),
+                      cpus_per_task=p["cpus"], gpus_per_task=p["gpus"],
+                      tx_mean=p["frac"] * total_ttx,
+                      kind=group, payload=payloads.get(name)))
+    for u, v in CDG_EDGES:
+        g.add_edge(u, v)
+    return g
+
+
+def cdg_sequential_stage_tx(which: str, total_ttx: float = 2000.0) -> list[float]:
+    table = CDG_TABLE2[which]
+    return [table[g]["frac"] * total_ttx
+            for g in ("T0", "T12", "T36", "T45", "T7")]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokenDataset, make_global_batch
+
+__all__ = ["SyntheticTokenDataset", "make_global_batch"]

@@ -1,0 +1,100 @@
+"""Deterministic sharded synthetic token pipeline.
+
+Design goals of a production input pipeline, kept:
+
+- **determinism across restarts**: batch ``i`` is a pure function of
+  (seed, i) — resuming from a checkpoint at step i reproduces the exact
+  token stream without replaying the pipeline;
+- **per-DP-rank sharding**: each data-parallel rank materialises only its
+  slice; ``make_global_batch`` assembles a globally-sharded array with
+  ``jax.make_array_from_callback`` so no host ever holds the full batch;
+- **double buffering**: an async prefetch thread keeps one batch ahead.
+
+Tokens follow a Zipfian marginal (vocab realism for embedding-gather perf)
+and labels are the next-token shift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class SyntheticTokenDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def batch_slice(self, step: int, lo: int, hi: int) -> dict:
+        """Rows [lo, hi) of global batch ``step``.
+
+        Seeded PER ROW, so any sharding of the batch — including a
+        different mesh after an elastic restart — sees identical data."""
+        rows = []
+        for r in range(lo, hi):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, r]))
+            rows.append(rng.zipf(self.zipf_a, size=self.seq_len + 1))
+        toks = (np.stack(rows) - 1) % self.vocab_size
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def host_batch(self, step: int) -> dict:
+        return self.batch_slice(step, 0, self.global_batch)
+
+
+def make_global_batch(ds: SyntheticTokenDataset, step: int, mesh,
+                      batch_axes=("pod", "data")) -> dict:
+    """Assemble a globally-sharded device array; each addressable shard is
+    filled from the deterministic per-rank slice only."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else
+                                     (axes[0] if axes else None)))
+    shape = (ds.global_batch, ds.seq_len)
+
+    def cb(key):
+        def make(index):
+            lo = index[0].start or 0
+            hi = index[0].stop if index[0].stop is not None \
+                else ds.global_batch
+            return ds.batch_slice(step, lo, hi)[key]
+
+        return jax.make_array_from_callback(shape, sharding, make)
+
+    return {"tokens": cb("tokens"), "labels": cb("labels")}
+
+
+class Prefetcher:
+    """One-batch-ahead async prefetch (double buffering)."""
+
+    def __init__(self, fn, start_step: int = 0, depth: int = 1):
+        self._fn = fn
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        s = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((s, self._fn(s)), timeout=0.5)
+                s += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        self._t.join(timeout=2)

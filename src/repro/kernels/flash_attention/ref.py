@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding-window +
+chunked-local masks).  O(S^2) memory — correctness reference only."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool = True,
+                   window: int | None = None, chunk: int | None = None,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """[q_len, kv_len] boolean mask; True = attend.
+
+    ``q_offset`` is the absolute position of q[0] (decode/prefill-continue).
+    ``window``: attend only to the last `window` positions (inclusive of
+    self).  ``chunk``: block-diagonal local attention (llama4-style): query
+    attends only within its own chunk of size `chunk` (still causal).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if chunk is not None:
+        mask &= (k_pos // chunk) == (q_pos // chunk)
+    return mask
+
+
+def mha_reference(q, k, v, *, causal=True, window=None, chunk=None,
+                  q_offset=0, scale=None, kv_valid_len=None):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, KVH, D] with H % KVH == 0.
+
+    Returns [B, Sq, H, D] in q's dtype; softmax in fp32.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    mask = attention_mask(sq, skv, causal=causal, window=window, chunk=chunk,
+                          q_offset=q_offset)
+    if kv_valid_len is not None:
+        mask = mask & (jnp.arange(skv)[None, :] < kv_valid_len)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) time-mix recurrence.
+
+Exact per-token recurrence in fp32 (arXiv:2404.05892, Eq. 19-22):
+
+    o_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+with a *data-dependent* per-channel decay ``w_t in (0, 1)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(r, k, v, w, u, initial_state=None):
+    """r/k/v/w: [B, T, H, K]; u: [H, K].
+
+    Returns (o [B, T, H, K], final_state [B, H, K, K]).
+    """
+    b, t, h, kk = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    s0 = (jnp.zeros((b, h, kk, kk), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                       # each [B, H, K]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B, H, K, K]
+        bonus = uf[None, :, :, None] * kv
+        o = jnp.einsum("bhi,bhij->bhj", rt, state + bonus)
+        state = wt[..., :, None] * state + kv
+        return state, o
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    final, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), final

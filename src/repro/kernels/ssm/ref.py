@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) recurrence.
+
+Exact per-token recurrence in fp32 (arXiv:2405.21060, Eq. 16):
+
+    h_t = a_t * h_{t-1} + B_t (dt_t x_t)^T        a_t = exp(A * dt_t), A < 0
+    y_t = C_t^T h_t + D * x_t
+
+per head: h [N, P], B/C [N], x [P], a scalar.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, a_log, b, c, d, initial_state=None):
+    """x: [B, T, H, P]; dt: [B, T, H]; a_log: [H] (A = -exp(a_log));
+    b/c: [B, T, N] (single group, shared across heads); d: [H].
+
+    Returns (y [B, T, H, P], final_state [B, H, N, P]).
+    """
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    af = -jnp.exp(a_log.astype(jnp.float32))          # [H], negative
+    df = d.astype(jnp.float32)
+
+    s0 = (jnp.zeros((bs, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, xs):
+        xt, dtt, bt, ct = xs                      # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(af[None, :] * dtt)        # [B, H]
+        xbar = dtt[..., None] * xt                # [B, H, P]
+        upd = bt[:, None, :, None] * xbar[:, :, None, :]   # [B, H, N, P]
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state) + df[None, :, None] * xt
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    final, y = jax.lax.scan(step, s0, xs)
+    return y.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,221 @@
+"""Analytic per-step FLOP and HBM-byte accounting per (arch x shape).
+
+WHY THIS EXISTS: XLA's ``cost_analysis()`` counts a ``while`` body once,
+so any layer-scanned model under-reports FLOPs by ~L x; and XLA:CPU's
+'bytes accessed' counts every fusion operand read, over-reporting TPU HBM
+traffic.  The roofline's compute and memory terms therefore come from
+this structural model (matmul dims are fully determined by the config);
+the collective term still comes from the compiled HLO (loop-weighted).
+
+Conventions:
+- FLOPs are 2 x MACs; attention kv-extent uses the true masked average.
+- train = 3 x forward matmul FLOPs (bwd = 2x; dot results are saved by
+  the remat policy, so recompute adds only elementwise work).
+- decode counts the full cache extent (the dense decode path scores every
+  slot and masks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import SHAPES, ShapeSpec
+from repro.models.config import ModelConfig
+
+CAPACITY_FACTOR = 1.25
+
+
+def _avg_kv(cfg: ModelConfig, s: int, layer_frac_global: float = 0.0) -> float:
+    """Average attended kv extent per query token under the arch's mask."""
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        # causal within a window: ramp up to w then flat
+        if s <= w:
+            return (s + 1) / 2
+        return (w * (w + 1) / 2 + (s - w) * w) / s
+    if cfg.chunk_size and cfg.global_every:
+        local = (cfg.chunk_size + 1) / 2 if s >= cfg.chunk_size else (s + 1) / 2
+        glob = (s + 1) / 2
+        f = 1.0 / cfg.global_every
+        return (1 - f) * local + f * glob
+    return (s + 1) / 2
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, b: int, s: int) -> float:
+    """QKV/out projections + score/value contractions for one layer."""
+    t = b * s
+    proj = 2 * t * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) \
+        + 2 * t * cfg.q_dim * cfg.d_model
+    sc = 4 * t * _avg_kv(cfg, s) * cfg.q_dim
+    return proj + sc
+
+
+def _mlp_flops_per_layer(cfg: ModelConfig, tokens: float) -> float:
+    if cfg.family == "moe":
+        f = 6 * tokens * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff \
+            * CAPACITY_FACTOR
+        f += 2 * tokens * cfg.d_model * cfg.num_experts          # router
+        if cfg.shared_expert:
+            f += 6 * tokens * cfg.d_model * cfg.d_ff
+        return f
+    return 6 * tokens * cfg.d_model * cfg.d_ff
+
+
+def _rwkv_flops_per_layer(cfg: ModelConfig, tokens: float,
+                          chunk: int = 128) -> float:
+    d = cfg.d_model
+    k = 64
+    # 5 square projections (r,k,v,g,o) + ddlerp/decay loras + channel mix
+    proj = 2 * tokens * d * d * 5 + 2 * tokens * d * (5 * 32 + 64) * 2
+    cm = 2 * tokens * d * cfg.d_ff * 2 + 2 * tokens * d * d
+    # chunked scan per token per head: scores row (C*K) + o_intra (C*K)
+    # + inter/state (4*K*K)
+    h = d // k
+    scan = tokens * h * (2 * chunk * k + 2 * chunk * k + 4 * k * k)
+    return proj + cm + scan
+
+
+def _ssd_flops_per_layer(cfg: ModelConfig, tokens: float,
+                         chunk: int = 128) -> float:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n, p = cfg.ssm_state, 64
+    h = d_in // p
+    proj = 2 * tokens * d * (2 * d_in + 2 * n + h) + 2 * tokens * d_in * d
+    conv = 2 * tokens * (d_in + 2 * n) * cfg.ssm_conv
+    scan = tokens * h * (2 * chunk * n + 2 * chunk * p + 4 * n * p)
+    return proj + conv + scan
+
+
+def forward_flops(cfg: ModelConfig, b: int, s: int) -> float:
+    """One forward pass, full logits."""
+    t = b * s
+    unembed = 2 * t * cfg.d_model * cfg.vocab_size
+    if cfg.family == "encdec":
+        enc_t = b * cfg.encoder_seq
+        enc = cfg.encoder_layers * (
+            2 * enc_t * cfg.d_model * 4 * cfg.d_model
+            + 4 * enc_t * cfg.encoder_seq * cfg.q_dim
+            + 4 * enc_t * cfg.d_model * (cfg.encoder_d_ff or cfg.d_ff))
+        dec = cfg.num_layers * (
+            _attn_flops_per_layer(cfg, b, s)                      # self
+            + 2 * t * cfg.d_model * 2 * cfg.d_model               # cross qo
+            + 2 * enc_t * cfg.d_model * 2 * cfg.d_model           # cross kv
+            + 4 * t * cfg.encoder_seq * cfg.q_dim                  # cross sc
+            + 4 * t * cfg.d_model * cfg.d_ff)
+        return enc + dec + unembed
+    if cfg.rwkv:
+        return cfg.num_layers * _rwkv_flops_per_layer(cfg, t) + unembed
+    if cfg.family in ("ssm", "hybrid"):
+        body = cfg.num_layers * _ssd_flops_per_layer(cfg, t)
+        if cfg.shared_attn_every:
+            n_inv = cfg.num_layers // cfg.shared_attn_every
+            dd = 2 * cfg.d_model
+            per = (2 * t * dd * (cfg.q_dim + cfg.kv_dim)           # q,k w/ 2D in
+                   + 2 * t * dd * cfg.kv_dim + 2 * t * cfg.q_dim * cfg.d_model
+                   + 4 * t * (s + 1) / 2 * cfg.q_dim
+                   + 6 * t * cfg.d_model * cfg.d_ff)
+            body += n_inv * per
+        return body + unembed
+    per_layer = _attn_flops_per_layer(cfg, b, s) + \
+        _mlp_flops_per_layer(cfg, t)
+    return cfg.num_layers * per_layer + unembed
+
+
+def decode_flops(cfg: ModelConfig, b: int, s_cache: int) -> float:
+    """One decode step for a batch of b, cache extent s_cache."""
+    t = b
+    unembed = 2 * t * cfg.d_model * cfg.vocab_size
+    if cfg.rwkv:
+        d, k = cfg.d_model, 64
+        h = d // k
+        per = 2 * d * d * 5 + 4 * h * k * k * 2 + 2 * d * cfg.d_ff * 2 \
+            + 2 * d * d
+        return cfg.num_layers * t * per + unembed
+    if cfg.family in ("ssm", "hybrid"):
+        d = cfg.d_model
+        d_in = cfg.ssm_expand * d
+        n, p = cfg.ssm_state, 64
+        h = d_in // p
+        per = 2 * d * (2 * d_in + 2 * n + h) + 2 * d_in * d + 4 * h * n * p
+        body = cfg.num_layers * t * per
+        if cfg.shared_attn_every:
+            n_inv = cfg.num_layers // cfg.shared_attn_every
+            w = min(s_cache, 4096)
+            body += n_inv * t * (2 * 2 * d * (cfg.q_dim + 2 * cfg.kv_dim)
+                                 + 4 * w * cfg.q_dim
+                                 + 6 * d * cfg.d_ff)
+        return body + unembed
+    kv = min(s_cache, cfg.sliding_window or s_cache)
+    per = 2 * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) \
+        + 2 * cfg.q_dim * cfg.d_model + 4 * kv * cfg.q_dim
+    if cfg.family == "moe":
+        mlp = 6 * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff
+        if cfg.shared_expert:
+            mlp += 6 * cfg.d_model * cfg.d_ff
+        mlp += 2 * cfg.d_model * cfg.num_experts
+    else:
+        mlp = 6 * cfg.d_model * cfg.d_ff
+    out = cfg.num_layers * t * (per + mlp) + unembed
+    if cfg.family == "encdec":
+        out += cfg.num_layers * t * (2 * cfg.d_model * 2 * cfg.d_model
+                                     + 4 * cfg.encoder_seq * cfg.q_dim)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticCell:
+    flops_global: float          # whole step, all devices
+    hbm_bytes_global: float      # structural HBM traffic floor
+    model_flops: float           # 6*N_active*D (train) / 2*N*D (serve)
+
+    def per_device(self, n: int):
+        return (self.flops_global / n, self.hbm_bytes_global / n,
+                self.model_flops / n)
+
+
+def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, n_params: int,
+                 n_active: int, batch_axes_size: int) -> AnalyticCell:
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * s
+    if shape.mode == "train":
+        fwd = forward_flops(cfg, b, s)
+        flops = 3.0 * fwd
+        model = 6.0 * n_active * tokens
+        # params+opt fp32 read/write + bf16 grads + saved activations x2
+        act = 6 * tokens * cfg.d_model * cfg.num_layers * 2 * 2
+        hbm = n_params * 28.0 + act
+    elif shape.mode == "prefill":
+        # prefill unembeds only the final position (runtime slices first)
+        flops = forward_flops(cfg, b, s) \
+            - 2 * (tokens - b) * cfg.d_model * cfg.vocab_size
+        model = 2.0 * n_active * tokens
+        act = 4 * tokens * cfg.d_model * cfg.num_layers * 2
+        hbm = n_params * 4.0 + act
+    else:
+        flops = decode_flops(cfg, b, s)
+        model = 2.0 * n_active * b
+        cache = cache_bytes(cfg, b, s)
+        hbm = n_params * 4.0 + cache
+    return AnalyticCell(flops, hbm, model)
+
+
+def cache_bytes(cfg: ModelConfig, b: int, s: int) -> float:
+    if cfg.rwkv:
+        h = cfg.d_model // 64
+        return cfg.num_layers * b * (h * 64 * 64 * 4 + 2 * cfg.d_model * 2)
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * cfg.d_model
+        h = d_in // 64
+        out = cfg.num_layers * b * (h * cfg.ssm_state * 64 * 4
+                                    + (cfg.ssm_conv - 1)
+                                    * (d_in + 2 * cfg.ssm_state) * 2)
+        if cfg.shared_attn_every:
+            n_inv = cfg.num_layers // cfg.shared_attn_every
+            out += n_inv * b * min(s, 4096) * cfg.kv_dim * 2 * 2
+        return out
+    kv_len = min(s, cfg.sliding_window or s)
+    out = cfg.num_layers * b * kv_len * cfg.kv_dim * 2 * 2
+    if cfg.family == "encdec":
+        out += cfg.num_layers * b * cfg.encoder_seq * cfg.q_dim * 2 * 2
+    return out

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+  lower the step (train_step for train_4k; prefill for prefill_32k;
+  serve/decode step for decode_32k / long_500k) with ShapeDtypeStruct
+  stand-ins (no allocation), ``.compile()`` it for the production mesh,
+  and record memory_analysis / cost_analysis / collective traffic into
+  ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` — the roofline
+  benchmark (benchmarks/roofline.py) reads these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --skip-existing
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_status, get_config
+from repro.launch.hlo_analysis import (collective_stats, count_op,
+                                       roofline_terms,
+                                       weighted_collective_stats)
+from repro.launch.mesh import TPU_V5E, make_production_mesh
+from repro.models.api import build_model
+from repro.models.params import count_params, abstract_params
+from repro.runtime import ShardingRules
+from repro.runtime.steps import (TrainOptions, abstract_train_state,
+                                 batch_shardings, build_decode_step,
+                                 build_prefill_step, build_train_step,
+                                 state_shardings)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _with_shardings(specs: dict, shardings: dict) -> dict:
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                    sharding=shardings[k])
+            for k, v in specs.items()}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules: ShardingRules,
+               opts: TrainOptions | None = None,
+               flags: dict | None = None):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    sp = SHAPES[shape_name]
+    opts = opts or TrainOptions()
+
+    if sp.mode == "train":
+        step, _ = build_train_step(model, mesh, rules, opts, flags)
+        state = abstract_train_state(model)
+        # place shardings on the state stand-ins so .lower() is fully
+        # specified even though in_shardings also carry them
+        bsh = batch_shardings(
+            model, model.input_specs(batch=sp.global_batch, seq=sp.seq_len,
+                                     mode="train"), mesh, rules)
+        batch = _with_shardings(
+            model.input_specs(batch=sp.global_batch, seq=sp.seq_len,
+                              mode="train"), bsh)
+        lowered = step.lower(state, batch)
+    elif sp.mode == "prefill":
+        step, _ = build_prefill_step(model, mesh, rules, flags)
+        params = abstract_params(model.specs())
+        bsh = batch_shardings(
+            model, model.input_specs(batch=sp.global_batch, seq=sp.seq_len,
+                                     mode="prefill"), mesh, rules)
+        batch = _with_shardings(
+            model.input_specs(batch=sp.global_batch, seq=sp.seq_len,
+                              mode="prefill"), bsh)
+        lowered = step.lower(params, batch)
+    else:  # decode
+        step, (ps, cs) = build_decode_step(
+            model, mesh, rules, batch=sp.global_batch, s_max=sp.seq_len,
+            flags=flags)
+        params = abstract_params(model.specs())
+        cache = abstract_params(model.cache_specs(sp.global_batch,
+                                                  sp.seq_len))
+        dec = model.input_specs(batch=sp.global_batch, seq=sp.seq_len,
+                                mode="decode")
+        lowered = step.lower(params, cache, dec["tokens"], dec["pos"])
+
+    meta = dict(arch=arch, shape=shape_name, mode=sp.mode,
+                seq_len=sp.seq_len, global_batch=sp.global_batch,
+                params=count_params(model.specs()),
+                active_params=cfg.active_param_count_estimate())
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules: ShardingRules | None = None, out_dir: str = OUT_DIR,
+             verbose: bool = True, tag: str = "", flags: dict | None = None,
+             mesh_shape: tuple[int, int] | None = None):
+    """``mesh_shape`` overrides the single-pod (data, model) aspect ratio —
+    a §Perf hillclimb knob (the chip count stays 256)."""
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    cell_dir = os.path.join(out_dir, mesh_name)
+    os.makedirs(cell_dir, exist_ok=True)
+    path = os.path.join(cell_dir, f"{arch}__{shape_name}{tag}.json")
+
+    cfg = get_config(arch)
+    status = cell_status(cfg, shape_name)
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_name, status=status)
+    if status != "run":
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name}: "
+                  f"{status}")
+        return rec
+
+    if mesh_shape is not None:
+        assert not multi_pod
+        import jax as _jax
+        import math as _math
+        n = int(_math.prod(mesh_shape))
+        mesh = _jax.make_mesh(mesh_shape, ("data", "model"),
+                              devices=_jax.devices()[:n])
+        rec["mesh_override"] = list(mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or ShardingRules()
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, rules,
+                                   flags=flags)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = dict(
+                bytes_per_device=getattr(mem, "temp_size_in_bytes", None),
+                argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                output_bytes=getattr(mem, "output_size_in_bytes", None),
+                peak_bytes=getattr(
+                    mem, "peak_memory_in_bytes",
+                    getattr(mem, "temp_size_in_bytes", None)))
+        except Exception as e:  # CPU backend may not implement it
+            mem_info = {"unavailable": str(e)}
+
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        # loop-weighted: a while body's collectives count x trip_count
+        coll_w = weighted_collective_stats(hlo)
+        terms = roofline_terms(cost, coll_w, TPU_V5E)
+
+        n_dev = mesh.size
+        rec.update(
+            meta,
+            mesh_shape={k: int(v) for k, v in mesh.shape.items()},
+            devices=n_dev,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            cost=dict(flops=cost.get("flops"),
+                      bytes_accessed=cost.get("bytes accessed"),
+                      transcendentals=cost.get("transcendentals")),
+            memory=mem_info,
+            collectives=coll.as_dict(),
+            collectives_weighted=coll_w.as_dict(),
+            roofline=terms.as_dict(),
+            hlo_ops=dict(
+                fusion=count_op(hlo, "fusion"),
+                while_=count_op(hlo, "while"),
+                dot=count_op(hlo, "dot"),
+            ),
+        )
+        if verbose:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name}: OK  "
+                  f"flops/dev={terms.flops:.3g} coll={coll.total_bytes:.3g}B "
+                  f"dominant={terms.dominant} "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name}: "
+                  f"FAIL {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                mesh_name = ("multi_pod_2x16x16" if multi
+                             else "single_pod_16x16")
+                path = os.path.join(args.out, mesh_name, f"{a}__{s}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("run", "skipped_full_attention"
+                                              ) and "error" not in prev:
+                        print(f"[dryrun] skip existing {a} {s} {mesh_name}")
+                        continue
+                results.append(run_cell(a, s, multi_pod=multi,
+                                        out_dir=args.out))
+    bad = [r for r in results if r.get("status") == "error"]
+    print(f"\n[dryrun] {len(results)} cells run, {len(bad)} failures")
+    if bad:
+        for r in bad:
+            print("  FAIL:", r["arch"], r["shape"], r["mesh"],
+                  r.get("error"))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+bytes; we parse the partitioned HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Shapes in the post-partitioning module are PER-DEVICE, so all derived
+terms are per-device seconds; the roofline denominator is then a single
+chip's peak (no further division by chip count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+#: op keyword with its opening paren (op NAMES like %all-reduce.696 or
+#: operand references never match because they lack the trailing "(").
+_KIND_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def as_dict(self):
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op ('-start' variants
+    counted once, '-done' skipped).
+
+    Parsed procedurally per line: the output type is everything between
+    the '=' and the op keyword — large tuple types embed ``/*index=N*/``
+    comments (which contain '='), so a pure-regex prefix match silently
+    drops exactly the big fused gradient all-reduces."""
+    bytes_by: dict[str, int] = {}
+    count_by: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        rest = line[eq + 1:]
+        m = _KIND_RE.search(rest)
+        if not m or m.group(2) == "-done":
+            continue
+        b = _shape_bytes(rest[:m.start()])
+        kind = m.group(1)
+        bytes_by[kind] = bytes_by.get(kind, 0) + b
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"= *\S* {opname}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware (weighted) accounting.
+#
+# XLA's cost analysis and a flat text scan both count a while-loop body
+# ONCE; a layer scan with trip count L therefore under-counts collectives
+# by ~L x.  We rebuild the computation call graph, propagate multiplicity
+# through `body=`/`to_apply=`/`calls=`/`condition=` edges (while bodies
+# weighted by their `known_trip_count` backend config), and weight each
+# computation's collective bytes by its total multiplicity.
+# ---------------------------------------------------------------------------
+
+_COMP_HEAD_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_REF_RE = re.compile(
+    r"(body|condition|to_apply|calls)=\{?%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+def _split_computations(hlo_text: str):
+    """-> (entry_name, {name: [lines]})."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                if line.strip().endswith("}"):  # one-liner
+                    cur = None
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return entry, comps
+
+
+def _comp_edges(lines: list[str]):
+    """[(callee, weight)] for one computation's body."""
+    edges: list[tuple[str, int]] = []
+    for line in lines:
+        is_while = re.search(r"\bwhile\(", line) is not None
+        trip = 1
+        if is_while:
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+        for kind, name in _REF_RE.findall(line):
+            w = trip if (is_while and kind == "body") else 1
+            edges.append((name, w))
+        bm = _BRANCH_RE.search(line)
+        if bm:
+            for name in bm.group(1).split(","):
+                edges.append((name.strip().lstrip("%"), 1))
+    return edges
+
+
+def computation_multiplicities(hlo_text: str) -> dict[str, int]:
+    """Total execution count of each computation (entry = 1; while bodies
+    x trip count; summed over call sites).  The graph is a DAG."""
+    entry, comps = _split_computations(hlo_text)
+    edges = {name: [(c, w) for c, w in _comp_edges(lines) if c in comps]
+             for name, lines in comps.items()}
+    if entry is None:
+        return {name: 1 for name in comps}
+    # Kahn topological order over the call DAG
+    indeg = {name: 0 for name in comps}
+    for es in edges.values():
+        for c, _ in es:
+            indeg[c] += 1
+    queue = [n for n, d in indeg.items() if d == 0]
+    order = []
+    while queue:
+        n = queue.pop()
+        order.append(n)
+        for c, _ in edges[n]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                queue.append(c)
+    mult = {name: 0 for name in comps}
+    mult[entry] = 1
+    for name in order:
+        for callee, w in edges[name]:
+            mult[callee] += mult[name] * max(w, 1)
+    return mult
+
+
+def weighted_collective_stats(hlo_text: str) -> CollectiveStats:
+    entry, comps = _split_computations(hlo_text)
+    mult = computation_multiplicities(hlo_text)
+    bytes_by: dict[str, int] = {}
+    count_by: dict[str, int] = {}
+    for name, lines in comps.items():
+        m = max(mult.get(name, 1), 1)
+        sub = collective_stats("\n".join(lines))
+        for k, v in sub.bytes_by_kind.items():
+            bytes_by[k] = bytes_by.get(k, 0) + v * m
+        for k, v in sub.count_by_kind.items():
+            count_by[k] = count_by.get(k, 0) + v * m
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All terms in seconds (per device, one step)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three (perfect overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the step the MXU is the binding constraint —
+        (compute term / max term); 1.0 == compute-bound at roofline."""
+        return self.compute_s / max(self.step_time_s, 1e-30)
+
+    def as_dict(self):
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_time_s": self.step_time_s,
+                "compute_fraction": self.compute_fraction}
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, hw: dict,
+                   ) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    # XLA:CPU reports utilization-style bytes under 'bytes accessed{...}'
+    hbm = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.total_bytes)
+    return RooflineTerms(
+        compute_s=flops / hw["peak_bf16_flops"],
+        memory_s=hbm / hw["hbm_bytes_per_s"],
+        collective_s=cb / hw["ici_bytes_per_s"],
+        flops=flops, hbm_bytes=hbm, collective_bytes=cb)

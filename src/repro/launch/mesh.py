@@ -1,0 +1,51 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run (and only the dry-run) forces 512 host platform
+devices before any jax import.
+
+Mesh layout decisions (see DESIGN.md §4):
+- single pod: (16, 16) ('data', 'model') — FSDP/DP over rows, TP/EP/SP
+  over columns (a v5e pod's 16x16 torus maps model-parallel traffic onto
+  single-hop ICI rings).
+- multi-pod: (2, 16, 16) ('pod', 'data', 'model') — the pod axis composes
+  with 'data' for batch sharding; the only steady-state cross-pod
+  collective is the gradient all-reduce over 'pod' (optionally top-k
+  compressed), which rides the slower inter-pod links.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+TPU_V5E = dict(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,      # per chip
+    hbm_bytes_per_s=819e9,       # per chip
+    ici_bytes_per_s=5.0e10,      # ~50 GB/s per link
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            "(dryrun.py must set XLA_FLAGS before importing jax)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host has, as ('data','model') — for examples/tests."""
+    devs = jax.devices()
+    rows = max(1, len(devs) // model_axis)
+    mesh_devs = np.asarray(devs[: rows * model_axis]).reshape(
+        rows, model_axis)
+    from jax.sharding import Mesh
+    return Mesh(mesh_devs, ("data", "model"))

@@ -1,0 +1,152 @@
+"""Shared model building blocks: norms, RoPE (incl. partial + M-RoPE),
+embeddings, and SwiGLU MLPs.  Pure functions over parameter pytrees."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import gathered, shard_act
+from .config import ModelConfig
+from .params import spec
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) +
+            bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float):
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, *, theta: float, rope_pct: float = 1.0,
+               mrope_sections: tuple[int, ...] = ()):
+    """x: [B, S, H, D].  positions: [B, S] or, for M-RoPE, [3, B, S]
+    (temporal / height / width position ids, qwen2-vl §2.1).
+    """
+    d = x.shape[-1]
+    inv, rot_dim = rope_freqs(d, rope_pct, theta)
+    half = rot_dim // 2
+    if mrope_sections:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        # each frequency band uses the position channel of its section
+        section_of = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.asarray(mrope_sections),
+            total_repeat_length=half)                     # [half]
+        pos = positions.astype(jnp.float32)               # [3, B, S]
+        all_angles = pos[..., None] * inv[None, None, None, :]  # [3,B,S,half]
+        pick = jax.nn.one_hot(section_of, len(mrope_sections),
+                              dtype=jnp.float32)          # [half, 3]
+        angles = jnp.einsum("cbsh,hc->bsh", all_angles, pick)
+    else:
+        pos = positions.astype(jnp.float32)               # [B, S]
+        angles = pos[..., None] * inv[None, None, :]      # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]                  # [B, S, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([xr.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    return sinusoidal_at(jnp.arange(seq, dtype=jnp.int32), d)
+
+
+def sinusoidal_at(positions, d: int):
+    """Sinusoidal embeddings at arbitrary positions (any leading shape)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, layers: int, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    L = (layers,)
+    return {
+        "gate": spec(L + (d, f), ("layers", "embed", "ffn")),
+        "up": spec(L + (d, f), ("layers", "embed", "ffn")),
+        "down": spec(L + (f, d), ("layers", "ffn", "embed")),
+    }
+
+
+def swiglu(p, x):
+    """p holds per-layer slices (no leading L dim at call time)."""
+    g = gathered(p["gate"], "embed", "ffn", dtype=x.dtype)
+    u = gathered(p["up"], "embed", "ffn", dtype=x.dtype)
+    d = gathered(p["down"], "ffn", "embed", dtype=x.dtype)
+    h = jax.nn.silu(x @ g) * (x @ u)
+    h = shard_act(h, "batch", None, "act_ffn")
+    return h @ d
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(x @ p["fc1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["fc2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig):
+    out = {"embedding": spec((cfg.vocab_size, cfg.d_model),
+                             ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = spec((cfg.d_model, cfg.vocab_size),
+                              ("embed", "vocab"))
+    return out
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    x = params["embedding"].astype(COMPUTE_DTYPE)[tokens]
+    return shard_act(x * cfg.embed_scale, "batch", "seq", "act_embed")
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = (x @ w) * cfg.logit_scale
+    return shard_act(logits, "batch", "seq", "act_vocab")
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token NLL in fp32; labels == ignore_id are masked."""
+    lf = logits.astype(jnp.float32)
+    m = lf.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)

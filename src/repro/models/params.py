@@ -1,0 +1,91 @@
+"""Parameter specification trees.
+
+A model is described by a pytree of :class:`ParamSpec` leaves (shape +
+logical axes + initializer).  From one spec tree we derive:
+
+- materialised parameters (`init_params`) for real runs,
+- `jax.ShapeDtypeStruct` stand-ins (`abstract_params`) for the dry-run,
+- `NamedSharding` trees (`param_shardings`) from the sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float | None = None    # stddev override
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def spec(shape: Sequence[int], axes: Sequence[str | None], init: str = "normal",
+         scale: float | None = None, dtype: Any = jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # stacked-layer params carry a leading "layers" dim; fan-in is dim -2
+    return shape[-2] if len(shape) >= 2 else shape[-1]
+
+
+def init_leaf(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    std = s.scale if s.scale is not None else 1.0 / math.sqrt(_fan_in(s.shape))
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+
+def init_params(specs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef,
+                              [init_leaf(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        specs, is_leaf=_is_spec)
+
+
+def param_shardings(specs, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.sharding_for(s.axes, s.shape, mesh),
+        specs, is_leaf=_is_spec)
+
+
+def param_specs_pspec(specs, mesh, rules: ShardingRules):
+    """PartitionSpec tree (for shard_map in_specs etc.)."""
+    return jax.tree.map(
+        lambda s: rules.spec_for(s.axes, s.shape, mesh),
+        specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def tree_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)

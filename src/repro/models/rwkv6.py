@@ -1,0 +1,213 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free token/channel mixing
+with data-dependent decay.  Uses the chunked linear-attention kernel for
+train/prefill and the O(1) state update for decode.
+
+Faithful structure: data-dependent token-shift interpolation (ddlerp) with
+a shared low-rank projection for the five mix targets (w/k/v/r/g), a
+low-rank data-dependent decay ``w_t = exp(-exp(w0 + tanh(x W_a) W_b))``,
+per-channel bonus ``u``, per-head GroupNorm, and squared-ReLU channel mix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ops as rwkv_ops
+from repro.runtime.sharding import shard_act
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, cross_entropy, embed, embed_specs, \
+    rms_norm, unembed
+from .params import spec
+
+HEAD_K = 64          # rwkv6 head size
+DDLERP_RANK = 32     # token-shift lora rank
+DECAY_RANK = 64      # decay lora rank
+MIX_TARGETS = 5      # w, k, v, r, g
+
+
+def rwkv6_specs(cfg: ModelConfig):
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    Ld = (L, d)
+    blocks = {
+        "ln1": spec(Ld, ("layers", "embed"), init="ones"),
+        "ln2": spec(Ld, ("layers", "embed"), init="ones"),
+        # time mix
+        "mu_x": spec(Ld, ("layers", "embed"), init="zeros"),
+        "mu_wkvrg": spec((L, MIX_TARGETS, d), ("layers", None, "embed"),
+                         init="zeros"),
+        "ts_a": spec((L, d, MIX_TARGETS * DDLERP_RANK),
+                     ("layers", "embed", None), scale=0.02),
+        "ts_b": spec((L, MIX_TARGETS, DDLERP_RANK, d),
+                     ("layers", None, None, "embed"), scale=0.02),
+        "w_r": spec((L, d, d), ("layers", "embed", "heads")),
+        "w_k": spec((L, d, d), ("layers", "embed", "heads")),
+        "w_v": spec((L, d, d), ("layers", "embed", "heads")),
+        "w_g": spec((L, d, d), ("layers", "embed", "heads")),
+        "w_o": spec((L, d, d), ("layers", "heads", "embed")),
+        "decay_base": spec(Ld, ("layers", "embed"), init="zeros"),
+        "decay_a": spec((L, d, DECAY_RANK), ("layers", "embed", None),
+                        scale=0.02),
+        "decay_b": spec((L, DECAY_RANK, d), ("layers", None, "embed"),
+                        scale=0.02),
+        "bonus_u": spec(Ld, ("layers", "embed"), init="zeros"),
+        "gn_w": spec(Ld, ("layers", "embed"), init="ones"),
+        "gn_b": spec(Ld, ("layers", "embed"), init="zeros"),
+        # channel mix
+        "cm_mu_k": spec(Ld, ("layers", "embed"), init="zeros"),
+        "cm_mu_r": spec(Ld, ("layers", "embed"), init="zeros"),
+        "cm_k": spec((L, d, f), ("layers", "embed", "ffn")),
+        "cm_v": spec((L, f, d), ("layers", "ffn", "embed")),
+        "cm_r": spec((L, d, d), ("layers", "embed", "heads")),
+    }
+    return {
+        **embed_specs(cfg),
+        "blocks": blocks,
+        "final_norm": spec((d,), ("embed",), init="ones"),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / supplied state for t = 0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return prev.at[:, :1].set(first.astype(x.dtype))
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the 5 mixed inputs [B,S,5,D]."""
+    mixed = x + (xx - x) * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(mixed @ p["ts_a"].astype(x.dtype))
+    b, s, _ = x.shape
+    lo = lo.reshape(b, s, MIX_TARGETS, DDLERP_RANK)
+    delta = jnp.einsum("bstr,trd->bstd", lo, p["ts_b"].astype(x.dtype))
+    mu = p["mu_wkvrg"].astype(x.dtype)[None, None] + delta
+    return x[:, :, None] + (xx - x)[:, :, None] * mu
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0, 1)."""
+    lo = jnp.tanh(xw @ p["decay_a"].astype(xw.dtype)) @ \
+        p["decay_b"].astype(xw.dtype)
+    logit = p["decay_base"].astype(jnp.float32) + lo.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(logit, -10.0, 4.0)))
+
+
+def _group_norm(x, w, b, h, eps=1e-5):
+    """Per-head LayerNorm over K channels.  x: [B, S, D]."""
+    bs, s, d = x.shape
+    xg = x.reshape(bs, s, h, d // h).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(bs, s, d)
+    return (xg * w + b).astype(x.dtype)
+
+
+def _time_mix(p, x, cfg: ModelConfig, *, shift_state=None, state=None):
+    b, s, d = x.shape
+    h = d // HEAD_K
+    xx = _shift(x, shift_state)
+    mixed = _ddlerp(p, x, xx)
+    xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(MIX_TARGETS))
+    r = xr @ p["w_r"].astype(x.dtype)
+    k = xk @ p["w_k"].astype(x.dtype)
+    v = xv @ p["w_v"].astype(x.dtype)
+    g = jax.nn.silu(xg @ p["w_g"].astype(x.dtype))
+    w = _decay(p, xw)
+    u = p["bonus_u"].astype(jnp.float32).reshape(h, HEAD_K)
+
+    def heads(t):
+        return t.reshape(b, s, h, HEAD_K)
+
+    if state is None:
+        o = rwkv_ops.rwkv6(heads(r), heads(k), heads(v), heads(w), u)
+        new_state = None
+    else:
+        o, new_state = rwkv_ops.rwkv6_decode_step(
+            state, heads(r)[:, 0], heads(k)[:, 0], heads(v)[:, 0],
+            heads(w)[:, 0], u)
+        o = o[:, None]
+    o = o.reshape(b, s, d)
+    o = _group_norm(o, p["gn_w"].astype(jnp.float32),
+                    p["gn_b"].astype(jnp.float32), h)
+    out = (o * g) @ p["w_o"].astype(x.dtype)
+    return out, x[:, -1], new_state
+
+
+def _channel_mix(p, x, *, shift_state=None):
+    xx = _shift(x, shift_state)
+    xk = x + (xx - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    k = shard_act(k, "batch", None, "act_ffn")
+    return jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * \
+        (k @ p["cm_v"].astype(x.dtype)), x[:, -1]
+
+
+def _block(p, x, cfg: ModelConfig):
+    h, _, _ = _time_mix(p, rms_norm(x, p["ln1"].astype(jnp.float32),
+                                    cfg.norm_eps), cfg)
+    x = x + h
+    h, _ = _channel_mix(p, rms_norm(x, p["ln2"].astype(jnp.float32),
+                                    cfg.norm_eps))
+    x = x + h
+    return shard_act(x, "batch", "seq", "act_embed")
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, last_only=False):
+    x = embed(params, batch["tokens"], cfg)
+
+    def body(x, p):
+        return _block(p, x, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"].astype(jnp.float32), cfg.norm_eps)
+    return unembed(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    logits, _ = forward(params, batch, cfg)
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state per layer
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    d, L = cfg.d_model, cfg.num_layers
+    h = d // HEAD_K
+    return {
+        "wkv": spec((L, batch, h, HEAD_K, HEAD_K),
+                    ("layers", "cache_batch", None, None, None),
+                    init="zeros", dtype=jnp.float32),
+        "shift_tm": spec((L, batch, d), ("layers", "cache_batch", "embed"),
+                         init="zeros", dtype=COMPUTE_DTYPE),
+        "shift_cm": spec((L, batch, d), ("layers", "cache_batch", "embed"),
+                         init="zeros", dtype=COMPUTE_DTYPE),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = embed(params, tokens, cfg)
+
+    def body(x, xs):
+        p, st_wkv, st_tm, st_cm = xs
+        xn = rms_norm(x, p["ln1"].astype(jnp.float32), cfg.norm_eps)
+        h, new_tm, new_wkv = _time_mix(p, xn, cfg, shift_state=st_tm,
+                                       state=st_wkv)
+        x = x + h
+        xn = rms_norm(x, p["ln2"].astype(jnp.float32), cfg.norm_eps)
+        h, new_cm = _channel_mix(p, xn, shift_state=st_cm)
+        x = x + h
+        return x, (new_wkv.astype(st_wkv.dtype), new_tm.astype(st_tm.dtype),
+                   new_cm.astype(st_cm.dtype))
+
+    x, (wkv, tm, cm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["shift_tm"],
+                  cache["shift_cm"]))
+    x = rms_norm(x, params["final_norm"].astype(jnp.float32), cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits[:, 0], {"wkv": wkv, "shift_tm": tm, "shift_cm": cm}

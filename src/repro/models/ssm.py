@@ -1,0 +1,331 @@
+"""Mamba2 blocks and the Zamba2 hybrid (arXiv:2411.15242): a Mamba2
+backbone with a single *shared-weight* transformer block invoked every
+``shared_attn_every`` layers, plus per-invocation LoRA deltas (rank 128)
+on the shared block's input projections.
+
+The Mamba2 block follows arXiv:2405.21060: fused in-projection to
+(z, xBC, dt), depthwise causal conv over xBC, SSD chunked scan (Pallas
+kernel / chunked jnp), gated RMSNorm, out-projection.  The shared
+attention block consumes concat([hidden, original_embedding]) (2*d_model)
+as in Zamba2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm import ops as ssd_ops
+from repro.runtime.sharding import shard_act
+from .attention import cache_shape
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, cross_entropy, embed, embed_specs, \
+    rms_norm, swiglu, unembed
+from .params import spec
+from .transformer import _layer_params
+
+HEAD_P = 64          # mamba2 head dim
+LORA_RANK = 128
+SHARED_WINDOW = 4096  # KV window kept for the shared attn at long context
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // HEAD_P
+    return d_in, n_heads
+
+
+def mamba_specs(cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    d_in, nh = _dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    L = (layers,)
+    return {
+        "ln": spec(L + (d,), ("layers", "embed"), init="ones"),
+        "w_in": spec(L + (d, 2 * d_in + 2 * n + nh),
+                     ("layers", "embed", "heads")),
+        "conv_w": spec(L + (cfg.ssm_conv, conv_dim), ("layers", None, None),
+                       scale=0.5),
+        "conv_b": spec(L + (conv_dim,), ("layers", None), init="zeros"),
+        "dt_bias": spec(L + (nh,), ("layers", None), init="zeros"),
+        "a_log": spec(L + (nh,), ("layers", None), init="zeros"),
+        "d_skip": spec(L + (nh,), ("layers", None), init="ones"),
+        "gn": spec(L + (d_in,), ("layers", None), init="ones"),
+        "w_out": spec(L + (d_in, d), ("layers", "heads", "embed")),
+    }
+
+
+def shared_block_specs(cfg: ModelConfig, n_inv: int):
+    """One shared transformer block over concat inputs + per-invocation
+    LoRA on the qkv and gate/up projections."""
+    d, dd = cfg.d_model, 2 * cfg.d_model
+    q, kv, f = cfg.q_dim, cfg.kv_dim, cfg.d_ff
+    N = (n_inv,)
+    return {
+        "ln1": spec((dd,), ("embed",), init="ones"),
+        "wq": spec((dd, q), ("embed", "heads")),
+        "wk": spec((dd, kv), ("embed", "kv_heads")),
+        "wv": spec((dd, kv), ("embed", "kv_heads")),
+        "wo": spec((q, d), ("heads", "embed")),
+        "ln2": spec((d,), ("embed",), init="ones"),
+        "gate": spec((d, f), ("embed", "ffn")),
+        "up": spec((d, f), ("embed", "ffn")),
+        "down": spec((f, d), ("ffn", "embed")),
+        # per-invocation LoRA deltas
+        "lq_a": spec(N + (dd, LORA_RANK), ("layers", "embed", None), scale=0.02),
+        "lq_b": spec(N + (LORA_RANK, q), ("layers", None, "heads"), scale=0.02),
+        "lk_a": spec(N + (dd, LORA_RANK), ("layers", "embed", None), scale=0.02),
+        "lk_b": spec(N + (LORA_RANK, kv), ("layers", None, None), scale=0.02),
+        "lg_a": spec(N + (d, LORA_RANK), ("layers", "embed", None), scale=0.02),
+        "lg_b": spec(N + (LORA_RANK, f), ("layers", None, "ffn"), scale=0.02),
+    }
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    if not cfg.shared_attn_every:
+        return 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def zamba2_specs(cfg: ModelConfig):
+    out = {
+        **embed_specs(cfg),
+        "blocks": mamba_specs(cfg, cfg.num_layers),
+        "final_norm": spec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    n_inv = n_shared_invocations(cfg)
+    if n_inv:
+        out["shared"] = shared_block_specs(cfg, n_inv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+def _conv1d(x, w, b, *, state=None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [W, C].  state: [B, W-1, C]
+    holds the trailing inputs for decode; returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : width - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    new_state = xp[:, x.shape[1]:]
+    return y + b.astype(x.dtype), new_state
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
+    """Returns (out, new_conv_state, new_ssm_state)."""
+    b, s, d = x.shape
+    d_in, nh = _dims(cfg)
+    n = cfg.ssm_state
+    h = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = jnp.split(h, [d_in, 2 * d_in + 2 * n], axis=-1)
+    xbc, new_conv = _conv1d(xbc, p["conv_w"], p["conv_b"], state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bb, cc = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(b, s, nh, HEAD_P)
+    if ssm_state is None:
+        y = ssd_ops.ssd(xh, dt, p["a_log"].astype(jnp.float32), bb, cc,
+                        p["d_skip"].astype(jnp.float32))
+        new_ssm = None
+    else:
+        y, new_ssm = ssd_ops.ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], p["a_log"].astype(jnp.float32),
+            bb[:, 0], cc[:, 0], p["d_skip"].astype(jnp.float32))
+        y = y[:, None]
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * \
+        p["gn"].astype(x.dtype)
+    return y @ p["w_out"].astype(x.dtype), new_conv, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (zamba2)
+# ---------------------------------------------------------------------------
+
+def _lora(x, a, b):
+    return (x @ a.astype(x.dtype)) @ b.astype(x.dtype)
+
+
+def shared_block(p, x, x0, cfg: ModelConfig, inv: int, positions, *,
+                 cache=None, pos=None):
+    """x: hidden [B,S,D]; x0: original embeddings.  inv is static.
+    cache: (k, v) windowed KV for decode; returns (out, new_cache)."""
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.decode_attention import ops as da
+
+    b, s, d = x.shape
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(cat, p["ln1"].astype(jnp.float32), cfg.norm_eps)
+    q = h @ p["wq"].astype(h.dtype) + _lora(h, p["lq_a"][inv], p["lq_b"][inv])
+    k = h @ p["wk"].astype(h.dtype) + _lora(h, p["lk_a"][inv], p["lk_b"][inv])
+    v = h @ p["wv"].astype(h.dtype)
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    new_cache = None
+    if cache is None:
+        o = fa.flash_attention(q, k, v, causal=True)
+        o = o.reshape(b, s, cfg.q_dim)
+    else:
+        ck, cv = cache
+        s_max = ck.shape[1]
+        slot = jnp.minimum(pos, s_max - 1) if s_max >= SHARED_WINDOW \
+            else pos % s_max
+        rolling = s_max <= SHARED_WINDOW
+        slot = pos % s_max if rolling else pos
+        ck = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(
+            c, kk, (i, 0, 0)))(ck, k.astype(ck.dtype), slot)
+        cv = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(
+            c, vv, (i, 0, 0)))(cv, v.astype(cv.dtype), slot)
+        valid = jnp.minimum(pos + 1, s_max)
+        o = da.decode_attention(q[:, 0], ck, cv, valid, pos=pos,
+                                window=SHARED_WINDOW if rolling else None,
+                                rolling=rolling)
+        o = o.reshape(b, 1, cfg.q_dim)
+        new_cache = (ck, cv)
+    x = x + o @ p["wo"].astype(x.dtype)
+    h = rms_norm(x, p["ln2"].astype(jnp.float32), cfg.norm_eps)
+    g = jax.nn.silu(h @ p["gate"].astype(h.dtype) +
+                    _lora(h, p["lg_a"][inv], p["lg_b"][inv]))
+    h = g * (h @ p["up"].astype(h.dtype))
+    h = shard_act(h, "batch", None, "act_ffn")
+    x = x + h @ p["down"].astype(h.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full zamba2 model
+# ---------------------------------------------------------------------------
+
+def forward(params, batch: dict, cfg: ModelConfig, *, last_only=False):
+    x = embed(params, batch["tokens"], cfg)
+    x0 = x
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    every = cfg.shared_attn_every or (cfg.num_layers + 1)
+    n_inv = n_shared_invocations(cfg)
+    n_grouped = n_inv * every
+    rem = cfg.num_layers - n_grouped
+
+    if n_inv:
+        # python loop over invocation groups (shared block differs per inv
+        # only through LoRA indices, which must be static)
+        for g in range(n_inv):
+            grp = jax.tree.map(
+                lambda a: a[g * every:(g + 1) * every], params["blocks"])
+
+            def body(x, p):
+                y, _, _ = mamba_block(p, rms_norm(
+                    x, p["ln"].astype(jnp.float32), cfg.norm_eps), cfg)
+                return shard_act(x + y, "batch", "seq", "act_embed"), None
+
+            x, _ = jax.lax.scan(body, x, grp)
+            x, _ = shared_block(params["shared"], x, x0, cfg, g, positions)
+            x = shard_act(x, "batch", "seq", "act_embed")
+    for i in range(rem):
+        p = _layer_params(params["blocks"], n_grouped + i)
+        y, _, _ = mamba_block(p, rms_norm(
+            x, p["ln"].astype(jnp.float32), cfg.norm_eps), cfg)
+        x = x + y
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"].astype(jnp.float32), cfg.norm_eps)
+    return unembed(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    logits, _ = forward(params, batch, cfg)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    d_in, nh = _dims(cfg)
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    L = cfg.num_layers
+    out = {
+        "ssm": spec((L, batch, nh, n, HEAD_P),
+                    ("layers", "cache_batch", None, None, None),
+                    init="zeros", dtype=jnp.float32),
+        "conv": spec((L, batch, cfg.ssm_conv - 1, conv_dim),
+                     ("layers", "cache_batch", None, None),
+                     init="zeros", dtype=COMPUTE_DTYPE),
+    }
+    n_inv = n_shared_invocations(cfg)
+    if n_inv:
+        w = min(s_max, SHARED_WINDOW)
+        out["shared_k"] = spec(
+            (n_inv, batch, w, cfg.num_kv_heads, cfg.head_dim),
+            ("layers", "cache_batch", "cache_seq", None, None),
+            init="zeros", dtype=COMPUTE_DTYPE)
+        out["shared_v"] = spec(
+            (n_inv, batch, w, cfg.num_kv_heads, cfg.head_dim),
+            ("layers", "cache_batch", "cache_seq", None, None),
+            init="zeros", dtype=COMPUTE_DTYPE)
+    return out
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = embed(params, tokens, cfg)
+    x0 = x
+    every = cfg.shared_attn_every or (cfg.num_layers + 1)
+    n_inv = n_shared_invocations(cfg)
+    n_grouped = n_inv * every
+    rem = cfg.num_layers - n_grouped
+
+    def mamba_step(x, p, cs, ss):
+        xn = rms_norm(x, p["ln"].astype(jnp.float32), cfg.norm_eps)
+        y, new_cs, new_ss = mamba_block(p, xn, cfg, conv_state=cs,
+                                        ssm_state=ss)
+        return x + y, new_cs.astype(cs.dtype), new_ss.astype(ss.dtype)
+
+    new_ssm, new_conv = [], []
+    sk, sv = [], []
+    for g in range(n_inv):
+        grp = jax.tree.map(lambda a: a[g * every:(g + 1) * every],
+                           params["blocks"])
+        cs_g = cache["conv"][g * every:(g + 1) * every]
+        ss_g = cache["ssm"][g * every:(g + 1) * every]
+
+        def body(x, xs):
+            p, cs, ss = xs
+            x, ncs, nss = mamba_step(x, p, cs, ss)
+            return x, (ncs, nss)
+
+        x, (ncs, nss) = jax.lax.scan(body, x, (grp, cs_g, ss_g))
+        new_conv.append(ncs)
+        new_ssm.append(nss)
+        x, (k_g, v_g) = shared_block(
+            params["shared"], x, x0, cfg, g, None,
+            cache=(cache["shared_k"][g], cache["shared_v"][g]), pos=pos)
+        sk.append(k_g)
+        sv.append(v_g)
+    for i in range(rem):
+        li = n_grouped + i
+        p = _layer_params(params["blocks"], li)
+        x, ncs, nss = mamba_step(x, p, cache["conv"][li], cache["ssm"][li])
+        new_conv.append(ncs[None])
+        new_ssm.append(nss[None])
+    new_cache = {
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+    }
+    if n_inv:
+        new_cache["shared_k"] = jnp.stack(sk)
+        new_cache["shared_v"] = jnp.stack(sv)
+    x = rms_norm(x, params["final_norm"].astype(jnp.float32), cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,6 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedules import cosine_schedule, wsd_schedule, make_schedule
+from .compress import topk_compress_update, compress_init, CompressState
+from .accumulate import GradAccumulator
+
+__all__ = [s for s in dir() if not s.startswith("_")]

@@ -1,0 +1,56 @@
+"""Error-feedback top-k gradient compression (distributed-optimisation
+trick for bandwidth-bound cross-pod replication).
+
+Each step transmits only the top ``ratio`` fraction of gradient entries
+(by magnitude, per-tensor); the residual is accumulated locally and added
+back the next step (error feedback, Karimireddy et al. 2019), which keeps
+convergence close to dense SGD/Adam.
+
+In-graph usage: compress BEFORE the cross-pod all-reduce — the dense
+intra-pod reduction stays exact, only the slow inter-pod link sees the
+sparsified tensor.  Here we expose the pure compression transform; the
+runtime wires it into the pod-axis reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressState:
+    residual: Any
+
+
+def compress_init(params) -> CompressState:
+    return CompressState(residual=jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def _topk_mask(g, ratio: float):
+    k = max(1, int(g.size * ratio))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def topk_compress_update(grads, state: CompressState, *, ratio: float = 0.1):
+    """Returns (sparse_grads, new_state).  sparse + residual == grads +
+    old residual (lossless bookkeeping)."""
+    def per_tensor(g, r):
+        gf = g.astype(jnp.float32) + r
+        mask = _topk_mask(gf, ratio)
+        sparse = gf * mask
+        return sparse.astype(g.dtype), gf - sparse
+
+    out = jax.tree.map(per_tensor, grads, state.residual)
+    sparse = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return sparse, CompressState(residual=resid)

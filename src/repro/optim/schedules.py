@@ -1,0 +1,38 @@
+"""Learning-rate schedules: cosine (default) and Warmup-Stable-Decay
+(WSD, the minicpm-2b schedule, arXiv:2404.06395 §4)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.01):
+    """Warmup -> Stable (constant) -> exponential Decay over the last
+    ``decay_frac`` of training."""
+    s = step.astype(jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * s / max(warmup, 1)
+    stable = jnp.full_like(s, peak_lr)
+    prog = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    decay = peak_lr * (floor ** prog)
+    out = jnp.where(s < warmup, warm, stable)
+    return jnp.where(s > decay_start, decay, out)
+
+
+def make_schedule(kind: str, **kw):
+    if kind == "cosine":
+        return lambda step: cosine_schedule(step, **kw)
+    if kind == "wsd":
+        return lambda step: wsd_schedule(step, **kw)
+    raise ValueError(f"unknown schedule {kind!r}")

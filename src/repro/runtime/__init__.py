@@ -1,0 +1,27 @@
+"""Distributed runtime: sharding rules, step builders, fault tolerance.
+
+`steps` / `fault` are exported lazily to avoid a circular import (model
+modules import `runtime.sharding` at definition time).
+"""
+
+from .sharding import (DEFAULT_RULES, ShardingRules, current_mesh,
+                       current_rules, shard_act, use_sharding)
+
+_LAZY = {
+    "TrainOptions": "steps", "TrainState": "steps",
+    "abstract_train_state": "steps", "batch_shardings": "steps",
+    "build_decode_step": "steps", "build_prefill_step": "steps",
+    "build_train_step": "steps", "make_train_state": "steps",
+    "state_shardings": "steps", "cache_shardings": "steps",
+    "ElasticMesh": "fault", "FailureInjector": "fault",
+    "NodeFailure": "fault", "StragglerMonitor": "fault",
+    "run_resilient": "fault",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(name)

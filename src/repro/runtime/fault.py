@@ -1,0 +1,160 @@
+"""Fault tolerance for the training runtime.
+
+Three cooperating pieces, all exercised in tests and the e2e example:
+
+- **FailureInjector** — deterministic pseudo-random "node failure" events
+  (exception raised between steps), standing in for a real healthd signal.
+- **ElasticMesh** — rebuilds the largest usable mesh from the surviving
+  device count (drops data-parallel rows first, preserving the model axis
+  so parameter shards stay materialisable), and re-places a checkpointed
+  state onto it.
+- **run_resilient** — the restart loop: step -> (maybe) checkpoint ->
+  on failure: rebuild mesh, re-lower the step, restore latest checkpoint,
+  continue.  Training is bit-deterministic across restarts because the
+  data pipeline is a pure function of (seed, step).
+
+Straggler mitigation lives at two levels: the middleware executor
+duplicates tail tasks (core/executor.py), and ``StragglerMonitor`` here
+flags slow steps from a rolling median for the training loop to act on
+(re-dispatch / exclude a worker at real scale; logged on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+log = logging.getLogger("repro.fault")
+
+
+class NodeFailure(RuntimeError):
+    """Simulated loss of part of the allocation."""
+
+    def __init__(self, lost_devices: int):
+        super().__init__(f"lost {lost_devices} devices")
+        self.lost_devices = lost_devices
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raise a NodeFailure with probability ``rate`` per step (seeded)."""
+
+    rate: float = 0.0
+    seed: int = 0
+    lost_per_event: int = 1
+    _rng: np.random.Generator = dataclasses.field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def check(self, step: int):
+        if self.rate > 0 and self._rng.random() < self.rate:
+            raise NodeFailure(self.lost_per_event)
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    """Track surviving devices; rebuild (data, model) meshes after loss.
+
+    The model axis is preserved (param shards must still fit); whole
+    data-parallel rows are dropped, so the new mesh uses
+    ``floor(devices / model) * model`` devices.
+    """
+
+    model_axis: int
+    devices: Sequence = ()
+
+    def __post_init__(self):
+        import jax
+        if not self.devices:
+            self.devices = tuple(jax.devices())
+
+    def usable(self, survivors: int) -> tuple[int, int]:
+        rows = survivors // self.model_axis
+        if rows < 1:
+            raise RuntimeError("not enough devices for one model replica")
+        return rows, self.model_axis
+
+    def make(self, survivors: int | None = None):
+        import jax
+        from jax.sharding import Mesh
+        n = survivors if survivors is not None else len(self.devices)
+        rows, cols = self.usable(n)
+        devs = np.asarray(self.devices[: rows * cols]).reshape(rows, cols)
+        return Mesh(devs, ("data", "model"))
+
+
+class StragglerMonitor:
+    """Rolling-median step-time watchdog.
+
+    ``observe`` returns True when a step exceeds ``threshold`` x the median
+    of the last ``window`` steps — the signal a real deployment uses to
+    re-dispatch work away from a slow host (here: logged + counted).
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        if dt > self.threshold * med:
+            self.flagged += 1
+            log.warning("straggler step: %.4fs vs median %.4fs", dt, med)
+            return True
+        return False
+
+
+def run_resilient(*, total_steps: int, build: Callable, step_fn_state,
+                  injector: FailureInjector, ckpt_manager,
+                  restore: Callable, start_step: int = 0):
+    """Generic restart loop.
+
+    build(survivors) -> (step_callable, state) re-lowers after a failure;
+    restore(step) -> state reloads the latest checkpoint.  Returns
+    (state, history) where history records failures and restarts.
+    """
+    step_fn, state = step_fn_state
+    survivors = None
+    history = {"failures": 0, "restarts": [], "stragglers": 0}
+    monitor = StragglerMonitor()
+    s = start_step
+    while s < total_steps:
+        try:
+            injector.check(s)
+            t0 = time.perf_counter()
+            state = step_fn(state, s)
+            monitor.observe(time.perf_counter() - t0)
+            ckpt_manager.maybe_save(state, s)
+            s += 1
+        except NodeFailure as e:
+            history["failures"] += 1
+            survivors = (survivors if survivors is not None
+                         else e.lost_devices + 0) or 0
+            log.warning("failure at step %d (%s); rebuilding", s, e)
+            step_fn, _ = build(e.lost_devices)
+            latest = ckpt_manager_latest(ckpt_manager)
+            if latest is not None:
+                state = restore(latest)
+                s = latest + 1
+            history["restarts"].append(s)
+    history["stragglers"] = monitor.flagged
+    ckpt_manager.wait()
+    return state, history
+
+
+def ckpt_manager_latest(mgr):
+    from repro.checkpoint import latest_step
+    mgr.wait()
+    return latest_step(mgr.directory)

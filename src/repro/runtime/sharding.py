@@ -1,0 +1,197 @@
+"""Logical-axis sharding engine.
+
+Every parameter and strategic activation in the framework is annotated with
+*logical* axis names ("embed", "ffn", "heads", "vocab", "experts", "batch",
+"seq", ...).  A :class:`ShardingRules` table maps logical names to mesh
+axes; `spec_for` resolves a logical shape to a `PartitionSpec`, silently
+dropping assignments that do not divide the dimension (e.g. qwen2-0.5b's 14
+heads on a 16-way model axis) — the dimension is then left unsharded and
+ZeRO/FSDP sharding on the other dims keeps memory in check.
+
+The rules are data, not code: the §Perf hillclimb swaps rule tables per
+architecture without touching model definitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+#: default logical-axis -> mesh-axis assignments (single- and multi-pod).
+#: entries may be a single mesh axis or a tuple (sharded over both).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                      # sequence replicated in train_4k
+    "seq_shard": ("model",),        # explicit SP/context parallelism
+    "act_embed": (),
+    "act_ffn": ("model",),
+    "act_heads": ("model",),
+    "act_vocab": ("model",),
+    "flash_heads": (),              # head sharding inside the flash scan
+    "flash_kv": (),
+    # parameters (2D: FSDP over data, TP over model)
+    "embed": ("data",),             # ZeRO-3 / FSDP shard
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "qkv_out": (),                  # fused q/k/v output dim when heads unshardable
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_ffn": (),
+    "layers": (),
+    "ssm_state": (),
+    "conv": (),
+    "cache_seq": ("model",),        # decode KV cache sharded along sequence
+    "cache_batch": ("pod", "data"),
+    "pos": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping of logical axis names to mesh axes."""
+
+    table: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def override(self, **kw: Sequence[str] | str | None) -> "ShardingRules":
+        t = dict(self.table)
+        for k, v in kw.items():
+            if v is None:
+                t[k] = ()
+            elif isinstance(v, str):
+                t[k] = (v,)
+            else:
+                t[k] = tuple(v)
+        return ShardingRules(t)
+
+    def mesh_axes_for(self, logical: str | None, mesh: Mesh) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.table.get(logical, ())
+        return tuple(a for a in axes if a in mesh.axis_names)
+
+    def spec_for(self, logical_axes: Sequence[str | None], shape: Sequence[int],
+                 mesh: Mesh) -> P:
+        """PartitionSpec for a tensor, enforcing divisibility and uniqueness
+        (a mesh axis may shard at most one dim)."""
+        used: set[str] = set()
+        entries = []
+        for dim, logical in zip(shape, logical_axes):
+            axes = self.mesh_axes_for(logical, mesh)
+            axes = tuple(a for a in axes if a not in used)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if axes and size > 0 and dim % size == 0:
+                used.update(axes)
+                entries.append(axes if len(axes) > 1 else axes[0])
+            else:
+                entries.append(None)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, logical_axes: Sequence[str | None],
+                     shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec_for(logical_axes, shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Ambient context: models call shard_act(...) without threading mesh/rules.
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: ShardingRules = ShardingRules()
+        self.flags: dict = {}
+
+
+_CTX = _Ctx()
+
+
+class use_sharding:
+    """Context manager installing (mesh, rules, perf flags) for
+    shard_act / specs.  ``flags`` gates perf-variant code paths (§Perf
+    hillclimb), e.g. {"moe_gather_bf16": True, "sharded_decode": True}."""
+
+    def __init__(self, mesh: Mesh | None, rules: ShardingRules | None = None,
+                 flags: dict | None = None):
+        self.mesh = mesh
+        self.rules = rules or ShardingRules()
+        self.flags = flags or {}
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules, _CTX.flags)
+        _CTX.mesh, _CTX.rules, _CTX.flags = self.mesh, self.rules, self.flags
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules, _CTX.flags = self._prev
+        return False
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> ShardingRules:
+    return _CTX.rules
+
+
+def current_flags() -> dict:
+    return _CTX.flags
+
+
+def shard_act(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op without an
+    ambient mesh, so single-device smoke tests never see collectives)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = _CTX.rules.spec_for(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gathered(w: jax.Array, *logical_axes: str | None, dtype=None) -> jax.Array:
+    """§Perf flag ``zero3_gather``: explicit ZeRO-3 weight gather.
+
+    Cast the weight to compute dtype (bf16 — half the gather bytes) and
+    constrain it to its MODEL-only sharding right before use.  XLA then
+    inserts one cheap bf16 all-gather over the FSDP ('pod'/'data') axes
+    and the matmul contracts an unsharded dim — instead of partial-summing
+    and all-reducing [B, S, D]-sized ACTIVATIONS on every matmul (the
+    dominant traffic in the llama4 train baseline).  Gradients flow back
+    through the constraint as a reduce-scatter.  No-op unless the flag is
+    set, so smoke tests and default paths are unchanged.
+    """
+    out = w if dtype is None else w.astype(dtype)
+    mesh = _CTX.mesh
+    if mesh is None or not _CTX.flags.get("zero3_gather"):
+        return out
+    if _CTX.flags.get("zero3_full"):
+        # full DP compute: gather over every axis (weights transit bf16)
+        return jax.lax.with_sharding_constraint(
+            out, NamedSharding(mesh, P()))
+    entries = []
+    used: set[str] = set()
+    for dim, la in zip(w.shape, logical_axes):
+        axes = tuple(a for a in _CTX.rules.mesh_axes_for(la, mesh)
+                     if a == "model" and a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0:
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        out, NamedSharding(mesh, P(*entries)))

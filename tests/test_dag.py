@@ -1,0 +1,82 @@
+"""DG structure + DOA_dep (paper §5.1, Fig. 2/3)."""
+
+import pytest
+
+from repro.core import (DAG, TaskSet, cdg_dag, deepdrivemd_dag, fig2a_chain,
+                        fig2b_fork, fig2d_independent)
+
+
+def test_fig2a_chain_doa_dep_zero():
+    assert fig2a_chain(4).doa_dep() == 0
+
+
+def test_fig2b_fork_doa_dep_one():
+    assert fig2b_fork().doa_dep() == 1
+
+
+@pytest.mark.parametrize("n", [1, 3, 5, 17])
+def test_fig2d_independent_doa_dep_n(n):
+    assert fig2d_independent(n).doa_dep() == n
+
+
+def test_ddmd_staggered_doa_dep_two():
+    # "three independent chains beginning at rank 1 means DOA_dep = 2" (§7.1)
+    assert deepdrivemd_dag(3).doa_dep() == 2
+
+
+def test_ddmd_more_iterations_scale_doa():
+    assert deepdrivemd_dag(5).doa_dep() == 4
+
+
+def test_cdg_doa_dep_two():
+    # Table 3: DOA_dep = 2 for both c-DG1 and c-DG2
+    assert cdg_dag("c-DG1").doa_dep() == 2
+    assert cdg_dag("c-DG2").doa_dep() == 2
+
+
+def test_diamond_collapses_to_one_branch():
+    g = DAG()
+    for n in "ABCD":
+        g.add(TaskSet(n, 1, 1, 0, 1.0))
+    g.add_edge("A", "B")
+    g.add_edge("A", "C")
+    g.add_edge("B", "D")
+    g.add_edge("C", "D")
+    assert g.doa_dep() == 0  # converging paths are not independent branches
+
+
+def test_ranks_breadth_first():
+    g = cdg_dag("c-DG1")
+    r = g.ranks()
+    assert r == {"T0": 0, "T1": 1, "T2": 1, "T3": 2, "T4": 2, "T5": 2,
+                 "T6": 2, "T7": 3}
+
+
+def test_cycle_rejected():
+    g = DAG()
+    g.add(TaskSet("A", 1, 1, 0, 1.0))
+    g.add(TaskSet("B", 1, 1, 0, 1.0))
+    g.add_edge("A", "B")
+    with pytest.raises(ValueError):
+        g.add_edge("B", "A")
+
+
+def test_sequential_barriers_linearise_ranks():
+    g = cdg_dag("c-DG2").with_sequential_barriers()
+    # after barriers every rank-r set precedes every rank-r+1 set
+    r = g.ranks()
+    assert r["T7"] == 3
+    assert set(g.parents("T7")) == {"T3", "T4", "T5", "T6"}
+
+
+def test_critical_path_bounds_total():
+    g = cdg_dag("c-DG2")
+    assert g.critical_path_tx() <= g.total_tx()
+
+
+def test_branch_ids_merge_at_join():
+    g = cdg_dag("c-DG1")
+    b = g.branch_ids()
+    assert b["T4"] == b["T5"] == b["T7"]      # converge at T7
+    assert b["T3"] != b["T4"]
+    assert len(set(b.values())) == 3

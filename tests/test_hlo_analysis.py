@@ -1,0 +1,81 @@
+"""HLO analysis unit tests: collective-byte parsing and loop-weighted
+multiplicity propagation on synthetic HLO text."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import (collective_stats,
+                                       computation_multiplicities,
+                                       weighted_collective_stats,
+                                       _shape_bytes)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %body (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+      ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+    }
+
+    %cond (arg: (s32[], f32[8,128])) -> pred[] {
+      %p2 = (s32[], f32[8,128]) parameter(0)
+      ROOT %lt = pred[] compare(%i2, %c), direction=LT
+    }
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x: f32[8,128]) -> f32[8,128] {
+      %x0 = f32[8,128]{1,0} parameter(0)
+      %ag = f32[16,128]{1,0} all-gather(%x0), dimensions={0}
+      %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+    }
+    """)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+
+def test_flat_collective_stats():
+    st = collective_stats(HLO)
+    assert st.count_by_kind == {"all-reduce": 1, "all-gather": 1}
+    assert st.bytes_by_kind["all-gather"] == 16 * 128 * 4
+
+
+def test_multiplicity_propagation():
+    m = computation_multiplicities(HLO)
+    assert m["main"] == 1
+    assert m["body"] == 10
+    assert m["cond"] == 1      # conditions carry no collectives; weight 1
+    assert m["add"] == 10      # called from body -> inherits its weight
+
+
+def test_weighted_collectives():
+    st = weighted_collective_stats(HLO)
+    # the in-loop all-reduce counts 10x, the top-level all-gather once
+    assert st.count_by_kind["all-reduce"] == 10
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.bytes_by_kind["all-reduce"] == 10 * 8 * 128 * 4
+
+
+def test_tuple_collective_with_index_comments():
+    """XLA embeds /*index=N*/ comments (containing '=') inside large tuple
+    types; the fused gradient all-reduce must still be counted."""
+    line = ("  %all-reduce.696 = (f32[64]{0}, f32[4224]{0}, f32[4224]{0}, "
+            "f32[4224]{0}, f32[4224]{0}, /*index=5*/f32[4224]{0}, "
+            "f32[2048,4096]{1,0}) all-reduce(%a, %b), to_apply=%add")
+    st = collective_stats(line)
+    assert st.count_by_kind == {"all-reduce": 1}
+    want = (64 + 4 * 4224 + 4224 + 2048 * 4096) * 4
+    assert st.bytes_by_kind["all-reduce"] == want
+
+
+def test_operand_reference_not_counted():
+    line = ("  %gte = f32[64]{0} get-tuple-element(%all-reduce.696), "
+            "index=0")
+    assert collective_stats(line).total_count == 0

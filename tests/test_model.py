@@ -1,0 +1,110 @@
+"""The analytic makespan model vs every number the paper publishes."""
+
+import pytest
+
+from repro.core import (cdg_dag, cdg_sequential_stage_tx, ddmd_stage_tx,
+                        deepdrivemd_dag, doa_res, fig2b_with_paper_tx,
+                        maskable_stages, relative_improvement,
+                        sequential_ttx, sequential_ttx_grouped,
+                        staggered_async_ttx, summit_pool, wla)
+from repro.core.model import async_ttx, predict
+
+
+def test_masking_example_section_5_3():
+    """t0=500, t1=t2=1000, 2*t3=2*t5=t4=4000 -> 7500 sequential,
+    5500 asynchronous, I ~ 26%."""
+    g = fig2b_with_paper_tx()
+    t_seq = sequential_ttx(g)
+    t_async, tails = async_ttx(g)
+    assert t_seq == pytest.approx(7500.0)
+    assert t_async == pytest.approx(5500.0)
+    assert sorted(tails, reverse=True)[0] == pytest.approx(5000.0)
+    assert relative_improvement(t_seq, t_async) == pytest.approx(0.2667, abs=1e-3)
+
+
+def test_ddmd_sequential_ttx_eqn2():
+    # 3 * (340 + 85 + 63 + 38) = 1578 s (§7.1)
+    assert sequential_ttx_grouped(ddmd_stage_tx(), n_iterations=3) == \
+        pytest.approx(1578.0)
+
+
+def test_ddmd_maskable_stages():
+    dd = deepdrivemd_dag(3)
+    pool = summit_pool()
+    sets = [dd.node(n) for n in ("simul0", "aggre0", "train0", "infer0")]
+    # Sim and Infer demand all 96 GPUs -> ineligible; Aggr/Train maskable.
+    assert maskable_stages(sets, pool) == [False, True, True, False]
+
+
+def test_ddmd_eqn6_staggered():
+    # t_async = 3 t_seq - 2 t_Aggr - 1 t_Train = 1345 s (§7.1)
+    mask = [False, True, True, False]
+    t = staggered_async_ttx(ddmd_stage_tx(), 3, mask)
+    assert t == pytest.approx(1345.0)
+
+
+def test_ddmd_predicted_async_with_overheads():
+    # Table 3 Pred. t_async = 1399 (= 1345 * 1.04)
+    t = staggered_async_ttx(ddmd_stage_tx(), 3, [False, True, True, False])
+    assert t * 1.04 == pytest.approx(1399, abs=1.0)
+    assert 1 - (t * 1.04) / 1578 == pytest.approx(0.113, abs=2e-3)
+
+
+def test_ddmd_masking_condition():
+    # t_Sim >= t_Aggr + t_Train is what lets both stages be masked (§7.1)
+    tx = ddmd_stage_tx()
+    assert tx[0] >= tx[1] + tx[2]
+
+
+@pytest.mark.parametrize("which,t_async_base,t_pred", [
+    ("c-DG1", 1860.0, 1972.0),
+    ("c-DG2", 1300.0, 1378.0),
+])
+def test_cdg_async_ttx_eqn3(which, t_async_base, t_pred):
+    g = cdg_dag(which)
+    t, _ = async_ttx(g)
+    assert t == pytest.approx(t_async_base, abs=1.0)
+    # Table 3 Pred. includes EnTK 4% and async-enablement 2%
+    assert t * 1.04 * 1.02 == pytest.approx(t_pred, abs=2.0)
+
+
+def test_cdg_sequential_2000():
+    for which in ("c-DG1", "c-DG2"):
+        assert sequential_ttx_grouped(cdg_sequential_stage_tx(which)) == \
+            pytest.approx(2000.0, abs=25.0)  # c-DG1 fractions round to 0.99
+
+
+def test_cdg_predicted_improvement_signs():
+    # c-DG1 ~no benefit; c-DG2 ~0.31 predicted before overheads (§7.3)
+    t1, _ = async_ttx(cdg_dag("c-DG1"))
+    t2, _ = async_ttx(cdg_dag("c-DG2"))
+    assert relative_improvement(2000.0, t1) < 0.08
+    assert relative_improvement(2000.0, t2) == pytest.approx(0.35, abs=0.05)
+
+
+def test_wla_table3():
+    pool = summit_pool()
+    dd = deepdrivemd_dag(3)
+    assert dd.doa_dep() == 2
+    assert doa_res(dd, pool, "full_set") == 1
+    assert wla(dd, pool, "full_set") == 1          # Table 3 row 1
+    for which in ("c-DG1", "c-DG2"):
+        g = cdg_dag(which)
+        assert doa_res(g, pool, "minimal") == 2
+        assert wla(g, pool, "minimal") == 2        # Table 3 rows 2-3
+
+
+def test_predict_end_to_end():
+    pool = summit_pool()
+    p = predict(cdg_dag("c-DG2"), pool)
+    assert p.wla == 2
+    assert p.t_async < p.t_seq
+    assert 0.1 < p.improvement < 0.4
+
+
+def test_predict_sequential_dg_gains_nothing():
+    from repro.core import fig2a_chain
+    pool = summit_pool()
+    p = predict(fig2a_chain(5), pool)
+    assert p.wla == 0
+    assert p.improvement <= 0.0  # only overheads remain

@@ -1,0 +1,107 @@
+"""Hypothesis property tests on model-layer and analytic invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.analytic import analyse_cell, forward_flops, decode_flops
+from repro.models.layers import apply_rope, cross_entropy, rms_norm
+from repro.models.moe import _capacity, _positions_in_expert
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 4), st.integers(2, 32), st.integers(2, 16))
+@settings(**SETTINGS)
+def test_rms_norm_unit_rms(b, s, d):
+    x = jnp.asarray(np.random.default_rng(b * s + d).normal(
+        size=(b, s, d)) * 7 + 1, jnp.float32)
+    y = rms_norm(x, jnp.ones((d,)))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+@given(st.integers(0, 1000), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(pos, h):
+    """Rotation must preserve per-head vector norms."""
+    d = 32
+    x = jnp.asarray(np.random.default_rng(pos).normal(size=(1, 3, h, d)),
+                    jnp.float32)
+    positions = jnp.full((1, 3), pos, jnp.int32)
+    y = apply_rope(x, positions, theta=10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+@given(st.integers(2, 50))
+@settings(**SETTINGS)
+def test_cross_entropy_bounds(v):
+    """Uniform logits -> CE == log(V); ignore-mask zeroes contributions."""
+    logits = jnp.zeros((2, 3, v))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    ce = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(ce), np.log(v), rtol=1e-5)
+    masked = cross_entropy(logits, labels.at[:, 1:].set(-1))
+    np.testing.assert_allclose(float(masked), np.log(v), rtol=1e-5)
+
+
+@given(st.integers(1, 4096), st.integers(1, 128), st.integers(1, 8),
+       st.floats(0.5, 4.0))
+@settings(**SETTINGS)
+def test_capacity_positive_and_aligned(tokens, experts, k, factor):
+    c = _capacity(tokens, experts, k, factor)
+    assert c >= 8 and c % 8 == 0
+    assert c * experts >= tokens * k * factor * 0.5
+
+
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_positions_in_expert_are_ranks(assign):
+    e = jnp.asarray(assign, jnp.int32)
+    pos = np.asarray(_positions_in_expert(e, 8))
+    seen: dict[int, int] = {}
+    for a, p in zip(assign, pos):
+        assert p == seen.get(a, 0)
+        seen[a] = seen.get(a, 0) + 1
+
+
+@given(st.sampled_from(ARCH_IDS), st.integers(1, 8), st.integers(7, 12))
+@settings(**SETTINGS)
+def test_analytic_flops_monotone(arch, b, log_s):
+    """FLOPs strictly increase with sequence length and batch."""
+    cfg = get_config(arch)
+    s = 1 << log_s
+    f1 = forward_flops(cfg, b, s)
+    f2 = forward_flops(cfg, b, 2 * s)
+    f3 = forward_flops(cfg, 2 * b, s)
+    assert 0 < f1 < f2
+    assert f1 < f3 <= 2 * f1 + 1e-6 * f1
+
+
+@given(st.sampled_from(ARCH_IDS))
+@settings(**SETTINGS)
+def test_analytic_cells_sane(arch):
+    """Model flops never exceed analytic compiled flops; decode is far
+    cheaper than prefill."""
+    cfg = get_config(arch)
+    n = cfg.param_count_estimate()
+    na = cfg.active_param_count_estimate()
+    for shape in SHAPES.values():
+        cell = analyse_cell(cfg, shape, n, na, 256)
+        assert cell.flops_global > 0 and cell.hbm_bytes_global > 0
+        assert cell.model_flops <= cell.flops_global * 1.05, (arch, shape)
+    d = decode_flops(cfg, SHAPES["decode_32k"].global_batch, 32768)
+    p = forward_flops(cfg, SHAPES["prefill_32k"].global_batch, 32768)
+    assert d < p
+
+
+def test_workflow_dag_properties():
+    """DOA_dep bounds from the paper's Fig. 2 families, property-style."""
+    from repro.core import fig2a_chain, fig2d_independent
+    for n in (2, 5, 9):
+        assert fig2a_chain(n).doa_dep() == 0
+        assert fig2d_independent(n).doa_dep() == n
