@@ -1,0 +1,21 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test-fast test-all bench-policies bench-paper
+
+## tier-1: everything except the slow subprocess multi-device runs
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+## the full suite, slow distributed subprocess tests included
+test-all:
+	$(PY) -m pytest -q
+
+## scheduling-policy comparison on the paper's workloads
+bench-policies:
+	$(PY) benchmarks/bench_policies.py
+
+## the paper-reproduction benchmarks (Tables 1-3, Figs. 4-6)
+bench-paper:
+	$(PY) benchmarks/bench_deepdrivemd.py
+	$(PY) benchmarks/bench_cdg.py

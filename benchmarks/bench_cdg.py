@@ -30,7 +30,7 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "paper")
 
 
-def run(which: str, write_csv: bool = True) -> dict:
+def run(which: str, write_csv: bool = True, policy: str = "fifo") -> dict:
     """c-DG2's measured full masking requires GPU sharing: its rank-2 task
     sets demand 112 GPUs on the 96-GPU allocation, yet the paper measures
     t_async ~= the perfectly-masked 1372 s.  We therefore report BOTH a
@@ -51,13 +51,14 @@ def run(which: str, write_csv: bool = True) -> dict:
 
     seq = simulate(dag, pool, "sequential",
                    sequential_stage_groups=CDG_SEQUENTIAL_GROUPS,
-                   options=SimOptions(seed=11))
-    asy = simulate(dag, pool, "async", options=SimOptions(seed=11))
+                   options=SimOptions(seed=11), scheduling=policy)
+    asy = simulate(dag, pool, "async", options=SimOptions(seed=11),
+                   scheduling=policy)
     asy_shared = simulate(dag, pool_shared, "async",
-                          options=SimOptions(seed=11))
+                          options=SimOptions(seed=11), scheduling=policy)
 
     out = dict(
-        which=which,
+        which=which, policy=policy,
         doa_dep=dag.doa_dep(), wla=w,
         t_seq_model=round(t_seq_model, 1),
         t_async_pred=round(t_async_pred, 1),
@@ -73,7 +74,9 @@ def run(which: str, write_csv: bool = True) -> dict:
         gpu_util_async=round(asy.gpu_utilization, 3),
         paper=PAPER[which],
     )
-    if write_csv:
+    if write_csv and policy == "fifo":
+        # the figN_*.csv artifacts are the paper's figures; only the paper's
+        # (fifo) schedule may overwrite them
         os.makedirs(ART_DIR, exist_ok=True)
         fig = "fig5" if which == "c-DG1" else "fig6"
         for tag, res in (("seq", seq), ("async", asy)):
@@ -86,9 +89,9 @@ def run(which: str, write_csv: bool = True) -> dict:
     return out
 
 
-def main():
+def main(policy: str = "fifo"):
     for which in ("c-DG1", "c-DG2"):
-        out = run(which)
+        out = run(which, policy=policy)
         paper = out.pop("paper")
         print(f"== {which} (Table 2 workload) ==")
         for k, v in out.items():
@@ -97,6 +100,8 @@ def main():
               f"t_async_meas={paper['t_async_meas']}")
         assert out["doa_dep"] == paper["doa_dep"]
         assert out["wla"] == paper["wla"]
+        if policy != "fifo":
+            continue  # paper-agreement asserts hold for the paper's policy
         if which == "c-DG1":
             # the paper's headline: asynchronicity does NOT help here
             assert abs(out["i_sim_strict"]) < 0.06, out["i_sim_strict"]
@@ -105,8 +110,13 @@ def main():
             # shared-GPU schedule reproduces the paper's measured TTX
             assert abs(out["t_async_sim_shared"] - paper["t_async_meas"]) \
                 / paper["t_async_meas"] < 0.08, out["t_async_sim_shared"]
-    print("  agreement: OK")
+    print("  agreement: OK" if policy == "fifo" else
+          f"  (paper-agreement asserts skipped for policy={policy})")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="fifo",
+                    help="scheduling policy: fifo | lpt | gpu_bestfit")
+    main(policy=ap.parse_args().policy)

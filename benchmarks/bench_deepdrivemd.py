@@ -30,7 +30,8 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "paper")
 
 
-def run(n_iterations: int = 3, write_csv: bool = True) -> dict:
+def run(n_iterations: int = 3, write_csv: bool = True,
+        policy: str = "fifo") -> dict:
     pool = summit_pool(16)
     dag = deepdrivemd_dag(n_iterations)
 
@@ -54,13 +55,15 @@ def run(n_iterations: int = 3, write_csv: bool = True) -> dict:
     seq = simulate(dag, pool, "sequential",
                    sequential_stage_groups=ddmd_sequential_stage_groups(
                        n_iterations),
-                   options=SimOptions(seed=7))
-    asy = simulate(dag, pool, "async", options=SimOptions(seed=7))
+                   options=SimOptions(seed=7), scheduling=policy)
+    asy = simulate(dag, pool, "async", options=SimOptions(seed=7),
+                   scheduling=policy)
 
     i_model = relative_improvement(t_seq_pred, t_async_pred)
     i_sim = relative_improvement(seq.makespan, asy.makespan)
 
     out = dict(
+        policy=policy,
         doa_dep=dag.doa_dep(), doa_res=p.doa_res,
         wla=wla(dag, pool, "full_set"),
         t_seq_model=round(t_seq_model, 1),
@@ -77,7 +80,8 @@ def run(n_iterations: int = 3, write_csv: bool = True) -> dict:
         paper=PAPER,
     )
 
-    if write_csv:
+    if write_csv and policy == "fifo":
+        # fig4_*.csv is the paper's figure; only the fifo schedule writes it
         os.makedirs(ART_DIR, exist_ok=True)
         for tag, res in (("seq", seq), ("async", asy)):
             ts, cpu, gpu = res.utilization_trace()
@@ -89,8 +93,8 @@ def run(n_iterations: int = 3, write_csv: bool = True) -> dict:
     return out
 
 
-def main():
-    out = run()
+def main(policy: str = "fifo"):
+    out = run(policy=policy)
     paper = out.pop("paper")
     print("== DeepDriveMD (Table 1 workload, 16 Summit nodes) ==")
     for k, v in out.items():
@@ -101,14 +105,21 @@ def main():
     # agreement assertions (documented tolerances)
     assert out["doa_dep"] == paper["doa_dep"]
     assert out["wla"] == paper["wla"]
-    assert abs(out["t_seq_sim"] - paper["t_seq_meas"]) / paper["t_seq_meas"] \
-        < 0.08, "sequential sim vs paper-measured"
-    assert abs(out["t_async_sim"] - paper["t_async_meas"]) \
-        / paper["t_async_meas"] < 0.08, "async sim vs paper-measured"
-    assert out["i_sim"] > 0.12, "async must clearly beat sequential"
-    print("  agreement: OK (within 8% of the paper's measured TTX)")
+    if policy == "fifo":
+        assert abs(out["t_seq_sim"] - paper["t_seq_meas"]) \
+            / paper["t_seq_meas"] < 0.08, "sequential sim vs paper-measured"
+        assert abs(out["t_async_sim"] - paper["t_async_meas"]) \
+            / paper["t_async_meas"] < 0.08, "async sim vs paper-measured"
+        assert out["i_sim"] > 0.12, "async must clearly beat sequential"
+        print("  agreement: OK (within 8% of the paper's measured TTX)")
+    else:
+        print(f"  (paper-agreement asserts skipped for policy={policy})")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="fifo",
+                    help="scheduling policy: fifo | lpt | gpu_bestfit")
+    main(policy=ap.parse_args().policy)

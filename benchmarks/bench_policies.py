@@ -1,0 +1,108 @@
+"""Scheduling-policy comparison on the paper's workloads.
+
+Runs every policy of the shared scheduling engine (``fifo`` / ``lpt`` /
+``gpu_bestfit``) on the paper's c-DG1 / c-DG2 (Table 2) and DeepDriveMD
+(Table 1) DGs, in sequential and asynchronous mode, and reports the
+relative improvement I (Eqn. 5) per policy.
+
+Two headline results:
+
+1. With the paper's GPU-sharing configuration (the one that reproduces its
+   measured c-DG2 TTX, see bench_cdg.py), the async-vs-sequential
+   improvement on c-DG2 holds under EVERY policy — asynchronicity is a
+   property of the workflow, not of one dispatch order.
+2. With strict exclusive GPUs, policy choice matters enormously: naive LPT
+   front-loads the widest GPU leaf sets (T3/T6), starves the T4/T5 -> T7
+   chain, and erases the entire async win on c-DG2 — exactly the
+   scheduling/execution separation argument of RADICAL-Pilot.
+
+Also demonstrates heterogeneous multi-pool placement: DeepDriveMD on a
+GPU-node + CPU-node allocation, where ``gpu_bestfit`` moves all CPU-only
+Aggregation tasks onto the CPU partition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (CDG_SEQUENTIAL_GROUPS, SCHEDULING_POLICIES,
+                        SimOptions, cdg_dag, ddmd_sequential_stage_groups,
+                        deepdrivemd_dag, hybrid_pool, relative_improvement,
+                        simulate, summit_pool)
+
+POLICIES = tuple(sorted(SCHEDULING_POLICIES))
+OPTS = SimOptions(seed=11)
+
+WORKLOADS = {
+    "c-DG1": (lambda: cdg_dag("c-DG1"), CDG_SEQUENTIAL_GROUPS),
+    "c-DG2": (lambda: cdg_dag("c-DG2"), CDG_SEQUENTIAL_GROUPS),
+    "DeepDriveMD": (lambda: deepdrivemd_dag(3),
+                    ddmd_sequential_stage_groups(3)),
+}
+
+
+def run(which: str, policy: str, shared_gpus: bool = False) -> dict:
+    build, groups = WORKLOADS[which]
+    pool = summit_pool(16)
+    if shared_gpus:
+        pool = dataclasses.replace(pool, oversubscribe_gpus=True)
+    dag = build()
+    seq = simulate(dag, pool, "sequential", options=OPTS,
+                   sequential_stage_groups=groups, scheduling=policy)
+    asy = simulate(dag, pool, "async", options=OPTS, scheduling=policy)
+    return dict(
+        which=which, policy=policy, shared_gpus=shared_gpus,
+        t_seq=round(seq.makespan, 1), t_async=round(asy.makespan, 1),
+        i=round(relative_improvement(seq.makespan, asy.makespan), 3),
+        gpu_util_async=round(asy.gpu_utilization, 3),
+    )
+
+
+def run_hybrid_placement() -> dict:
+    """DeepDriveMD on a heterogeneous GPU+CPU allocation: where do the
+    CPU-only Aggregation tasks land under each policy?"""
+    alloc = hybrid_pool(gpu_nodes=8, cpu_nodes=8)
+    out = {}
+    for policy in POLICIES:
+        res = simulate(deepdrivemd_dag(3), alloc, "async", options=OPTS,
+                       scheduling=policy)
+        counts = res.per_pool_task_counts()
+        agg_on_cpu = sum(1 for r in res.records
+                         if r.gpus == 0 and r.pool.endswith("-cpu"))
+        out[policy] = dict(makespan=round(res.makespan, 1),
+                           per_pool=counts, cpu_only_on_cpu_pool=agg_on_cpu)
+    return out
+
+
+def main():
+    print("== policy comparison (16 Summit nodes; paper Tables 1-2) ==")
+    hdr = f"  {'workload':12s} {'policy':12s} {'gpus':7s} " \
+          f"{'t_seq':>8s} {'t_async':>8s} {'I':>7s}"
+    for shared in (False, True):
+        print(f"-- {'shared (paper-reproducing)' if shared else 'strict exclusive'} GPUs --")
+        print(hdr)
+        for which in WORKLOADS:
+            for policy in POLICIES:
+                r = run(which, policy, shared_gpus=shared)
+                print(f"  {r['which']:12s} {r['policy']:12s} "
+                      f"{'shared' if shared else 'strict':7s} "
+                      f"{r['t_seq']:8.1f} {r['t_async']:8.1f} {r['i']:7.3f}")
+                if which == "c-DG2" and shared:
+                    # the paper's headline, under EVERY policy
+                    assert r["i"] > 0.15, (policy, r)
+                if which == "c-DG2" and not shared and policy == "fifo":
+                    assert r["i"] > 0.15, r  # strict fifo also masks
+
+    print("-- heterogeneous multi-pool placement (DeepDriveMD, GPU+CPU nodes) --")
+    hp = run_hybrid_placement()
+    for policy, d in hp.items():
+        print(f"  {policy:12s} makespan={d['makespan']:8.1f} "
+              f"per_pool={d['per_pool']} "
+              f"cpu_only_tasks_on_cpu_pool={d['cpu_only_on_cpu_pool']}")
+    # gpu_bestfit must actually use the CPU partition for CPU-only work
+    assert hp["gpu_bestfit"]["cpu_only_on_cpu_pool"] > 0
+    print("  agreement: OK (c-DG2 async win holds under every policy)")
+
+
+if __name__ == "__main__":
+    main()

@@ -85,7 +85,7 @@ def main():
     for fn in PAYLOADS.values():
         fn(0)
 
-    from repro.core.resources import NodeSpec, PoolSpec
+    from repro.core.resources import Allocation, NodeSpec, PoolSpec
     pool = PoolSpec("laptop", num_nodes=1, node=NodeSpec(cpus=8, gpus=4))
     dag = deepdrivemd_dag(3, table=TABLE, payloads=PAYLOADS)
 
@@ -105,6 +105,16 @@ def main():
     print(f"async:      {t_async:6.2f}s   ({asy.tasks_total} tasks, "
           f"{asy.throughput():.1f} tasks/s)")
     print(f"I = {i:.3f}  (real JAX payloads, real thread-level concurrency)")
+
+    # heterogeneous allocation: an accelerator partition + a CPU partition;
+    # gpu_bestfit packs the CPU-only Aggregation tasks onto the CPU nodes.
+    hetero = Allocation("laptop-hybrid", (
+        PoolSpec("accel", num_nodes=1, node=NodeSpec(cpus=4, gpus=4)),
+        PoolSpec("cpu", num_nodes=1, node=NodeSpec(cpus=8, gpus=0)),
+    ))
+    het = RealExecutor(hetero, launch_latency=0.002).run(
+        dag, "async", scheduling="gpu_bestfit")
+    print(f"hybrid pools (gpu_bestfit): {het.per_pool_task_counts()}")
     return i
 
 

@@ -11,16 +11,18 @@ release the GIL while XLA executes, so heterogeneous tasks genuinely
 overlap.  Synthetic tasks (``payload=None``) sleep for their sampled TX —
 the `stress` analogue used by the paper's experiments.
 
-The executor enforces the same semantics as the discrete-event simulator
-(`repro.core.simulator`): set-level barriers by default, task-level
-asynchronicity with ``task_level=True``, and PST stage barriers in
-sequential mode.
+All scheduling decisions — ready-queue order, dependency bookkeeping
+(set-level by default, task-level with ``task_level=True``), per-pool
+resource accounting and placement — are delegated to the SAME
+:class:`~repro.core.sched_engine.SchedEngine` the discrete-event simulator
+uses, so the two substrates enforce identical semantics by construction.
+Heterogeneous multi-pool :class:`~repro.core.resources.Allocation`s and
+the ``fifo`` / ``lpt`` / ``gpu_bestfit`` policies work unchanged here.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import random
 import threading
 import time
@@ -28,8 +30,9 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 from .dag import DAG
-from .resources import PoolSpec
-from .simulator import Mode, TaskRecord
+from .resources import Allocation, PoolSpec
+from .sched_engine import SchedEngine, SchedulingPolicy
+from .simulator import Mode, TaskRecord, per_pool_task_counts
 
 
 @dataclasses.dataclass
@@ -38,15 +41,19 @@ class ExecResult:
     records: list[TaskRecord]
     mode: str
     tasks_total: int
+    policy: str = "fifo"
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
+
+    def per_pool_task_counts(self) -> dict[str, int]:
+        return per_pool_task_counts(self.records)
 
 
 class RealExecutor:
     """Executes a task-set DG with real concurrency on the local host."""
 
-    def __init__(self, pool: PoolSpec, max_workers: int = 64,
+    def __init__(self, pool: "PoolSpec | Allocation", max_workers: int = 64,
                  tx_scale: float = 1.0, seed: int = 0,
                  launch_latency: float = 0.0):
         self.pool = pool
@@ -59,17 +66,16 @@ class RealExecutor:
 
     def run(self, dag: DAG, mode: Mode = "async", *, task_level: bool = False,
             sequential_stage_groups: Sequence[Sequence[str]] | None = None,
+            scheduling: "str | SchedulingPolicy" = "fifo",
             ) -> ExecResult:
         g = dag if mode == "async" else dag.with_sequential_barriers(
             sequential_stage_groups)
         rng = random.Random(self.seed)
-        total = self.pool.total
-        order = g.topological_order()
-        ranks = g.ranks()
-        topo_pos = {n: k for k, n in enumerate(order)}
+        engine = SchedEngine(g, self.pool, policy=scheduling,
+                             task_level=task_level)
 
         durations: dict[tuple[str, int], float] = {}
-        for name in order:
+        for name in engine.order:
             ts = g.node(name)
             for i in range(ts.num_tasks):
                 mu = ts.tx_mean
@@ -78,40 +84,10 @@ class RealExecutor:
 
         lock = threading.Lock()
         cv = threading.Condition(lock)
-        cpus_free = [total.cpus]
-        gpus_free = [total.gpus]
-        remaining: dict[tuple[str, int], int] = {}
-        set_remaining = {n: g.node(n).num_tasks for n in order}
-        child_waiters: dict[tuple[str, int], list[tuple[str, int]]] = {}
-        if task_level:
-            for name in order:
-                nc = g.node(name).num_tasks
-                for i in range(nc):
-                    cnt = 0
-                    for p in g.parents(name):
-                        np_ = g.node(p).num_tasks
-                        child_waiters.setdefault((p, i * np_ // nc), []).append(
-                            (name, i))
-                        cnt += 1
-                    remaining[(name, i)] = cnt
-        else:
-            for name in order:
-                cnt = sum(g.node(p).num_tasks for p in g.parents(name))
-                for i in range(g.node(name).num_tasks):
-                    remaining[(name, i)] = cnt
-
-        ready: list[tuple[int, int, int, str, int]] = []
-        for name in order:
-            if not g.parents(name):
-                for i in range(g.node(name).num_tasks):
-                    heapq.heappush(ready, (ranks[name], topo_pos[name], i,
-                                           name, i))
-        n_total = sum(g.node(n).num_tasks for n in order)
-        done_count = [0]
         records: list[TaskRecord] = []
         t0 = time.perf_counter()
 
-        def body(name: str, i: int) -> None:
+        def body(name: str, i: int, pool_idx: int) -> None:
             ts = g.node(name)
             start = time.perf_counter() - t0
             if self.launch_latency:
@@ -122,56 +98,24 @@ class RealExecutor:
                 time.sleep(durations[(name, i)] * self.tx_scale)
             end = time.perf_counter() - t0
             with cv:
-                cpus_free[0] = min(total.cpus,
-                                   cpus_free[0] + ts.cpus_per_task)
-                gpus_free[0] += ts.gpus_per_task
+                engine.complete(name, i)
                 records.append(TaskRecord(name, i, start, end,
-                                          ts.cpus_per_task, ts.gpus_per_task))
-                done_count[0] += 1
-                set_remaining[name] -= 1
-                if task_level:
-                    for cn, ci in child_waiters.get((name, i), ()):
-                        remaining[(cn, ci)] -= 1
-                        if remaining[(cn, ci)] == 0:
-                            heapq.heappush(ready, (ranks[cn], topo_pos[cn],
-                                                   ci, cn, ci))
-                elif set_remaining[name] == 0:
-                    nt = ts.num_tasks
-                    for c in g.children(name):
-                        for j in range(g.node(c).num_tasks):
-                            remaining[(c, j)] -= nt
-                            if remaining[(c, j)] == 0:
-                                heapq.heappush(ready, (ranks[c], topo_pos[c],
-                                                       j, c, j))
+                                          ts.cpus_per_task, ts.gpus_per_task,
+                                          pool=engine.pool_name(pool_idx)))
                 cv.notify_all()
 
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
-                while done_count[0] < n_total:
+                while not engine.done():
                     # backfill: start everything ready that fits
-                    skipped: list[tuple[int, int, int, str, int]] = []
-                    started = False
-                    while ready:
-                        item = heapq.heappop(ready)
-                        _, _, _, name, i = item
-                        ts = g.node(name)
-                        need_c = (0 if self.pool.oversubscribe_cpus
-                                  else ts.cpus_per_task)
-                        if need_c <= cpus_free[0] and \
-                                ts.gpus_per_task <= gpus_free[0]:
-                            if not self.pool.oversubscribe_cpus:
-                                cpus_free[0] -= ts.cpus_per_task
-                            gpus_free[0] -= ts.gpus_per_task
-                            ex.submit(body, name, i)
-                            started = True
-                        else:
-                            skipped.append(item)
-                    for it in skipped:
-                        heapq.heappush(ready, it)
-                    if done_count[0] < n_total and not (started and ready):
+                    batch = engine.startable()
+                    for name, i, pool_idx in batch:
+                        ex.submit(body, name, i, pool_idx)
+                    if not engine.done() and not batch:
                         cv.wait(timeout=5.0)
 
         makespan = max((r.end for r in records), default=0.0)
         return ExecResult(makespan=makespan, records=records,
                           mode=mode if not task_level else f"{mode}+task_level",
-                          tasks_total=len(records))
+                          tasks_total=len(records),
+                          policy=engine.policy.name)

@@ -86,6 +86,10 @@ class PoolSpec:
     #: allocation — reproducible only if concurrent GPU tasks may share
     #: devices.  Off by default (strict exclusive GPUs).
     oversubscribe_gpus: bool = False
+    #: placement constraint: when set, only task sets whose ``kind`` is in
+    #: this tuple may be placed on the pool (e.g. a debug partition that only
+    #: accepts ``aggregation`` tasks).  ``None`` accepts everything.
+    only_kinds: tuple[str, ...] | None = None
 
     @property
     def total(self) -> Resources:
@@ -93,6 +97,67 @@ class PoolSpec:
             self.num_nodes * self.node.cpus - self.reserved_cpus,
             self.num_nodes * self.node.gpus,
         )
+
+    def accepts(self, ts: TaskSet) -> bool:
+        """Static placement eligibility (ignores current occupancy)."""
+        if self.only_kinds is not None and ts.kind not in self.only_kinds:
+            return False
+        total = self.total
+        need_c = 0 if self.oversubscribe_cpus else ts.cpus_per_task
+        need_g = 0 if self.oversubscribe_gpus else ts.gpus_per_task
+        return need_c <= total.cpus and need_g <= total.gpus
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """A heterogeneous allocation: several :class:`PoolSpec` partitions
+    scheduled as one resource (e.g. Summit-like GPU nodes next to CPU-only
+    nodes).  Placement across pools is decided per task by the scheduling
+    policy (see ``sched_engine``)."""
+
+    name: str
+    pools: tuple[PoolSpec, ...]
+
+    def __post_init__(self):
+        if not self.pools:
+            raise ValueError("Allocation needs at least one pool")
+        names = [p.name for p in self.pools]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool names in allocation: {names}")
+
+    @property
+    def total(self) -> Resources:
+        out = Resources()
+        for p in self.pools:
+            out = out + p.total
+        return out
+
+    def pool(self, name: str) -> PoolSpec:
+        for p in self.pools:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+
+def as_allocation(pool: "PoolSpec | Allocation") -> Allocation:
+    """Normalise the single-pool and multi-pool call conventions."""
+    if isinstance(pool, Allocation):
+        return pool
+    return Allocation(pool.name, (pool,))
+
+
+def hybrid_pool(gpu_nodes: int = 8, cpu_nodes: int = 8,
+                gpu_node: NodeSpec = NodeSpec(cpus=48, gpus=6),
+                cpu_node: NodeSpec = NodeSpec(cpus=64, gpus=0),
+                name: str = "hybrid") -> Allocation:
+    """A Summit-like heterogeneous allocation: GPU nodes plus CPU-only
+    nodes.  GPU-node cores are oversubscribable (the paper's task sets are
+    GPU-bound there); the CPU partition is strict, so CPU-only work queues
+    honestly when packed around the GPU tasks."""
+    return Allocation(name, (
+        PoolSpec(f"{name}-gpu", gpu_nodes, gpu_node, oversubscribe_cpus=True),
+        PoolSpec(f"{name}-cpu", cpu_nodes, cpu_node),
+    ))
 
 
 def summit_pool(num_nodes: int = 16, oversubscribe_cpus: bool = True) -> PoolSpec:

@@ -1,5 +1,12 @@
 """Execution policies: named bundles of (mode, dependency granularity,
-stage grouping) consumed by both the simulator and the real executor."""
+stage grouping, scheduling policy) consumed by both the simulator and the
+real executor.
+
+The ``mode``/``task_level`` axes pick the paper's execution semantics
+(sequential / asynchronous / adaptive); ``scheduling`` picks the shared
+engine's placement policy (``fifo`` / ``lpt`` / ``gpu_bestfit``, see
+``sched_engine.SCHEDULING_POLICIES``).  The two axes compose freely.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +14,9 @@ import dataclasses
 from typing import Sequence
 
 from .dag import DAG
-from .resources import PoolSpec
+from .executor import ExecResult, RealExecutor
+from .resources import Allocation, PoolSpec
+from .sched_engine import SchedulingPolicy
 from .simulator import Mode, SimOptions, SimResult, simulate
 
 
@@ -19,13 +28,31 @@ class ExecutionPolicy:
     task_level: bool = False
     sequential_stage_groups: Sequence[Sequence[str]] | None = None
     name: str = ""
+    #: shared-engine scheduling policy name (or a SchedulingPolicy instance)
+    scheduling: "str | SchedulingPolicy" = "fifo"
 
-    def simulate(self, dag: DAG, pool: PoolSpec,
+    def simulate(self, dag: DAG, pool: "PoolSpec | Allocation",
                  options: SimOptions = SimOptions()) -> SimResult:
         return simulate(
             dag, pool, self.mode, options=options,
             task_level=self.task_level,
-            sequential_stage_groups=self.sequential_stage_groups)
+            sequential_stage_groups=self.sequential_stage_groups,
+            scheduling=self.scheduling)
+
+    def execute(self, dag: DAG, executor: RealExecutor) -> ExecResult:
+        """Run the same policy on the real executor (shared engine)."""
+        return executor.run(
+            dag, self.mode, task_level=self.task_level,
+            sequential_stage_groups=self.sequential_stage_groups,
+            scheduling=self.scheduling)
+
+    def with_scheduling(self, scheduling: "str | SchedulingPolicy"
+                        ) -> "ExecutionPolicy":
+        sched_name = (scheduling if isinstance(scheduling, str)
+                      else scheduling.name)
+        return dataclasses.replace(
+            self, scheduling=scheduling,
+            name=f"{self.name}+{sched_name}" if self.name else sched_name)
 
 
 def sequential_policy(stage_groups=None) -> ExecutionPolicy:
@@ -41,3 +68,14 @@ def async_policy() -> ExecutionPolicy:
 def adaptive_policy() -> ExecutionPolicy:
     """Task-level asynchronicity (the paper's future work; see adaptive.py)."""
     return ExecutionPolicy("async", True, None, "adaptive")
+
+
+def lpt_policy() -> ExecutionPolicy:
+    """Asynchronous mode with largest-TX-first dispatch order."""
+    return ExecutionPolicy("async", False, None, "lpt", scheduling="lpt")
+
+
+def gpu_bestfit_policy() -> ExecutionPolicy:
+    """Asynchronous mode with GPU-aware best-fit multi-pool placement."""
+    return ExecutionPolicy("async", False, None, "gpu_bestfit",
+                           scheduling="gpu_bestfit")

@@ -1,12 +1,18 @@
 """Discrete-event simulator for workflow execution on an allocation.
 
 This is the framework's "measured" analogue of the paper's Summit runs: it
-executes a task-set DG on a :class:`~repro.core.resources.PoolSpec` with a
-backfilling resource scheduler (the RADICAL-Pilot agent analogue), sampled
+executes a task-set DG on a :class:`~repro.core.resources.PoolSpec` (or a
+heterogeneous multi-pool :class:`~repro.core.resources.Allocation`) with a
+pluggable backfilling scheduler (the RADICAL-Pilot agent analogue), sampled
 task durations (``N(mu, 0.05 mu)``, Table 1/2 captions), EnTK-like dispatch
 overheads, and optional straggler injection + duplicate-dispatch
 mitigation.  A pure event loop over aggregate resource counters, it
 simulates thousands of nodes and ~10^5 tasks in well under a second.
+
+Scheduling decisions (ready-queue order, pool placement, dependency and
+resource bookkeeping) live in :class:`~repro.core.sched_engine.SchedEngine`,
+which the real executor shares — this module only advances the simulated
+clock.  Select a policy with ``scheduling="fifo" | "lpt" | "gpu_bestfit"``.
 
 Modes:
   ``async``       dependency-driven dispatch (the paper's asynchronous mode)
@@ -23,13 +29,21 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import random
-from collections import deque
 from typing import Literal, Sequence
 
 from .dag import DAG
-from .resources import PoolSpec
+from .resources import Allocation, PoolSpec, as_allocation
+from .sched_engine import SchedEngine, SchedulingPolicy
 
 Mode = Literal["async", "sequential"]
+
+
+def per_pool_task_counts(records: "Sequence[TaskRecord]") -> dict[str, int]:
+    """How many tasks each pool of the allocation executed."""
+    out: dict[str, int] = {}
+    for r in records:
+        out[r.pool] = out.get(r.pool, 0) + 1
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +55,8 @@ class TaskRecord:
     cpus: int
     gpus: int
     duplicate: bool = False
+    #: name of the pool the task was placed on ("" for legacy records)
+    pool: str = ""
 
     @property
     def duration(self) -> float:
@@ -59,6 +75,8 @@ class SimResult:
     gpu_utilization: float = 0.0
     tasks_total: int = 0
     duplicates: int = 0
+    #: scheduling policy used (see sched_engine.SCHEDULING_POLICIES)
+    policy: str = "fifo"
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -76,6 +94,9 @@ class SimResult:
                     cpu[i] += r.cpus
                     gpu[i] += r.gpus
         return ts, cpu, gpu
+
+    def per_pool_task_counts(self) -> dict[str, int]:
+        return per_pool_task_counts(self.records)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,26 +119,26 @@ class SimOptions:
     mitigation_threshold: float = 2.0
 
 
-def simulate(dag: DAG, pool: PoolSpec, mode: Mode = "async", *,
+def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
              options: SimOptions = SimOptions(),
              task_level: bool = False,
              sequential_stage_groups: Sequence[Sequence[str]] | None = None,
+             scheduling: "str | SchedulingPolicy" = "fifo",
              ) -> SimResult:
     """Run one workflow execution and return its schedule."""
     rng = random.Random(options.seed)
     g = dag if mode == "async" else dag.with_sequential_barriers(
         sequential_stage_groups)
-    total = pool.total
-    cpus_free = total.cpus
-    gpus_free = total.gpus
+    alloc = as_allocation(pool)
+    total = alloc.total
 
     overhead = (1 + options.entk_overhead)
     if mode == "async":
         overhead *= (1 + options.async_overhead)
 
     # ---- expand task sets into tasks -------------------------------------
-    order = g.topological_order()
-    ranks = g.ranks()
+    engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level)
+    order = engine.order
     durations: dict[tuple[str, int], float] = {}
     for name in order:
         ts = g.node(name)
@@ -130,46 +151,12 @@ def simulate(dag: DAG, pool: PoolSpec, mode: Mode = "async", *,
                 d *= options.straggler_factor
             durations[(name, i)] = d * overhead
 
-    remaining_parent_tasks: dict[tuple[str, int], int] = {}
-    set_remaining: dict[str, int] = {n: g.node(n).num_tasks for n in order}
-
-    def parents_satisfied(name: str, i: int) -> bool:
-        return remaining_parent_tasks[(name, i)] == 0
-
-    # dependency bookkeeping
-    if task_level:
-        # task i of a child set depends on task j of each parent set with
-        # j = i mapped proportionally (i * np // nc); a parent task may
-        # therefore unlock several child tasks.
-        child_waiters: dict[tuple[str, int], list[tuple[str, int]]] = {}
-        for name in order:
-            nc = g.node(name).num_tasks
-            for i in range(nc):
-                cnt = 0
-                for p in g.parents(name):
-                    np_ = g.node(p).num_tasks
-                    j = i * np_ // nc
-                    child_waiters.setdefault((p, j), []).append((name, i))
-                    cnt += 1
-                remaining_parent_tasks[(name, i)] = cnt
-    else:
-        # set-level: every task of a child set waits for *all* tasks of all
-        # parent sets (the paper's stage semantics).
-        for name in order:
-            cnt = sum(g.node(p).num_tasks for p in g.parents(name))
-            for i in range(g.node(name).num_tasks):
-                remaining_parent_tasks[(name, i)] = cnt
-
     # ---- event loop -------------------------------------------------------
-    # Ready bookkeeping is PER SET: all tasks of a set share (rank, topo
-    # position, resource footprint), so scheduling scans O(#sets) instead
-    # of O(#tasks) — the loop stays fast at 10^5+ tasks (4096-node runs).
-    topo_pos = {n: k for k, n in enumerate(order)}
-    set_priority = sorted(order, key=lambda n: (ranks[n], topo_pos[n]))
-    ready_sets: dict[str, deque] = {n: deque() for n in order}
-    finished: set[tuple[str, int]] = set()
+    # Ready bookkeeping is PER SET inside the engine: all tasks of a set
+    # share (rank, topo position, resource footprint), so scheduling scans
+    # O(#sets x #pools) instead of O(#tasks) — the loop stays fast at
+    # 10^5+ tasks (4096-node runs).
     running: dict[tuple[str, int], float] = {}
-    launched: set[tuple[str, int]] = set()
     records: list[TaskRecord] = []
     events: list[tuple[float, int, str, int, bool]] = []  # (t, seq, name, i, dup)
     seq = 0
@@ -178,75 +165,29 @@ def simulate(dag: DAG, pool: PoolSpec, mode: Mode = "async", *,
     duplicated: set[tuple[str, int]] = set()
     set_durations: dict[str, list[float]] = {}
 
-    def push_ready(name: str, i: int) -> None:
-        ready_sets[name].append(i)
-
-    for name in order:
-        if not g.parents(name):
-            for i in range(g.node(name).num_tasks):
-                push_ready(name, i)
-
     def try_start() -> None:
-        nonlocal cpus_free, gpus_free, seq
-        # backfill: walk sets in priority order, start whatever fits
-        for name in set_priority:
-            q = ready_sets[name]
-            if not q:
-                continue
-            ts = g.node(name)
-            need_c = ts.cpus_per_task if not pool.oversubscribe_cpus else 0
-            need_g = ts.gpus_per_task if not pool.oversubscribe_gpus else 0
-            n_fit = len(q)
-            if need_c:
-                n_fit = min(n_fit, cpus_free // need_c)
-            if need_g:
-                n_fit = min(n_fit, gpus_free // need_g)
-            for _ in range(max(0, n_fit)):
-                i = q.popleft()
-                if (name, i) in finished or (name, i) in launched:
-                    continue
-                if not pool.oversubscribe_cpus:
-                    cpus_free -= ts.cpus_per_task
-                if not pool.oversubscribe_gpus:
-                    gpus_free -= ts.gpus_per_task
-                launched.add((name, i))
-                end = now + options.launch_latency + durations[(name, i)]
-                running[(name, i)] = now
-                heapq.heappush(events, (end, seq, name, i, False))
-                seq += 1
+        nonlocal seq
+        for name, i, _pool in engine.startable():
+            end = now + options.launch_latency + durations[(name, i)]
+            running[(name, i)] = now
+            heapq.heappush(events, (end, seq, name, i, False))
+            seq += 1
 
     def complete(name: str, i: int) -> None:
-        nonlocal cpus_free, gpus_free
         ts = g.node(name)
         start = running.pop((name, i))
-        if not pool.oversubscribe_cpus:
-            cpus_free = min(total.cpus, cpus_free + ts.cpus_per_task)
-        if not pool.oversubscribe_gpus:
-            gpus_free += ts.gpus_per_task
-        finished.add((name, i))
+        k = engine.complete(name, i)
         records.append(TaskRecord(name, i, start, now,
-                                  ts.cpus_per_task, ts.gpus_per_task))
+                                  ts.cpus_per_task, ts.gpus_per_task,
+                                  pool=engine.pool_name(k)))
         set_durations.setdefault(name, []).append(now - start)
-        set_remaining[name] -= 1
-        if task_level:
-            for (cn, ci) in child_waiters.get((name, i), ()):  # type: ignore[union-attr]
-                remaining_parent_tasks[(cn, ci)] -= 1
-                if remaining_parent_tasks[(cn, ci)] == 0:
-                    push_ready(cn, ci)
-        elif set_remaining[name] == 0:
-            for c in g.children(name):
-                nt = g.node(name).num_tasks
-                for j in range(g.node(c).num_tasks):
-                    remaining_parent_tasks[(c, j)] -= nt
-                    if remaining_parent_tasks[(c, j)] == 0:
-                        push_ready(c, j)
 
     try_start()
     event_count = 0
     while events:
         now_, _, name, i, dup = heapq.heappop(events)
         now = now_
-        if (name, i) in finished:
+        if (name, i) in engine.finished:
             continue  # a duplicate already finished this task
         complete(name, i)
         event_count += 1
@@ -288,4 +229,5 @@ def simulate(dag: DAG, pool: PoolSpec, mode: Mode = "async", *,
                          if makespan and total.gpus else 0.0),
         tasks_total=len(records),
         duplicates=duplicates,
+        policy=engine.policy.name,
     )

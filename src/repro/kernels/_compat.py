@@ -1,0 +1,7 @@
+"""Version compatibility shims shared by the Pallas TPU kernels."""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams as _CompilerParams
+
 LOG_W_MIN = -60.0  # clamp: decays below e^-60 are numerically zero anyway
 
 
@@ -110,7 +112,7 @@ def rwkv6_pallas(r, k, v, w, u, *, block_t: int = 128, interpret: bool = False):
         out_specs=pl.BlockSpec((None, block_t, kk), lambda bh, ci: (bh, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, t, kk), r.dtype),
         scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, u)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams as _CompilerParams
+
 LOG_A_MIN = -60.0
 
 
@@ -104,7 +106,7 @@ def ssd_pallas(x, dt, a_log, b, c, d, *, block_t: int = 128,
         out_specs=pl.BlockSpec((None, block_t, p), lambda g, ci: (g, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((bs * h, t, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xf, dtf, a_log.reshape(h, 1), b, c, d.reshape(h, 1))

@@ -1,5 +1,10 @@
 """Hypothesis property tests over the core invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency "
+                    "(pip install -r requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,5 +1,10 @@
 """Hypothesis property tests on model-layer and analytic invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency "
+                    "(pip install -r requirements-dev.txt)")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

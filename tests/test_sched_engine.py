@@ -1,0 +1,234 @@
+"""Shared scheduling engine: policy semantics, heterogeneous multi-pool
+placement, and simulator-vs-RealExecutor equivalence (both substrates
+dispatch through the same SchedEngine, so their schedules must agree)."""
+
+import pytest
+
+from repro.core import (DAG, Allocation, ExecutionPolicy, NodeSpec, PoolSpec,
+                        RealExecutor, SchedEngine, SimOptions, TaskSet,
+                        fig2a_chain, fig2b_fork, fig2d_independent,
+                        get_scheduling_policy, gpu_bestfit_policy, lpt_policy,
+                        simulate)
+
+ALL_POLICIES = ("fifo", "lpt", "gpu_bestfit")
+
+
+def _no_noise():
+    return SimOptions(seed=0, sample_tx=False, entk_overhead=0.0,
+                      async_overhead=0.0, launch_latency=0.0)
+
+
+def _hybrid():
+    return Allocation("hyb", (
+        PoolSpec("gpu", num_nodes=1, node=NodeSpec(cpus=8, gpus=4),
+                 oversubscribe_cpus=True),
+        PoolSpec("cpu", num_nodes=1, node=NodeSpec(cpus=16, gpus=0)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# policy registry + priority-order semantics
+# ---------------------------------------------------------------------------
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        get_scheduling_policy("nope")
+    with pytest.raises(ValueError):
+        simulate(fig2a_chain(2), PoolSpec("p", 1, NodeSpec(4, 0)),
+                 scheduling="nope")
+
+
+def test_unplaceable_task_set_rejected():
+    g = DAG()
+    g.add(TaskSet("huge", 1, 1, 99, tx_mean=1.0))
+    with pytest.raises(ValueError, match="fits no pool"):
+        SchedEngine(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=4)))
+
+
+def test_fifo_runs_in_rank_order():
+    """Two independent single-GPU sets on one GPU slot: fifo keeps topo
+    (alphabetical-source) order regardless of duration."""
+    g = DAG()
+    g.add(TaskSet("ashort", 1, 1, 1, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("blong", 1, 1, 1, tx_mean=100.0, tx_sigma=0.0))
+    pool = PoolSpec("one-gpu", 1, NodeSpec(cpus=8, gpus=1))
+    res = simulate(g, pool, "async", options=_no_noise(), scheduling="fifo")
+    starts = {r.set_name: r.start for r in res.records}
+    assert starts["ashort"] < starts["blong"]
+
+
+def test_lpt_runs_largest_tx_first():
+    g = DAG()
+    g.add(TaskSet("ashort", 1, 1, 1, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("blong", 1, 1, 1, tx_mean=100.0, tx_sigma=0.0))
+    pool = PoolSpec("one-gpu", 1, NodeSpec(cpus=8, gpus=1))
+    res = simulate(g, pool, "async", options=_no_noise(), scheduling="lpt")
+    starts = {r.set_name: r.start for r in res.records}
+    assert starts["blong"] < starts["ashort"]
+    assert res.policy == "lpt"
+
+
+def test_gpu_bestfit_prioritises_gpu_sets():
+    """One free GPU + one free CPU slot, a GPU set and a CPU set both
+    ready: gpu_bestfit offers resources to the GPU set first."""
+    g = DAG()
+    g.add(TaskSet("acpu", 1, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("bgpu", 1, 1, 1, tx_mean=10.0, tx_sigma=0.0))
+    engine = SchedEngine(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=1)),
+                         policy="gpu_bestfit")
+    order = [name for name, _, _ in engine.startable()]
+    assert order == ["bgpu", "acpu"]
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous multi-pool placement
+# ---------------------------------------------------------------------------
+
+def test_gpu_bestfit_packs_cpu_tasks_on_cpu_pool():
+    g = DAG()
+    g.add(TaskSet("gputask", 4, 1, 1, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("cputask", 4, 4, 0, tx_mean=5.0, tx_sigma=0.0))
+    res = simulate(g, _hybrid(), "async", options=_no_noise(),
+                   scheduling="gpu_bestfit")
+    by_set = {}
+    for r in res.records:
+        by_set.setdefault(r.set_name, set()).add(r.pool)
+    assert by_set["gputask"] == {"gpu"}
+    assert by_set["cputask"] == {"cpu"}
+
+
+def test_per_pool_gpu_capacity_respected():
+    """Reconstruct per-pool concurrent GPU usage from the schedule: no
+    pool may ever exceed its own capacity (aggregate fit is not enough)."""
+    g = DAG()
+    g.add(TaskSet("gputask", 16, 1, 1, tx_mean=5.0, tx_sigma=0.0))
+    alloc = Allocation("two", (
+        PoolSpec("g1", 1, NodeSpec(cpus=8, gpus=2)),
+        PoolSpec("g2", 1, NodeSpec(cpus=8, gpus=3)),
+    ))
+    for policy in ALL_POLICIES:
+        res = simulate(g, alloc, "async", options=_no_noise(),
+                       scheduling=policy)
+        cap = {"g1": 2, "g2": 3}
+        for pool_name in cap:
+            events = []
+            for r in res.records:
+                if r.pool == pool_name:
+                    events.append((r.start, r.gpus))
+                    events.append((r.end, -r.gpus))
+            events.sort()
+            in_use = 0
+            for _, d in events:
+                in_use += d
+                assert in_use <= cap[pool_name], (policy, pool_name)
+        assert res.tasks_total == 16
+
+
+def test_only_kinds_constraint_restricts_placement():
+    alloc = Allocation("constrained", (
+        PoolSpec("anykind", 1, NodeSpec(cpus=4, gpus=0)),
+        PoolSpec("aggonly", 1, NodeSpec(cpus=16, gpus=0),
+                 only_kinds=("aggregation",)),
+    ))
+    g = DAG()
+    g.add(TaskSet("agg", 4, 4, 0, tx_mean=2.0, tx_sigma=0.0,
+                  kind="aggregation"))
+    g.add(TaskSet("gen", 4, 4, 0, tx_mean=2.0, tx_sigma=0.0))
+    res = simulate(g, alloc, "async", options=_no_noise())
+    for r in res.records:
+        if r.set_name == "gen":
+            assert r.pool == "anykind"  # generic work may not use aggonly
+    # generic tasks only fit one at a time -> they serialise
+    gen = sorted(r.start for r in res.records if r.set_name == "gen")
+    assert gen == sorted(set(gen))
+
+
+def test_hybrid_allocation_end_to_end_executor():
+    g = DAG()
+    g.add(TaskSet("gputask", 3, 1, 1, tx_mean=0.05, tx_sigma=0.0))
+    g.add(TaskSet("cputask", 3, 4, 0, tx_mean=0.05, tx_sigma=0.0))
+    res = RealExecutor(_hybrid()).run(g, "async", scheduling="gpu_bestfit")
+    counts = res.per_pool_task_counts()
+    assert counts.get("cpu") == 3 and counts.get("gpu") == 3
+
+
+# ---------------------------------------------------------------------------
+# async vs sequential invariants (Fig. 2 DGs, every policy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("build", [fig2a_chain, fig2b_fork,
+                                   fig2d_independent])
+def test_async_never_slower_than_sequential_fig2(build, policy):
+    g = build()
+    pool = PoolSpec("p", 4, NodeSpec(cpus=16, gpus=0))
+    opts = _no_noise()
+    rs = simulate(g, pool, "sequential", options=opts, scheduling=policy)
+    ra = simulate(g, pool, "async", options=opts, scheduling=policy)
+    assert ra.makespan <= rs.makespan * (1 + 1e-9)
+    assert ra.tasks_total == rs.tasks_total
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_dependencies_respected_under_all_policies(policy):
+    from repro.core import cdg_dag, summit_pool
+    g = cdg_dag("c-DG2")
+    res = simulate(g, summit_pool(), "async", options=_no_noise(),
+                   scheduling=policy)
+    end_of_set, start_of_set = {}, {}
+    for r in res.records:
+        end_of_set[r.set_name] = max(end_of_set.get(r.set_name, 0.0), r.end)
+        start_of_set[r.set_name] = min(start_of_set.get(r.set_name, 1e18),
+                                       r.start)
+    for u, v in g.edges():
+        assert start_of_set[v] >= end_of_set[u] - 1e-9, (policy, u, v)
+
+
+# ---------------------------------------------------------------------------
+# simulator vs RealExecutor equivalence (the shared-engine guarantee)
+# ---------------------------------------------------------------------------
+
+def _equiv_dag():
+    """Two branches + a join; enough structure for order to matter."""
+    g = DAG()
+    g.add(TaskSet("a0", 2, 1, 1, tx_mean=100.0, tx_sigma=0.0))
+    g.add(TaskSet("b1", 2, 1, 1, tx_mean=150.0, tx_sigma=0.0))
+    g.add(TaskSet("b2", 2, 2, 0, tx_mean=100.0, tx_sigma=0.0))
+    g.add(TaskSet("c3", 1, 1, 1, tx_mean=100.0, tx_sigma=0.0))
+    g.add_edge("a0", "b1")
+    g.add_edge("a0", "b2")
+    g.add_edge("b1", "c3")
+    g.add_edge("b2", "c3")
+    return g
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_simulator_matches_real_executor(policy):
+    """Same DAG + same policy through both substrates: the real executor's
+    wall-clock makespan (at tx_scale) must agree with the simulated one."""
+    g = _equiv_dag()
+    pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))
+    tx_scale = 1.5e-3  # 100 modelled s -> 0.15 wall s
+    sim = simulate(g, pool, "async", options=_no_noise(), scheduling=policy)
+    ex = RealExecutor(pool, tx_scale=tx_scale)
+    real = ex.run(g, "async", scheduling=policy)
+    assert real.tasks_total == sim.tasks_total
+    expected = sim.makespan * tx_scale
+    # thread wakeup/dispatch overhead only ever lengthens the real run
+    assert real.makespan >= expected * 0.9
+    assert real.makespan <= expected * 1.35 + 0.15, (policy, real.makespan,
+                                                     expected)
+
+
+def test_execution_policy_carries_scheduling_to_both_substrates():
+    g = _equiv_dag()
+    pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))
+    pol = lpt_policy()
+    sim = pol.simulate(g, pool, options=_no_noise())
+    assert sim.policy == "lpt"
+    real = pol.execute(g, RealExecutor(pool, tx_scale=1e-4))
+    assert real.policy == "lpt"
+    assert sim.tasks_total == real.tasks_total
+    pol2 = ExecutionPolicy().with_scheduling("gpu_bestfit")
+    assert pol2.simulate(g, pool, options=_no_noise()).policy == "gpu_bestfit"
+    assert gpu_bestfit_policy().scheduling == "gpu_bestfit"
