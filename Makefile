@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench-policies bench-paper
+.PHONY: test-fast test-all bench-policies bench-feedback bench-paper docs-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -14,6 +14,14 @@ test-all:
 ## scheduling-policy comparison on the paper's workloads
 bench-policies:
 	$(PY) benchmarks/bench_policies.py
+
+## runtime feedback: observed TX + straggler migration under heavy tails
+bench-feedback:
+	$(PY) benchmarks/bench_runtime_feedback.py
+
+## README/DESIGN sanity: referenced paths + policy names must exist
+docs-check:
+	$(PY) tools/docs_check.py
 
 ## the paper-reproduction benchmarks (Tables 1-3, Figs. 4-6)
 bench-paper:

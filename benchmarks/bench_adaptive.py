@@ -33,9 +33,11 @@ def main():
                 t_seq=round(cmp.sequential.makespan, 1),
                 t_async=round(cmp.asynchronous.makespan, 1),
                 t_adaptive=round(cmp.adaptive.makespan, 1),
+                t_observed=round(cmp.adaptive_observed.makespan, 1),
                 i_async=round(cmp.improvement_async, 3),
                 i_adaptive=round(cmp.improvement_adaptive, 3),
-                adaptive_gain=round(cmp.adaptive_gain_over_async, 3)))
+                adaptive_gain=round(cmp.adaptive_gain_over_async, 3),
+                observed_gain=round(cmp.observed_gain_over_adaptive, 3)))
     for r in rows:
         print("  " + "  ".join(f"{k}={v}" for k, v in r.items()))
     # adaptive must never be slower than set-level async

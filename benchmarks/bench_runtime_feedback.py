@@ -1,0 +1,155 @@
+"""Runtime-feedback scheduling under heavy-tailed durations + stragglers.
+
+The paper's model (Eqn. 5) assumes static mean task-execution times; real
+ML-driven HPC tasks are lognormal-ish with stragglers.  This benchmark
+stresses the paper's workloads (c-DG1 / c-DG2 Table 2, DeepDriveMD
+Table 1) with lognormal TX sampling and injected stragglers, on an
+allocation split into two partitions with a data-movement (transfer)
+cost between them, and compares three arms through the shared engine:
+
+- ``static``     fifo, static-TX scheduling (the paper's assumption);
+- ``static_lpt`` lpt with static TXs — isolates the ordering change so
+                 the feedback arms below are compared like-for-like;
+- ``observed``   runtime feedback on (online EWMA TX estimates re-rank
+                 ready sets under lpt) but migration disabled;
+- ``migration``  full feedback: stragglers are preempted and requeued on
+                 the other partition, paying the transfer cost.
+
+Also checks the new ``locality`` placement policy preserves the paper's
+headline: the shared-GPU c-DG2 async-vs-sequential win (I ~= 0.34
+simulated) must survive data-movement-aware placement.
+
+Writes ``benchmarks/out/runtime_feedback.json`` (uploaded as a CI
+artifact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import (CDG_SEQUENTIAL_GROUPS, Allocation, FeedbackOptions,
+                        SimOptions, cdg_dag, ddmd_sequential_stage_groups,
+                        deepdrivemd_dag, relative_improvement, simulate,
+                        summit_pool)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+WORKLOADS = {
+    "c-DG1": (lambda: cdg_dag("c-DG1"), CDG_SEQUENTIAL_GROUPS),
+    "c-DG2": (lambda: cdg_dag("c-DG2"), CDG_SEQUENTIAL_GROUPS),
+    "DeepDriveMD": (lambda: deepdrivemd_dag(3),
+                    ddmd_sequential_stage_groups(3)),
+}
+
+#: heavy-tailed durations + 10% of tasks stretched 16x — the regime the
+#: static-TX model knows nothing about
+HEAVY = dict(tx_distribution="lognormal", lognormal_sigma=0.5,
+             straggler_prob=0.1, straggler_factor=16.0)
+#: detection threshold: runtime > mean + 2 sigma of the running estimate
+FEEDBACK = FeedbackOptions(straggler_k=2.0)
+SEEDS = (3, 7, 11)
+
+
+def split_summit(num_nodes: int = 16, transfer: float = 10.0) -> Allocation:
+    """The paper's Summit allocation split into two equal partitions with a
+    symmetric data-movement cost (s) between them — the smallest topology
+    on which straggler migration and locality placement are non-trivial."""
+    half = summit_pool(num_nodes // 2)
+    return Allocation(
+        "summit-split",
+        (dataclasses.replace(half, name="summit-a"),
+         dataclasses.replace(half, name="summit-b")),
+        transfer_cost=((0.0, transfer), (transfer, 0.0)),
+    )
+
+
+def run_arms(which: str) -> dict:
+    build, _groups = WORKLOADS[which]
+    alloc = split_summit()
+    arms = {
+        "static": dict(scheduling="fifo", feedback=None),
+        "static_lpt": dict(scheduling="lpt", feedback=None),
+        "observed": dict(scheduling="lpt",
+                         feedback=dataclasses.replace(FEEDBACK,
+                                                      migrate=False)),
+        "migration": dict(scheduling="lpt", feedback=FEEDBACK),
+    }
+    out: dict = {"workload": which, "arms": {}}
+    for arm, kw in arms.items():
+        makespans, migrations = [], 0
+        for seed in SEEDS:
+            res = simulate(build(), alloc, "async",
+                           options=SimOptions(seed=seed, **HEAVY), **kw)
+            makespans.append(res.makespan)
+            migrations += res.migrations
+        out["arms"][arm] = dict(
+            makespan_mean=round(sum(makespans) / len(makespans), 1),
+            makespans=[round(m, 1) for m in makespans],
+            migrations=migrations,
+        )
+    return out
+
+
+def run_locality_headline() -> dict:
+    """The paper's shared-GPU c-DG2 async win under ``locality``."""
+    pool = dataclasses.replace(summit_pool(16), oversubscribe_gpus=True)
+    dag = cdg_dag("c-DG2")
+    opts = SimOptions(seed=11)
+    seq = simulate(dag, pool, "sequential", options=opts,
+                   sequential_stage_groups=CDG_SEQUENTIAL_GROUPS,
+                   scheduling="locality")
+    asy = simulate(dag, pool, "async", options=opts, scheduling="locality")
+    return dict(t_seq=round(seq.makespan, 1), t_async=round(asy.makespan, 1),
+                i=round(relative_improvement(seq.makespan, asy.makespan), 3))
+
+
+def main() -> dict:
+    print("== runtime-feedback scheduling (lognormal TX + 10% 16x "
+          "stragglers, split Summit allocation) ==")
+    print(f"  {'workload':12s} {'static':>10s} {'static_lpt':>10s} "
+          f"{'observed':>10s} {'migration':>10s} {'#migr':>6s}")
+    results = []
+    for which in WORKLOADS:
+        r = run_arms(which)
+        a = r["arms"]
+        print(f"  {which:12s} {a['static']['makespan_mean']:10.1f} "
+              f"{a['static_lpt']['makespan_mean']:10.1f} "
+              f"{a['observed']['makespan_mean']:10.1f} "
+              f"{a['migration']['makespan_mean']:10.1f} "
+              f"{a['migration']['migrations']:6d}")
+        results.append(r)
+        if which == "c-DG2":
+            # acceptance: observed-TX + migration must not lose to the
+            # static-TX fifo baseline under stragglers...
+            assert a["migration"]["makespan_mean"] <= \
+                a["static"]["makespan_mean"] * 1.001, a
+            # ...and the win must come from the feedback layer, not from
+            # the fifo->lpt ordering switch (same-ordering comparison)
+            assert a["migration"]["makespan_mean"] <= \
+                a["static_lpt"]["makespan_mean"] * 1.001, a
+            assert a["migration"]["migrations"] > 0, a
+
+    print("  (static == static_lpt == observed is expected here: these "
+          "makespans are tail-straggler-bound,\n   so dispatch ordering "
+          "cannot move them — the whole win is preemption + migration)")
+    loc = run_locality_headline()
+    print(f"-- locality policy, shared-GPU c-DG2 (paper headline) --")
+    print(f"  t_seq={loc['t_seq']} t_async={loc['t_async']} I={loc['i']}")
+    # the paper's async win (I ~= 0.34 simulated) survives locality-aware
+    # placement
+    assert loc["i"] > 0.25, loc
+
+    out = {"config": HEAVY, "seeds": list(SEEDS), "workloads": results,
+           "locality_cdg2_shared": loc}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "runtime_feedback.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  agreement: OK (wrote {os.path.relpath(path)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

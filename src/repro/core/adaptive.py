@@ -12,7 +12,11 @@ released as soon as the parent tasks it actually consumes are done, so
    they have no pairwise dependencies (Fig. 3b: ``T1`` and ``T5``).
 
 `compare_policies` quantifies the additional improvement adaptive
-execution yields on top of the paper's set-level asynchronicity.
+execution yields on top of the paper's set-level asynchronicity, and —
+since the runtime-feedback layer — the further gain of driving the
+adaptive scheduler by OBSERVED runtime TX (online EWMA estimates,
+straggler preemption + migration) instead of static ``tx_mean``
+(the ``adaptive_observed`` arm).
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 
 from .dag import DAG
+from .estimator import FeedbackOptions
 from .model import relative_improvement
 from .resources import PoolSpec
 from .simulator import SimOptions, SimResult, simulate
@@ -30,6 +35,8 @@ class PolicyComparison:
     sequential: SimResult
     asynchronous: SimResult
     adaptive: SimResult
+    #: adaptive + runtime feedback (observed TX, straggler migration)
+    adaptive_observed: SimResult
 
     @property
     def improvement_async(self) -> float:
@@ -48,15 +55,39 @@ class PolicyComparison:
         return relative_improvement(self.asynchronous.makespan,
                                     self.adaptive.makespan)
 
+    @property
+    def improvement_observed(self) -> float:
+        """Sequential -> adaptive with runtime feedback."""
+        return relative_improvement(self.sequential.makespan,
+                                    self.adaptive_observed.makespan)
+
+    @property
+    def observed_gain_over_adaptive(self) -> float:
+        """What the runtime-feedback layer adds on top of static-TX
+        adaptive scheduling (positive when feedback helps)."""
+        return relative_improvement(self.adaptive.makespan,
+                                    self.adaptive_observed.makespan)
+
 
 def compare_policies(dag: DAG, pool: PoolSpec, *,
                      options: SimOptions = SimOptions(),
-                     sequential_stage_groups=None) -> PolicyComparison:
-    """Simulate the three execution policies on one workflow DG."""
+                     sequential_stage_groups=None,
+                     feedback: FeedbackOptions = FeedbackOptions(),
+                     observed_scheduling: str = "fifo") -> PolicyComparison:
+    """Simulate the four execution policies on one workflow DG.
+
+    The ``adaptive_observed`` arm shares the adaptive arm's task-level
+    dependencies and ``observed_scheduling`` ordering (fifo by default, so
+    the delta to ``adaptive`` isolates the feedback layer; pass "lpt" to
+    also re-rank sets by observed TX)."""
     return PolicyComparison(
         sequential=simulate(dag, pool, "sequential", options=options,
                             sequential_stage_groups=sequential_stage_groups),
         asynchronous=simulate(dag, pool, "async", options=options),
         adaptive=simulate(dag, pool, "async", options=options,
                           task_level=True),
+        adaptive_observed=simulate(dag, pool, "async", options=options,
+                                   task_level=True,
+                                   scheduling=observed_scheduling,
+                                   feedback=feedback),
     )

@@ -1,0 +1,159 @@
+"""Online task-execution-time (TX) estimation — the runtime-feedback half
+of the scheduling engine.
+
+The paper's asynchronicity model (Eqn. 5) and its EnTK experiments assume
+*static* mean task execution times (``TaskSet.tx_mean``).  Real ML-driven
+HPC workflows have heavy-tailed, drifting durations, so this module gives
+the engine an *observed* view of TX:
+
+``TxEstimator``
+    Per-task-set exponentially weighted moving average (EWMA) mean and
+    variance over completed task durations.  Policies consult it (through
+    :meth:`~repro.core.sched_engine.SchedEngine.tx_estimate`) instead of
+    the static ``tx_mean`` once a set has ``min_samples`` completions;
+    before that the static value is the prior.
+
+``FeedbackOptions``
+    The knobs of the feedback loop: EWMA decay, straggler detection
+    threshold (runtime > mean + k*sigma above the set's running estimate),
+    and the migration cost model (base data-movement cost + the
+    allocation's per-pool-pair ``transfer_cost`` matrix, no-op'd when the
+    cost exceeds the expected benefit).
+
+Both execution substrates (``simulate()`` and ``RealExecutor.run()``) feed
+completions back via ``SchedEngine.observe``; see DESIGN.md
+("Runtime-feedback layer") for the estimator -> policy -> engine loop and
+the straggler/migration state machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Mapping
+
+
+@dataclasses.dataclass
+class SetEstimate:
+    """Running EWMA statistics for one task set."""
+
+    mean: float = 0.0
+    var: float = 0.0
+    count: int = 0
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(max(0.0, self.var))
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackOptions:
+    """Configuration of the runtime-feedback loop (estimator + straggler
+    mitigation).  ``FeedbackOptions()`` enables observed-TX estimation and
+    preemption + migration with conservative defaults; ``migrate=False``
+    keeps the estimator but never moves a running task."""
+
+    #: EWMA decay: weight of the newest observation (0 < alpha <= 1).
+    ewma_alpha: float = 0.25
+    #: completions of a set required before its observed estimate replaces
+    #: the static ``tx_mean`` prior (and before straggler detection arms).
+    min_samples: int = 3
+    #: a running task is a straggler when
+    #: ``runtime > mean + straggler_k * sigma`` ...
+    straggler_k: float = 3.0
+    #: ... and ``runtime > straggler_min_ratio * mean`` (guards task sets
+    #: whose observed sigma collapsed to ~0).
+    straggler_min_ratio: float = 1.5
+    #: master switch for preemption + migration (estimation always runs).
+    migrate: bool = True
+    #: fixed data-movement cost charged on every migration (seconds),
+    #: added to the allocation's ``transfer_cost[src][dst]``.
+    migration_base_cost: float = 0.0
+    #: no-op the migration when its total cost exceeds this multiple of
+    #: the set's estimated mean TX (cost would exceed the benefit).
+    max_cost_ratio: float = 1.0
+    #: migrations allowed per task (prevents pool ping-ponging).
+    max_migrations_per_task: int = 1
+    #: winsorize observations at this multiple of the running mean before
+    #: they enter the EWMA, so straggler durations cannot contaminate the
+    #: estimate they are detected against (0 disables clipping).
+    winsorize_ratio: float = 4.0
+    #: simulator straggler-watchdog period (s).  0 = auto (half the
+    #: smallest positive set mean).  Completions also trigger scans; the
+    #: periodic watchdog exists so a lone tail straggler — with no other
+    #: completions left to piggyback on — is still detected.  The real
+    #: executor's watchdog runs on its dispatcher wakeups instead.
+    watchdog_interval: float = 0.0
+
+
+class TxEstimator:
+    """Per-set EWMA mean + variance over observed task durations.
+
+    The update is the standard exponentially weighted mean/variance pair
+    (West 1979): with ``d = x - mean``::
+
+        mean <- mean + alpha * d
+        var  <- (1 - alpha) * (var + alpha * d^2)
+
+    The first observation initialises ``mean = x, var = 0``.  ``alpha``
+    close to 1 tracks drift aggressively; close to 0 averages long-term.
+    """
+
+    def __init__(self, alpha: float = 0.25,
+                 prior: "Mapping[str, float] | None" = None):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        #: static fallback means (typically ``TaskSet.tx_mean``), returned
+        #: by :meth:`mean` until a set has observations.
+        self.prior: dict[str, float] = dict(prior or {})
+        self._est: dict[str, SetEstimate] = {}
+
+    # -- updates -----------------------------------------------------------
+    def observe(self, name: str, duration: float) -> SetEstimate:
+        """Fold one completed task's duration into the set's estimate."""
+        e = self._est.get(name)
+        if e is None:
+            e = self._est[name] = SetEstimate(mean=float(duration))
+        else:
+            d = duration - e.mean
+            e.mean += self.alpha * d
+            e.var = (1.0 - self.alpha) * (e.var + self.alpha * d * d)
+        e.count += 1
+        return e
+
+    def observe_many(self, name: str, durations: Iterable[float]) -> None:
+        for d in durations:
+            self.observe(name, d)
+
+    # -- queries -----------------------------------------------------------
+    def count(self, name: str) -> int:
+        e = self._est.get(name)
+        return e.count if e else 0
+
+    def mean(self, name: str, default: float = 0.0) -> float:
+        """Observed EWMA mean, falling back to the prior, then ``default``."""
+        e = self._est.get(name)
+        if e is not None and e.count > 0:
+            return e.mean
+        return self.prior.get(name, default)
+
+    def std(self, name: str, default: float = 0.0) -> float:
+        e = self._est.get(name)
+        if e is not None and e.count > 1:
+            return e.std
+        return default
+
+    def is_straggler(self, name: str, runtime: float,
+                     fb: FeedbackOptions) -> bool:
+        """Straggler test against the set's *running* estimate: armed only
+        after ``min_samples`` completions of the set."""
+        e = self._est.get(name)
+        if e is None or e.count < fb.min_samples:
+            return False
+        return (runtime > e.mean + fb.straggler_k * e.std
+                and runtime > fb.straggler_min_ratio * e.mean)
+
+    def snapshot(self) -> dict[str, SetEstimate]:
+        """A copy of every per-set estimate (for reporting/benchmarks)."""
+        return {n: dataclasses.replace(e) for n, e in self._est.items()}

@@ -17,7 +17,12 @@ resource accounting and placement — are delegated to the SAME
 :class:`~repro.core.sched_engine.SchedEngine` the discrete-event simulator
 uses, so the two substrates enforce identical semantics by construction.
 Heterogeneous multi-pool :class:`~repro.core.resources.Allocation`s and
-the ``fifo`` / ``lpt`` / ``gpu_bestfit`` policies work unchanged here.
+the ``fifo`` / ``lpt`` / ``gpu_bestfit`` / ``locality`` policies work
+unchanged here, as does runtime feedback (``feedback=FeedbackOptions()``):
+completions feed the shared engine's online TX estimator, and a watchdog
+in the dispatcher preempts stragglers and resubmits them on a different
+pool (the abandoned attempt is invalidated by generation, exactly like
+the simulator's migration events).
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 from .dag import DAG
+from .estimator import FeedbackOptions
 from .resources import Allocation, PoolSpec
 from .sched_engine import SchedEngine, SchedulingPolicy
 from .simulator import Mode, TaskRecord, per_pool_task_counts
@@ -42,6 +48,8 @@ class ExecResult:
     mode: str
     tasks_total: int
     policy: str = "fifo"
+    #: straggler preemption + migration count (runtime feedback enabled)
+    migrations: int = 0
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -55,7 +63,9 @@ class RealExecutor:
 
     def __init__(self, pool: "PoolSpec | Allocation", max_workers: int = 64,
                  tx_scale: float = 1.0, seed: int = 0,
-                 launch_latency: float = 0.0):
+                 launch_latency: float = 0.0,
+                 straggler_prob: float = 0.0,
+                 straggler_factor: float = 4.0):
         self.pool = pool
         self.max_workers = max_workers
         #: wall-seconds per modelled TX second for synthetic payloads
@@ -63,16 +73,21 @@ class RealExecutor:
         self.tx_scale = tx_scale
         self.seed = seed
         self.launch_latency = launch_latency
+        #: straggler injection for synthetic payloads (mirrors SimOptions):
+        #: with probability p a task's sampled TX is stretched xfactor.
+        self.straggler_prob = straggler_prob
+        self.straggler_factor = straggler_factor
 
     def run(self, dag: DAG, mode: Mode = "async", *, task_level: bool = False,
             sequential_stage_groups: Sequence[Sequence[str]] | None = None,
             scheduling: "str | SchedulingPolicy" = "fifo",
+            feedback: "FeedbackOptions | None" = None,
             ) -> ExecResult:
         g = dag if mode == "async" else dag.with_sequential_barriers(
             sequential_stage_groups)
         rng = random.Random(self.seed)
         engine = SchedEngine(g, self.pool, policy=scheduling,
-                             task_level=task_level)
+                             task_level=task_level, feedback=feedback)
 
         durations: dict[tuple[str, int], float] = {}
         for name in engine.order:
@@ -80,42 +95,132 @@ class RealExecutor:
             for i in range(ts.num_tasks):
                 mu = ts.tx_mean
                 d = max(0.0, rng.gauss(mu, ts.tx_sigma)) if mu else 0.0
+                if self.straggler_prob and rng.random() < self.straggler_prob:
+                    d *= self.straggler_factor
                 durations[(name, i)] = d
 
         lock = threading.Lock()
         cv = threading.Condition(lock)
         records: list[TaskRecord] = []
+        #: wall start of the task's CURRENT attempt, stamped when a worker
+        #: actually begins it (NOT at submit — tasks queued behind
+        #: max_workers must not accrue phantom straggler runtime) and
+        #: absent between a preemption and its re-run's first breath
+        started: dict[tuple[str, int], float] = {}
+        #: wall start of the FIRST attempt (task records span the task)
+        first_start: dict[tuple[str, int], float] = {}
+        #: attempt generation; a migration bumps it, invalidating the
+        #: preempted attempt's completion (same scheme as the simulator)
+        gen: dict[tuple[str, int], int] = {}
         t0 = time.perf_counter()
 
-        def body(name: str, i: int, pool_idx: int) -> None:
+        def preemptible_sleep(name: str, i: int, my_gen: int,
+                              seconds: float) -> bool:
+            """Sleep that wakes early when the attempt is preempted (gen
+            bumped), so an abandoned synthetic attempt does not hold its
+            worker slot for the full straggler duration.  True = slept to
+            completion, False = preempted.  (Real payloads cannot be
+            interrupted this way — they run to completion and their stale
+            result is discarded at the gen check.)"""
+            deadline = time.perf_counter() + seconds
+            with cv:
+                while True:
+                    if my_gen != gen.get((name, i), 0):
+                        return False
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        return True
+                    cv.wait(timeout=remaining)
+
+        def body(name: str, i: int, pool_idx: int, my_gen: int,
+                 migration_cost: float = 0.0,
+                 rerun_tx: float = 0.0) -> None:
             ts = g.node(name)
-            start = time.perf_counter() - t0
+            with cv:
+                if my_gen != gen.get((name, i), 0):
+                    return  # superseded while still queued
+                first_start.setdefault((name, i),
+                                       time.perf_counter() - t0)
             if self.launch_latency:
                 time.sleep(self.launch_latency)
+            if migration_cost:
+                # data movement for a migrated re-run
+                time.sleep(migration_cost * self.tx_scale)
+            with cv:
+                if my_gen != gen.get((name, i), 0):
+                    return
+                # straggler/estimator clock starts when the WORK starts:
+                # raw launch latency and migration cost must not read as
+                # (tx_scale-modelled) task duration
+                started[(name, i)] = time.perf_counter() - t0
             if ts.payload is not None:
                 ts.payload(i)
+            elif my_gen:
+                # migrated re-run (regardless of the fabric's cost): a
+                # fresh attempt at the TX estimate read at preemption time
+                if not preemptible_sleep(name, i, my_gen,
+                                         rerun_tx * self.tx_scale):
+                    return
             else:
-                time.sleep(durations[(name, i)] * self.tx_scale)
+                if not preemptible_sleep(name, i, my_gen,
+                                         durations[(name, i)]
+                                         * self.tx_scale):
+                    return
             end = time.perf_counter() - t0
             with cv:
+                if my_gen != gen.get((name, i), 0):
+                    return  # preempted + migrated; a newer attempt owns it
+                attempt_start = started.pop((name, i), end)
+                start = first_start.pop((name, i), attempt_start)
                 engine.complete(name, i)
+                # observe in MODELLED seconds (wall / tx_scale) so the
+                # estimates stay commensurate with the tx_mean priors and
+                # the allocation's transfer costs
+                engine.observe(name, (end - attempt_start) / self.tx_scale)
                 records.append(TaskRecord(name, i, start, end,
                                           ts.cpus_per_task, ts.gpus_per_task,
-                                          pool=engine.pool_name(pool_idx)))
+                                          pool=engine.pool_name(pool_idx),
+                                          migrated=(name, i) in gen))
                 cv.notify_all()
 
+        # no watchdog on single-pool allocations: try_migrate can never
+        # find a target, so don't busy-poll the dispatcher for it
+        watchdog = (feedback is not None and feedback.migrate
+                    and len(engine.pools) > 1)
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
                 while not engine.done():
                     # backfill: start everything ready that fits
                     batch = engine.startable()
                     for name, i, pool_idx in batch:
-                        ex.submit(body, name, i, pool_idx)
+                        ex.submit(body, name, i, pool_idx, 0)
                     if not engine.done() and not batch:
-                        cv.wait(timeout=5.0)
+                        # with migration on, the wait doubles as the
+                        # straggler watchdog cadence
+                        cv.wait(timeout=0.05 if watchdog else 5.0)
+                    if watchdog:
+                        # straggler scan on the modelled clock (see observe)
+                        now = (time.perf_counter() - t0) / self.tx_scale
+                        modelled = {k: v / self.tx_scale
+                                    for k, v in started.items()}
+                        for (sn, si) in engine.stragglers(modelled, now):
+                            mig = engine.try_migrate(sn, si)
+                            if mig is None:
+                                continue
+                            dst, cost = mig
+                            gen[(sn, si)] = gen.get((sn, si), 0) + 1
+                            # straggler clock pauses until the re-run's
+                            # worker stamps its own start
+                            started.pop((sn, si), None)
+                            ex.submit(body, sn, si, dst, gen[(sn, si)],
+                                      cost, engine.tx_estimate(sn))
+                            # wake preempted synthetic sleeps so they
+                            # release their worker slots promptly
+                            cv.notify_all()
 
         makespan = max((r.end for r in records), default=0.0)
         return ExecResult(makespan=makespan, records=records,
                           mode=mode if not task_level else f"{mode}+task_level",
                           tasks_total=len(records),
-                          policy=engine.policy.name)
+                          policy=engine.policy.name,
+                          migrations=engine.migrations)

@@ -6,6 +6,19 @@ The paper's experiments allocate 16 Summit nodes: 706 usable CPU cores and
 GPUs/accelerators (with an optional node layout for placement-aware
 policies).  Tasks are black boxes with a (cpus, gpus) footprint.
 
+Building blocks (consumed by ``core/sched_engine.py``; see DESIGN.md):
+
+- :class:`Resources` — a partially ordered (cpus, gpus) footprint;
+- :class:`NodeSpec` / :class:`PoolSpec` — one homogeneous partition, with
+  per-pool ``oversubscribe_cpus`` / ``oversubscribe_gpus`` flags and an
+  optional ``only_kinds`` placement constraint;
+- :class:`Allocation` — several pools scheduled as one heterogeneous
+  resource, plus an optional pairwise ``transfer_cost`` data-movement
+  matrix used by the ``locality`` scheduling policy and by straggler
+  migration;
+- builders: :func:`summit_pool` (the paper's 16-node allocation),
+  :func:`hybrid_pool` (GPU + CPU-only partitions), :func:`tpu_pod_pool`.
+
 ``DOA_res`` in the paper is computed informally; it reasons with *full task
 set* footprints for DeepDriveMD ("each Inference task set requires all
 available resources") and with *task-level* footprints for the abstract-DG
@@ -113,10 +126,20 @@ class Allocation:
     """A heterogeneous allocation: several :class:`PoolSpec` partitions
     scheduled as one resource (e.g. Summit-like GPU nodes next to CPU-only
     nodes).  Placement across pools is decided per task by the scheduling
-    policy (see ``sched_engine``)."""
+    policy (see ``sched_engine``).
+
+    ``transfer_cost`` models data movement between pools: entry ``[i][j]``
+    is the cost in seconds of moving one task's inputs from pool ``i`` to
+    pool ``j``.  The ``locality`` scheduling policy weighs it against
+    queue depth when placing tasks, and straggler migration charges it on
+    every preemption + requeue (see ``core/estimator.FeedbackOptions``).
+    ``None`` means free movement (a uniform fabric)."""
 
     name: str
     pools: tuple[PoolSpec, ...]
+    #: pairwise data-movement cost matrix, seconds, indexed [src][dst];
+    #: must be square over ``pools`` with non-negative entries.
+    transfer_cost: tuple[tuple[float, ...], ...] | None = None
 
     def __post_init__(self):
         if not self.pools:
@@ -124,6 +147,23 @@ class Allocation:
         names = [p.name for p in self.pools]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate pool names in allocation: {names}")
+        if self.transfer_cost is not None:
+            tc = tuple(tuple(float(c) for c in row)
+                       for row in self.transfer_cost)
+            if len(tc) != len(self.pools) or \
+                    any(len(row) != len(self.pools) for row in tc):
+                raise ValueError(
+                    f"transfer_cost must be {len(self.pools)}x"
+                    f"{len(self.pools)} to match pools")
+            if any(c < 0 for row in tc for c in row):
+                raise ValueError("transfer_cost entries must be >= 0")
+            object.__setattr__(self, "transfer_cost", tc)
+
+    def transfer(self, src: int, dst: int) -> float:
+        """Data-movement cost (s) from pool ``src`` to pool ``dst``."""
+        if self.transfer_cost is None or src == dst:
+            return 0.0
+        return self.transfer_cost[src][dst]
 
     @property
     def total(self) -> Resources:
@@ -149,15 +189,20 @@ def as_allocation(pool: "PoolSpec | Allocation") -> Allocation:
 def hybrid_pool(gpu_nodes: int = 8, cpu_nodes: int = 8,
                 gpu_node: NodeSpec = NodeSpec(cpus=48, gpus=6),
                 cpu_node: NodeSpec = NodeSpec(cpus=64, gpus=0),
-                name: str = "hybrid") -> Allocation:
+                name: str = "hybrid",
+                transfer_cost: float = 0.0) -> Allocation:
     """A Summit-like heterogeneous allocation: GPU nodes plus CPU-only
     nodes.  GPU-node cores are oversubscribable (the paper's task sets are
     GPU-bound there); the CPU partition is strict, so CPU-only work queues
-    honestly when packed around the GPU tasks."""
+    honestly when packed around the GPU tasks.  ``transfer_cost`` is the
+    symmetric data-movement cost (s) between the two partitions."""
+    tc = None
+    if transfer_cost:
+        tc = ((0.0, float(transfer_cost)), (float(transfer_cost), 0.0))
     return Allocation(name, (
         PoolSpec(f"{name}-gpu", gpu_nodes, gpu_node, oversubscribe_cpus=True),
         PoolSpec(f"{name}-cpu", cpu_nodes, cpu_node),
-    ))
+    ), transfer_cost=tc)
 
 
 def summit_pool(num_nodes: int = 16, oversubscribe_cpus: bool = True) -> PoolSpec:

@@ -18,7 +18,7 @@ the engine owns
 The substrates only decide *when* completions happen (simulated clock vs
 wall clock) and feed them back via :meth:`SchedEngine.complete`.
 
-Policies
+Policies (registry: ``SCHEDULING_POLICIES``; table mirrored in DESIGN.md)
 --------
 ``fifo``         rank/topo FIFO with backfilling — the behaviour both
                  substrates hard-coded before this engine existed, and the
@@ -26,10 +26,34 @@ Policies
 ``lpt``          largest-TX-first (longest processing time): ready sets with
                  the largest mean task duration are offered resources first,
                  the classic makespan heuristic for malleable bags of tasks.
+                 Consults the *observed* TX estimate when runtime feedback
+                 is enabled.
 ``gpu_bestfit``  GPU-aware best fit: GPU task sets are placed first on the
                  pool whose free GPUs they fill tightest; CPU-only tasks are
                  packed *around* them, preferring GPU-less pools so GPU-node
                  cores stay available for GPU-task co-scheduling.
+``locality``     data-movement-aware placement: each task scores every
+                 eligible pool by the cost of pulling its parents' outputs
+                 there (the allocation's ``transfer_cost`` matrix) plus a
+                 queue-depth penalty, and waits for its cheapest pool unless
+                 an idling pool may *steal* it (bounded steals per dispatch
+                 pass).
+
+Runtime feedback (``core/estimator.py``)
+----------------------------------------
+Constructed with ``feedback=FeedbackOptions(...)``, the engine keeps a
+per-set online TX estimate (EWMA mean + variance over completions fed in
+via :meth:`SchedEngine.observe`); :meth:`SchedEngine.tx_estimate` serves
+policies the observed mean once a set has ``min_samples`` completions and
+the static ``tx_mean`` prior before that, and the set priority order is
+recomputed whenever estimates move.  :meth:`SchedEngine.stragglers` flags
+running tasks whose runtime exceeds ``mean + k*sigma`` of the running
+estimate, and :meth:`SchedEngine.try_migrate` preempts + requeues such a
+task onto a different pool — releasing the source pool's resources,
+charging ``migration_base_cost + transfer_cost[src][dst]`` — unless the
+cost exceeds the expected benefit (``max_cost_ratio`` x estimated TX), no
+other pool fits, or the task already migrated ``max_migrations_per_task``
+times.
 
 Scheduling stays O(#ready sets x #pools) per dispatch round — all tasks of
 a set share one footprint — so the engine sustains the simulator's 10^5-task
@@ -43,6 +67,7 @@ from collections import deque
 from typing import Sequence
 
 from .dag import DAG, TaskSet
+from .estimator import FeedbackOptions, TxEstimator
 from .resources import Allocation, PoolSpec, as_allocation
 
 
@@ -66,17 +91,31 @@ class SchedulingPolicy:
     ``order_sets`` fixes the priority in which ready sets are offered free
     resources (backfilling walks this order and starts whatever fits).
     ``choose_pool`` picks among the pools that can start one task of ``ts``
-    right now; it is only consulted when more than one pool fits.
+    right now; it is only consulted when more than one pool fits.  A policy
+    may return ``None`` to *defer* the task (hold it for a pool that is
+    currently busy — see ``locality``); the engine re-offers it on the next
+    dispatch pass.  ``begin_pass`` is called once at the start of every
+    :meth:`SchedEngine.startable` pass (for per-pass budgets).
+
+    When runtime feedback is enabled the ``SetInfo.tx_mean`` values passed
+    to ``order_sets`` are the engine's *observed* estimates
+    (:meth:`SchedEngine.tx_estimate`), not the static priors.
     """
 
     name = "base"
+    #: True when ``order_sets`` reads ``SetInfo.tx_mean`` — only such
+    #: policies need their priority rebuilt as TX observations arrive.
+    uses_tx = False
 
     def order_sets(self, sets: Sequence[SetInfo]) -> list[str]:
         raise NotImplementedError
 
     def choose_pool(self, ts: TaskSet, candidates: Sequence[int],
-                    engine: "SchedEngine") -> int:
+                    engine: "SchedEngine") -> "int | None":
         return candidates[0]
+
+    def begin_pass(self, engine: "SchedEngine") -> None:
+        pass
 
 
 class FifoBackfill(SchedulingPolicy):
@@ -92,6 +131,7 @@ class LargestTxFirst(SchedulingPolicy):
     """LPT: among ready sets, largest mean task duration first."""
 
     name = "lpt"
+    uses_tx = True
 
     def order_sets(self, sets: Sequence[SetInfo]) -> list[str]:
         return [s.name for s in
@@ -122,10 +162,57 @@ class GpuAwareBestFit(SchedulingPolicy):
                                   engine.free_cpus[k] - ts.cpus_per_task))
 
 
+class LocalityAware(SchedulingPolicy):
+    """Data-movement-aware placement with bounded work stealing.
+
+    Each task scores every eligible pool by ``data_cost + queue_weight x
+    running-task count``, where ``data_cost`` is the mean cost of pulling
+    the task's parent outputs to that pool (the allocation's
+    ``transfer_cost`` matrix weighted by where the parent tasks actually
+    ran — see :meth:`SchedEngine.data_cost`).  If the cheapest pool has
+    free capacity the task is placed there; otherwise an *idling* pool
+    (free capacity, higher data cost) may steal it, but only
+    ``steal_budget`` times per dispatch pass — beyond that the task waits
+    for its data-local pool.  With no ``transfer_cost`` matrix the score
+    degenerates to queue depth, i.e. pure load balancing."""
+
+    name = "locality"
+
+    def __init__(self, queue_weight: float = 0.1, steal_budget: int = 4):
+        self.queue_weight = queue_weight
+        self.steal_budget = steal_budget
+        self._steals_left = steal_budget
+
+    def begin_pass(self, engine: "SchedEngine") -> None:
+        self._steals_left = self.steal_budget
+
+    def order_sets(self, sets: Sequence[SetInfo]) -> list[str]:
+        return [s.name for s in sorted(sets, key=lambda s: (s.rank, s.topo))]
+
+    def _score(self, ts: TaskSet, k: int, engine: "SchedEngine") -> float:
+        return (engine.data_cost(ts.name, k)
+                + self.queue_weight * engine.running_per_pool[k])
+
+    def choose_pool(self, ts: TaskSet, candidates: Sequence[int],
+                    engine: "SchedEngine") -> "int | None":
+        eligible = [k for k, p in enumerate(engine.pools) if p.accepts(ts)]
+        best = min(eligible, key=lambda k: (self._score(ts, k, engine), k))
+        if best in candidates:
+            return best
+        # the data-local pool is busy: steal onto an idling pool if the
+        # per-pass budget allows, else hold the task for the local pool
+        if self._steals_left > 0:
+            self._steals_left -= 1
+            return min(candidates, key=lambda k: (self._score(ts, k, engine),
+                                                  k))
+        return None
+
+
 SCHEDULING_POLICIES: dict[str, type[SchedulingPolicy]] = {
     FifoBackfill.name: FifoBackfill,
     LargestTxFirst.name: LargestTxFirst,
     GpuAwareBestFit.name: GpuAwareBestFit,
+    LocalityAware.name: LocalityAware,
 }
 
 
@@ -161,7 +248,9 @@ class SchedEngine:
 
     def __init__(self, g: DAG, pool: "PoolSpec | Allocation", *,
                  policy: "str | SchedulingPolicy" = "fifo",
-                 task_level: bool = False):
+                 task_level: bool = False,
+                 feedback: "FeedbackOptions | None" = None,
+                 estimator: "TxEstimator | None" = None):
         self.g = g
         self.alloc = as_allocation(pool)
         self.pools: tuple[PoolSpec, ...] = self.alloc.pools
@@ -170,14 +259,29 @@ class SchedEngine:
         self.policy = get_scheduling_policy(policy)
         self.task_level = task_level
 
+        # -- runtime feedback (core/estimator.py) --------------------------
+        if estimator is not None and feedback is None:
+            feedback = FeedbackOptions(migrate=False)
+        self.feedback = feedback
+        if feedback is not None and estimator is None:
+            estimator = TxEstimator(
+                alpha=feedback.ewma_alpha,
+                prior={n: g.node(n).tx_mean for n in g.nodes})
+        self.estimator = estimator
+        self._priority_dirty = False
+        self.running_per_pool = [0] * len(self.pools)
+        self.migrations = 0
+        self._migrations_of: dict[tuple[str, int], int] = {}
+        self._data_cost_cache: dict[tuple[str, int], float] = {}
+
         order = g.topological_order()
         ranks = g.ranks()
         self.order = order
-        infos = [SetInfo(n, ranks[n], k, g.node(n).num_tasks,
-                         g.node(n).cpus_per_task, g.node(n).gpus_per_task,
-                         g.node(n).tx_mean, g.node(n).kind)
-                 for k, n in enumerate(order)]
-        self.priority = list(self.policy.order_sets(infos))
+        self._infos = [SetInfo(n, ranks[n], k, g.node(n).num_tasks,
+                               g.node(n).cpus_per_task, g.node(n).gpus_per_task,
+                               g.node(n).tx_mean, g.node(n).kind)
+                       for k, n in enumerate(order)]
+        self.priority = list(self.policy.order_sets(self._infos))
         if sorted(self.priority) != sorted(order):
             raise ValueError(
                 f"policy {self.policy.name!r} returned an invalid set order")
@@ -239,6 +343,115 @@ class SchedEngine:
     def pool_name(self, pool_idx: int) -> str:
         return self.pools[pool_idx].name
 
+    # -- runtime feedback ---------------------------------------------------
+    def tx_estimate(self, name: str) -> float:
+        """The mean TX a policy should reason with: the observed EWMA once
+        the set has ``min_samples`` completions, the static ``tx_mean``
+        prior before that (or always, without feedback)."""
+        if self.estimator is not None and self.feedback is not None and \
+                self.estimator.count(name) >= self.feedback.min_samples:
+            return self.estimator.mean(name)
+        return self.g.node(name).tx_mean
+
+    def observe(self, name: str, duration: float) -> None:
+        """Feed one completed task's duration into the online estimator
+        (both substrates call this right after :meth:`complete`).  Straggler
+        durations are winsorized at ``winsorize_ratio`` x the running mean
+        so they cannot contaminate the very estimate they are detected
+        against.  Marks the priority order dirty so the next dispatch pass
+        re-ranks ready sets by observed TX."""
+        if self.estimator is None:
+            return
+        fb = self.feedback
+        if fb is not None and fb.winsorize_ratio > 0 and \
+                self.estimator.count(name) >= fb.min_samples:
+            duration = min(duration,
+                           fb.winsorize_ratio * self.estimator.mean(name))
+        self.estimator.observe(name, duration)
+        # only TX-ordering policies need the priority rebuilt; fifo/
+        # gpu_bestfit/locality orderings cannot change with estimates
+        if self.policy.uses_tx:
+            self._priority_dirty = True
+
+    def stragglers(self, running: "dict[tuple[str, int], float]",
+                   now: float) -> list[tuple[str, int]]:
+        """Running tasks whose runtime exceeds ``mean + k*sigma`` of their
+        set's running estimate (armed after ``min_samples`` completions).
+        ``running`` maps (set, index) -> start time on the caller's clock;
+        the estimator must have been fed durations on the same clock."""
+        if self.feedback is None or self.estimator is None:
+            return []
+        out = []
+        for (name, i), start in running.items():
+            if (name, i) in self.finished:
+                continue  # completed at the detection tick
+            if self.estimator.is_straggler(name, now - start, self.feedback):
+                out.append((name, i))
+        return out
+
+    def try_migrate(self, name: str, i: int) -> "tuple[int, float] | None":
+        """Preempt straggler ``(name, i)`` and requeue it onto a different
+        pool: release the source pool's resources, acquire the cheapest
+        (by ``transfer_cost``) eligible target's, and return ``(new_pool,
+        migration_cost)``.  No-ops (returns ``None``) when the task already
+        finished or never launched, no other pool fits right now, the
+        data-movement cost exceeds ``max_cost_ratio`` x the set's estimated
+        TX, or the task hit ``max_migrations_per_task``.  The caller owns
+        cancelling the old attempt and scheduling the new one."""
+        fb = self.feedback
+        if fb is None or not fb.migrate:
+            return None
+        if (name, i) in self.finished or (name, i) not in self.launched:
+            return None
+        if self._migrations_of.get((name, i), 0) >= \
+                fb.max_migrations_per_task:
+            return None
+        src = self.pool_of[(name, i)]
+        ts = self.g.node(name)
+        cands = [k for k in self._candidates(ts) if k != src]
+        if not cands:
+            return None  # no eligible target pool with free capacity
+        dst = min(cands, key=lambda k: (self.alloc.transfer(src, k), k))
+        cost = fb.migration_base_cost + self.alloc.transfer(src, dst)
+        if cost > fb.max_cost_ratio * self.tx_estimate(name):
+            return None  # moving the data costs more than the rerun saves
+        need_c, need_g = self._needs(src, ts)
+        self.free_cpus[src] += need_c
+        self.free_gpus[src] += need_g
+        self.running_per_pool[src] -= 1
+        need_c, need_g = self._needs(dst, ts)
+        self.free_cpus[dst] -= need_c
+        self.free_gpus[dst] -= need_g
+        self.running_per_pool[dst] += 1
+        self.pool_of[(name, i)] = dst
+        self._migrations_of[(name, i)] = \
+            self._migrations_of.get((name, i), 0) + 1
+        self.migrations += 1
+        return dst, cost
+
+    def data_cost(self, name: str, k: int) -> float:
+        """Mean data-movement cost of pulling set ``name``'s parent outputs
+        to pool ``k``: the allocation's ``transfer_cost`` weighted by where
+        the parent tasks actually ran.  Cached once every parent set has
+        finished (placements are final from then on)."""
+        key = (name, k)
+        cached = self._data_cost_cache.get(key)
+        if cached is not None:
+            return cached
+        parents = self.g.parents(name)
+        total, n = 0.0, 0
+        for p in parents:
+            for i in range(self.g.node(p).num_tasks):
+                j = self.pool_of.get((p, i))
+                if j is None:
+                    continue
+                total += self.alloc.transfer(j, k)
+                n += 1
+        cost = total / n if n else 0.0
+        if not parents or all(self._set_remaining[p] == 0 for p in parents):
+            self._data_cost_cache[key] = cost
+        return cost
+
     def _needs(self, k: int, ts: TaskSet) -> tuple[int, int]:
         p = self.pools[k]
         return (0 if p.oversubscribe_cpus else ts.cpus_per_task,
@@ -258,7 +471,16 @@ class SchedEngine:
     def startable(self) -> list[tuple[str, int, int]]:
         """Backfill pass: pop every ready task that fits somewhere *now*,
         acquire its resources and return ``(set, index, pool_idx)`` triples
-        in launch order.  Walks sets in policy priority order."""
+        in launch order.  Walks sets in policy priority order (re-ranked by
+        observed TX first when feedback marked it dirty).  A policy may
+        defer a task (``choose_pool`` -> ``None``) to hold it for a busy
+        pool; deferred tasks stay at the head of their ready queue."""
+        if self._priority_dirty:
+            infos = [dataclasses.replace(si, tx_mean=self.tx_estimate(si.name))
+                     for si in self._infos]
+            self.priority = list(self.policy.order_sets(infos))
+            self._priority_dirty = False
+        self.policy.begin_pass(self)
         out: list[tuple[str, int, int]] = []
         for name in self.priority:
             q = self.ready[name]
@@ -272,11 +494,14 @@ class SchedEngine:
                 i = q.popleft()
                 if (name, i) in self.finished or (name, i) in self.launched:
                     continue
-                k = (cands[0] if len(cands) == 1
-                     else self.policy.choose_pool(ts, cands, self))
+                k = self.policy.choose_pool(ts, cands, self)
+                if k is None:  # policy defers: wait for the preferred pool
+                    q.appendleft(i)
+                    break
                 need_c, need_g = self._needs(k, ts)
                 self.free_cpus[k] -= need_c
                 self.free_gpus[k] -= need_g
+                self.running_per_pool[k] += 1
                 self.launched.add((name, i))
                 self.pool_of[(name, i)] = k
                 out.append((name, i, k))
@@ -294,6 +519,8 @@ class SchedEngine:
         need_c, need_g = self._needs(k, ts)
         self.free_cpus[k] += need_c
         self.free_gpus[k] += need_g
+        if (name, i) in self.launched:
+            self.running_per_pool[k] -= 1
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1

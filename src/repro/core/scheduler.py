@@ -1,11 +1,14 @@
 """Execution policies: named bundles of (mode, dependency granularity,
-stage grouping, scheduling policy) consumed by both the simulator and the
-real executor.
+stage grouping, scheduling policy, runtime feedback) consumed by both the
+simulator and the real executor.
 
 The ``mode``/``task_level`` axes pick the paper's execution semantics
 (sequential / asynchronous / adaptive); ``scheduling`` picks the shared
-engine's placement policy (``fifo`` / ``lpt`` / ``gpu_bestfit``, see
-``sched_engine.SCHEDULING_POLICIES``).  The two axes compose freely.
+engine's placement policy (``fifo`` / ``lpt`` / ``gpu_bestfit`` /
+``locality``, see ``sched_engine.SCHEDULING_POLICIES``); ``feedback``
+enables the runtime-feedback loop (observed-TX estimation + straggler
+preemption/migration, see ``estimator.FeedbackOptions``).  The axes
+compose freely.
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ import dataclasses
 from typing import Sequence
 
 from .dag import DAG
+from .estimator import FeedbackOptions
 from .executor import ExecResult, RealExecutor
 from .resources import Allocation, PoolSpec
 from .sched_engine import SchedulingPolicy
@@ -30,6 +34,8 @@ class ExecutionPolicy:
     name: str = ""
     #: shared-engine scheduling policy name (or a SchedulingPolicy instance)
     scheduling: "str | SchedulingPolicy" = "fifo"
+    #: runtime feedback: None = static TXs (the paper's assumption)
+    feedback: FeedbackOptions | None = None
 
     def simulate(self, dag: DAG, pool: "PoolSpec | Allocation",
                  options: SimOptions = SimOptions()) -> SimResult:
@@ -37,14 +43,14 @@ class ExecutionPolicy:
             dag, pool, self.mode, options=options,
             task_level=self.task_level,
             sequential_stage_groups=self.sequential_stage_groups,
-            scheduling=self.scheduling)
+            scheduling=self.scheduling, feedback=self.feedback)
 
     def execute(self, dag: DAG, executor: RealExecutor) -> ExecResult:
         """Run the same policy on the real executor (shared engine)."""
         return executor.run(
             dag, self.mode, task_level=self.task_level,
             sequential_stage_groups=self.sequential_stage_groups,
-            scheduling=self.scheduling)
+            scheduling=self.scheduling, feedback=self.feedback)
 
     def with_scheduling(self, scheduling: "str | SchedulingPolicy"
                         ) -> "ExecutionPolicy":
@@ -53,6 +59,12 @@ class ExecutionPolicy:
         return dataclasses.replace(
             self, scheduling=scheduling,
             name=f"{self.name}+{sched_name}" if self.name else sched_name)
+
+    def with_feedback(self, feedback: FeedbackOptions = FeedbackOptions()
+                      ) -> "ExecutionPolicy":
+        return dataclasses.replace(
+            self, feedback=feedback,
+            name=f"{self.name}+observed" if self.name else "observed")
 
 
 def sequential_policy(stage_groups=None) -> ExecutionPolicy:
@@ -79,3 +91,19 @@ def gpu_bestfit_policy() -> ExecutionPolicy:
     """Asynchronous mode with GPU-aware best-fit multi-pool placement."""
     return ExecutionPolicy("async", False, None, "gpu_bestfit",
                            scheduling="gpu_bestfit")
+
+
+def locality_policy() -> ExecutionPolicy:
+    """Asynchronous mode with data-movement-aware placement + bounded
+    work stealing (uses the allocation's ``transfer_cost`` matrix)."""
+    return ExecutionPolicy("async", False, None, "locality",
+                           scheduling="locality")
+
+
+def adaptive_observed_policy(
+        feedback: FeedbackOptions = FeedbackOptions()) -> ExecutionPolicy:
+    """Task-level asynchronicity driven by OBSERVED runtime TX instead of
+    static ``tx_mean``, with straggler preemption + migration — the
+    ROADMAP's adaptive-scheduling follow-up to the paper's future work."""
+    return ExecutionPolicy("async", True, None, "adaptive_observed",
+                           scheduling="lpt", feedback=feedback)

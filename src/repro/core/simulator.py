@@ -12,7 +12,10 @@ simulates thousands of nodes and ~10^5 tasks in well under a second.
 Scheduling decisions (ready-queue order, pool placement, dependency and
 resource bookkeeping) live in :class:`~repro.core.sched_engine.SchedEngine`,
 which the real executor shares — this module only advances the simulated
-clock.  Select a policy with ``scheduling="fifo" | "lpt" | "gpu_bestfit"``.
+clock.  Select a policy with ``scheduling="fifo" | "lpt" | "gpu_bestfit" |
+"locality"``; pass ``feedback=FeedbackOptions(...)`` to drive the policy
+by *observed* TX (online EWMA estimates) and to preempt + migrate
+stragglers between pools (see ``core/estimator.py``).
 
 Modes:
   ``async``       dependency-driven dispatch (the paper's asynchronous mode)
@@ -28,14 +31,20 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import random
 from typing import Literal, Sequence
 
-from .dag import DAG
+from .dag import DAG, TaskSet
+from .estimator import FeedbackOptions
 from .resources import Allocation, PoolSpec, as_allocation
 from .sched_engine import SchedEngine, SchedulingPolicy
 
 Mode = Literal["async", "sequential"]
+
+#: sentinel event name for the simulator's periodic straggler watchdog
+#: (never collides with a task-set name: "\x00" is not valid in one)
+_WATCHDOG = "\x00watchdog"
 
 
 def per_pool_task_counts(records: "Sequence[TaskRecord]") -> dict[str, int]:
@@ -57,6 +66,9 @@ class TaskRecord:
     duplicate: bool = False
     #: name of the pool the task was placed on ("" for legacy records)
     pool: str = ""
+    #: True when the task was preempted + migrated off a straggling pool
+    #: (``pool`` is the pool it finally completed on)
+    migrated: bool = False
 
     @property
     def duration(self) -> float:
@@ -77,6 +89,8 @@ class SimResult:
     duplicates: int = 0
     #: scheduling policy used (see sched_engine.SCHEDULING_POLICIES)
     policy: str = "fifo"
+    #: straggler preemption + migration count (runtime feedback enabled)
+    migrations: int = 0
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -103,6 +117,11 @@ class SimResult:
 class SimOptions:
     seed: int = 0
     sample_tx: bool = True
+    #: task-duration distribution: "normal" is the paper's N(mu, sigma);
+    #: "lognormal" keeps mean mu but has the heavy right tail real
+    #: ML-driven HPC tasks show (sigma_log = ``lognormal_sigma``).
+    tx_distribution: Literal["normal", "lognormal"] = "normal"
+    lognormal_sigma: float = 0.5
     #: EnTK-like middleware overhead: fractional stretch on every task
     #: duration (Table 3 caption: ~4%).
     entk_overhead: float = 0.04
@@ -124,8 +143,15 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
              task_level: bool = False,
              sequential_stage_groups: Sequence[Sequence[str]] | None = None,
              scheduling: "str | SchedulingPolicy" = "fifo",
+             feedback: "FeedbackOptions | None" = None,
              ) -> SimResult:
-    """Run one workflow execution and return its schedule."""
+    """Run one workflow execution and return its schedule.
+
+    ``feedback`` enables the runtime-feedback loop (core/estimator.py):
+    every completion updates the engine's per-set TX estimate, ordering
+    policies re-rank by observed TX, and stragglers (runtime > mean +
+    k*sigma of the running estimate) are preempted and migrated onto a
+    different pool, charging the allocation's ``transfer_cost``."""
     rng = random.Random(options.seed)
     g = dag if mode == "async" else dag.with_sequential_barriers(
         sequential_stage_groups)
@@ -136,17 +162,25 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
     if mode == "async":
         overhead *= (1 + options.async_overhead)
 
+    def sample_base(ts: TaskSet) -> float:
+        """One task duration, pre-overhead, without straggler injection."""
+        mu = ts.tx_mean
+        if not options.sample_tx or mu <= 0:
+            return mu
+        if options.tx_distribution == "lognormal":
+            s = options.lognormal_sigma
+            return mu * math.exp(rng.gauss(0.0, s) - 0.5 * s * s)
+        return max(0.0, rng.gauss(mu, ts.tx_sigma))
+
     # ---- expand task sets into tasks -------------------------------------
-    engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level)
+    engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
+                         feedback=feedback)
     order = engine.order
     durations: dict[tuple[str, int], float] = {}
     for name in order:
         ts = g.node(name)
         for i in range(ts.num_tasks):
-            mu = ts.tx_mean
-            d = (rng.gauss(mu, ts.tx_sigma)
-                 if options.sample_tx and mu > 0 else mu)
-            d = max(0.0, d)
+            d = sample_base(ts)
             if options.straggler_prob and rng.random() < options.straggler_prob:
                 d *= options.straggler_factor
             durations[(name, i)] = d * overhead
@@ -156,9 +190,17 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
     # share (rank, topo position, resource footprint), so scheduling scans
     # O(#sets x #pools) instead of O(#tasks) — the loop stays fast at
     # 10^5+ tasks (4096-node runs).
+    #: start of the CURRENT attempt (reset on migration: the straggler
+    #: clock and the estimator must measure the re-run, not the preempted
+    #: attempt, or a migrated task is instantly re-flagged)
     running: dict[tuple[str, int], float] = {}
+    #: start of the FIRST attempt (task records span the whole task)
+    first_start: dict[tuple[str, int], float] = {}
     records: list[TaskRecord] = []
-    events: list[tuple[float, int, str, int, bool]] = []  # (t, seq, name, i, dup)
+    # (t, seq, name, i, dup, gen): gen invalidates events superseded by a
+    # migration (the preempted attempt's completion must be ignored)
+    events: list[tuple[float, int, str, int, bool, int]] = []
+    gen: dict[tuple[str, int], int] = {}
     seq = 0
     now = 0.0
     duplicates = 0
@@ -169,26 +211,79 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
         nonlocal seq
         for name, i, _pool in engine.startable():
             end = now + options.launch_latency + durations[(name, i)]
-            running[(name, i)] = now
-            heapq.heappush(events, (end, seq, name, i, False))
+            # straggler/estimator clock starts when the WORK starts:
+            # launch latency must not read as task duration
+            running[(name, i)] = now + options.launch_latency
+            first_start[(name, i)] = now
+            heapq.heappush(events, (end, seq, name, i, False, 0))
             seq += 1
 
     def complete(name: str, i: int) -> None:
         ts = g.node(name)
-        start = running.pop((name, i))
+        attempt_start = running.pop((name, i))
+        start = first_start.pop((name, i), attempt_start)
         k = engine.complete(name, i)
         records.append(TaskRecord(name, i, start, now,
                                   ts.cpus_per_task, ts.gpus_per_task,
-                                  pool=engine.pool_name(k)))
-        set_durations.setdefault(name, []).append(now - start)
+                                  pool=engine.pool_name(k),
+                                  migrated=(name, i) in gen))
+        set_durations.setdefault(name, []).append(now - attempt_start)
+        engine.observe(name, now - attempt_start)
+
+    def migrate_scan() -> None:
+        nonlocal seq
+        for (sn, si) in engine.stragglers(running, now):
+            mig = engine.try_migrate(sn, si)
+            if mig is None:
+                continue
+            dst, cost = mig
+            gen[(sn, si)] = gen.get((sn, si), 0) + 1
+            d = sample_base(g.node(sn)) * overhead
+            heapq.heappush(events,
+                           (now + cost + options.launch_latency + d,
+                            seq, sn, si, False, gen[(sn, si)]))
+            seq += 1
+            # reset the straggler clock to the re-run's WORK start: the
+            # migration cost must not contaminate the TX estimate the
+            # detector and the cost/benefit gate consult
+            running[(sn, si)] = now + cost + options.launch_latency
+
+    # periodic watchdog (migration enabled only): completions trigger
+    # scans too, but a lone tail straggler has no completion left to
+    # piggyback on — without a timer event it would never be detected.
+    # A single-pool allocation has no migration target, so skip it all.
+    migrating = (feedback is not None and feedback.migrate
+                 and len(engine.pools) > 1)
+    if migrating:
+        positive = [ts.tx_mean for ts in g.nodes.values() if ts.tx_mean > 0]
+        scan_dt = feedback.watchdog_interval or \
+            (0.5 * min(positive) if positive else 1.0)
+    watchdog_pending = False
+
+    def schedule_scan() -> None:
+        nonlocal watchdog_pending, seq
+        if migrating and not watchdog_pending and running:
+            heapq.heappush(events, (now + scan_dt, seq, _WATCHDOG, -1,
+                                    False, 0))
+            seq += 1
+            watchdog_pending = True
 
     try_start()
+    schedule_scan()
     event_count = 0
     while events:
-        now_, _, name, i, dup = heapq.heappop(events)
+        now_, _, name, i, dup, g_ = heapq.heappop(events)
         now = now_
+        if name is _WATCHDOG:
+            watchdog_pending = False
+            migrate_scan()
+            try_start()
+            schedule_scan()
+            continue
         if (name, i) in engine.finished:
             continue  # a duplicate already finished this task
+        if g_ != gen.get((name, i), 0):
+            continue  # attempt preempted by a migration
         complete(name, i)
         event_count += 1
         # straggler mitigation: inspect running tasks, duplicate laggards.
@@ -207,12 +302,20 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
                     ts = g.node(rn)
                     d = ts.tx_mean * overhead
                     heapq.heappush(events, (now + options.launch_latency + d,
-                                            seq, rn, ri, True))
+                                            seq, rn, ri, True,
+                                            gen.get((rn, ri), 0)))
                     seq += 1
                     duplicates += 1
                     duplicated.add((rn, ri))
                     running[(rn, ri)] = min(running[(rn, ri)], st)
+        # runtime feedback: preempt + migrate stragglers.  The scan is
+        # O(running); amortise it on big workloads (every 16 completions)
+        # — the periodic watchdog above covers the gaps.
+        scan_every = 16 if engine.tasks_total >= 1024 else 1
+        if migrating and event_count % scan_every == 0:
+            migrate_scan()
         try_start()
+        schedule_scan()
 
     makespan = max((r.end for r in records), default=0.0)
     cpu_area = sum(r.duration * r.cpus for r in records)
@@ -230,4 +333,5 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
         tasks_total=len(records),
         duplicates=duplicates,
         policy=engine.policy.name,
+        migrations=engine.migrations,
     )

@@ -1,0 +1,23 @@
+"""Version compatibility shims for the model stack (no pallas imports).
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` (0.4.x) to a
+top-level ``jax.shard_map`` and renamed the replication-check kwarg
+``check_rep`` -> ``check_vma`` along the way.  Call sites use the new
+spelling; this shim maps it onto whichever API the installed jax has.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

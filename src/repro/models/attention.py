@@ -13,6 +13,7 @@ from repro.kernels.flash_attention import ops as fa
 from repro.kernels.decode_attention import ops as da
 from repro.runtime.sharding import (current_flags, current_mesh,
                                     current_rules, gathered, shard_act)
+from ._compat import shard_map
 from .config import ModelConfig
 from .layers import COMPUTE_DTYPE, apply_rope, rms_norm
 from .params import spec
@@ -90,7 +91,7 @@ def _headparallel_flash(q, k, v, mesh, batch_axes, **kw):
         return fa.flash_attention(q, k, v, **kw)
 
     spec = P(bspec, None, "model", None)
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                          out_specs=spec, check_vma=False)(q, k, v)
 
 
@@ -144,7 +145,7 @@ def _sharded_flash_decode(q, k, v, cache_k, cache_v, pos, mesh, batch_axes):
         out = da.combine_partials(acc, mx, l, "model")
         return out[:, None].astype(q.dtype), ck, cv
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec), P(bspec), P(bspec),
                   P(bspec, "model"), P(bspec, "model"), P(bspec)),

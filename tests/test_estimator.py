@@ -1,0 +1,254 @@
+"""Runtime-feedback layer: online TX estimation (EWMA mean/variance,
+prior fallback, straggler detection) and its wiring into the shared
+scheduling engine (observed-TX priority re-ranking, preemption +
+migration edge cases)."""
+
+import pytest
+
+from repro.core import (DAG, Allocation, FeedbackOptions, NodeSpec, PoolSpec,
+                        SchedEngine, SimOptions, TaskSet, TxEstimator,
+                        simulate)
+
+
+def _two_pools(transfer=2.0):
+    return Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=4, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=4, gpus=0)),
+    ), transfer_cost=((0.0, transfer), (transfer, 0.0)))
+
+
+# ---------------------------------------------------------------------------
+# TxEstimator: EWMA mean + variance
+# ---------------------------------------------------------------------------
+
+def test_estimator_converges_on_constant_stream():
+    est = TxEstimator(alpha=0.3)
+    for _ in range(50):
+        est.observe("s", 10.0)
+    assert est.mean("s") == pytest.approx(10.0)
+    assert est.std("s") == pytest.approx(0.0, abs=1e-9)
+    assert est.count("s") == 50
+
+
+def test_estimator_tracks_drifting_durations():
+    """A 10 s -> 20 s drift: the EWMA must re-converge to the new regime
+    (this is exactly what static tx_mean cannot do)."""
+    est = TxEstimator(alpha=0.25)
+    for _ in range(30):
+        est.observe("s", 10.0)
+    assert est.mean("s") == pytest.approx(10.0)
+    for _ in range(30):
+        est.observe("s", 20.0)
+    assert est.mean("s") == pytest.approx(20.0, rel=0.01)
+    # mid-drift the variance must have spiked, then decayed again
+    assert est.std("s") < 1.0
+
+
+def test_estimator_variance_on_noisy_stream():
+    est = TxEstimator(alpha=0.2)
+    for k in range(200):
+        est.observe("s", 10.0 + (1.0 if k % 2 else -1.0))
+    assert est.mean("s") == pytest.approx(10.0, abs=0.5)
+    assert 0.5 < est.std("s") < 1.5
+
+
+def test_estimator_prior_fallback_and_validation():
+    est = TxEstimator(prior={"s": 42.0})
+    assert est.mean("s") == 42.0          # no observations yet
+    assert est.mean("other", default=7.0) == 7.0
+    est.observe("s", 10.0)
+    assert est.mean("s") == 10.0          # first observation replaces prior
+    with pytest.raises(ValueError, match="alpha"):
+        TxEstimator(alpha=0.0)
+
+
+def test_straggler_detection_arms_after_min_samples():
+    fb = FeedbackOptions(min_samples=3, straggler_k=3.0,
+                         straggler_min_ratio=1.5)
+    est = TxEstimator(alpha=0.25)
+    est.observe("s", 10.0)
+    est.observe("s", 10.0)
+    assert not est.is_straggler("s", 1e9, fb)   # not armed yet
+    est.observe("s", 10.0)
+    assert est.is_straggler("s", 100.0, fb)
+    # within mean + k*sigma (sigma ~ 0, but min_ratio guards the boundary)
+    assert not est.is_straggler("s", 10.0, fb)
+    assert not est.is_straggler("s", 14.9, fb)  # < 1.5x mean
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: observed estimates drive tx_estimate and priority
+# ---------------------------------------------------------------------------
+
+def _engine(feedback=FeedbackOptions(), policy="lpt"):
+    g = DAG()
+    g.add(TaskSet("a", 4, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("b", 4, 1, 0, tx_mean=20.0, tx_sigma=0.0))
+    return SchedEngine(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0)),
+                       policy=policy, feedback=feedback)
+
+
+def test_tx_estimate_static_until_min_samples():
+    eng = _engine(FeedbackOptions(min_samples=3))
+    assert eng.tx_estimate("a") == 10.0
+    eng.observe("a", 99.0)
+    eng.observe("a", 99.0)
+    assert eng.tx_estimate("a") == 10.0     # still the static prior
+    eng.observe("a", 99.0)
+    assert eng.tx_estimate("a") == pytest.approx(99.0)
+
+
+def test_observed_tx_rerank_lpt_priority():
+    """LPT ranks b (tx=20) first statically; once observations show a is
+    actually the long set, the next dispatch pass re-ranks a first."""
+    eng = _engine(FeedbackOptions(min_samples=1))
+    assert eng.priority.index("b") < eng.priority.index("a")
+    for _ in range(3):
+        eng.observe("a", 100.0)
+        eng.observe("b", 1.0)
+    eng.startable()   # rebuilds the dirty priority order
+    assert eng.priority.index("a") < eng.priority.index("b")
+
+
+def test_no_feedback_means_static_estimates_and_no_stragglers():
+    g = DAG()
+    g.add(TaskSet("a", 2, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, PoolSpec("p", 1, NodeSpec(cpus=4, gpus=0)))
+    eng.observe("a", 500.0)   # no estimator: a no-op
+    assert eng.tx_estimate("a") == 10.0
+    assert eng.stragglers({("a", 0): 0.0}, 1e9) == []
+    assert eng.try_migrate("a", 0) is None
+
+
+# ---------------------------------------------------------------------------
+# migration edge cases
+# ---------------------------------------------------------------------------
+
+def _migration_engine(alloc, feedback=FeedbackOptions(min_samples=1)):
+    g = DAG()
+    g.add(TaskSet("s", 2, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, feedback=feedback)
+    for _ in range(3):
+        eng.observe("s", 10.0)
+    return eng
+
+
+def test_migration_moves_resources_between_pools():
+    eng = _migration_engine(_two_pools(transfer=2.0))
+    started = eng.startable()
+    assert len(started) == 2
+    (name, i, src) = started[0]
+    free_src, free_dst = eng.free_cpus[src], eng.free_cpus[1 - src]
+    mig = eng.try_migrate(name, i)
+    assert mig is not None
+    dst, cost = mig
+    assert dst != src and cost == pytest.approx(2.0)
+    assert eng.free_cpus[src] == free_src + 2      # source released
+    assert eng.free_cpus[dst] == free_dst - 2      # target acquired
+    assert eng.pool_of[(name, i)] == dst
+    assert eng.migrations == 1
+    # per-task migration cap: a second attempt is a no-op
+    assert eng.try_migrate(name, i) is None
+    # completion after migration releases the *target* pool
+    eng.complete(name, i)
+    assert eng.free_cpus[dst] == free_dst
+
+
+def test_migration_noop_when_straggler_completed_at_detection_tick():
+    eng = _migration_engine(_two_pools())
+    (name, i, _), _ = eng.startable()
+    eng.complete(name, i)
+    assert eng.try_migrate(name, i) is None
+    # the straggler scan also skips it
+    assert (name, i) not in eng.stragglers({(name, i): 0.0}, 1e9)
+
+
+def test_migration_noop_without_eligible_target_pool():
+    single = PoolSpec("only", 1, NodeSpec(cpus=4, gpus=0))
+    eng = _migration_engine(single)
+    (name, i, _), _ = eng.startable()
+    assert eng.try_migrate(name, i) is None        # nowhere to go
+    assert eng.migrations == 0
+
+
+def test_migration_noop_when_cost_exceeds_benefit():
+    """Transfer cost 1000 s vs an estimated 10 s TX: rerunning elsewhere
+    cannot pay for the data movement -> no-op."""
+    eng = _migration_engine(_two_pools(transfer=1000.0))
+    (name, i, _), _ = eng.startable()
+    assert eng.try_migrate(name, i) is None
+    assert eng.migrations == 0
+
+
+def test_migration_respects_target_capacity():
+    """The other pool is full -> no candidates -> no-op."""
+    alloc = Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=4, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=2, gpus=0)),
+    ), transfer_cost=((0.0, 1.0), (1.0, 0.0)))
+    g = DAG()
+    g.add(TaskSet("s", 3, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, feedback=FeedbackOptions(min_samples=1))
+    for _ in range(3):
+        eng.observe("s", 10.0)
+    started = eng.startable()          # fills both pools (2+1 tasks fit)
+    assert len(started) == 3
+    for name, i, _k in started:
+        assert eng.try_migrate(name, i) is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: feedback in the simulator
+# ---------------------------------------------------------------------------
+
+def test_sim_migration_rescues_stragglers():
+    """One big set with injected 20x stragglers on a two-pool allocation:
+    migration-enabled runs must beat the static schedule and count > 0
+    migrations, and every task must still complete exactly once."""
+    g = DAG()
+    g.add(TaskSet("s", 24, 2, 0, tx_mean=10.0, tx_sigma=0.5))
+    alloc = Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=8, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=8, gpus=0)),
+    ), transfer_cost=((0.0, 1.0), (1.0, 0.0)))
+    opts = SimOptions(seed=2, launch_latency=0.0, straggler_prob=0.15,
+                      straggler_factor=20.0)
+    base = simulate(g, alloc, "async", options=opts)
+    fed = simulate(g, alloc, "async", options=opts,
+                   feedback=FeedbackOptions(straggler_k=2.0))
+    assert fed.tasks_total == base.tasks_total == 24
+    assert fed.migrations > 0
+    assert fed.makespan < base.makespan
+    assert sum(1 for r in fed.records if r.migrated) > 0
+    # exactly-once completion despite preemption/requeue
+    assert len({(r.set_name, r.index) for r in fed.records}) == 24
+
+
+def test_sim_feedback_noop_without_stragglers():
+    """Clean durations: feedback must not change the schedule at all."""
+    g = DAG()
+    g.add(TaskSet("s", 8, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0))
+    opts = SimOptions(seed=0, sample_tx=False, entk_overhead=0.0,
+                      async_overhead=0.0, launch_latency=0.0)
+    a = simulate(g, pool, "async", options=opts)
+    b = simulate(g, pool, "async", options=opts, feedback=FeedbackOptions())
+    assert b.makespan == pytest.approx(a.makespan)
+    assert b.migrations == 0
+
+
+def test_lognormal_durations_have_heavier_tail_same_mean():
+    g = DAG()
+    g.add(TaskSet("s", 400, 1, 0, tx_mean=10.0, tx_sigma=0.05))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=400, gpus=0))
+    opts = dict(seed=4, entk_overhead=0.0, async_overhead=0.0,
+                launch_latency=0.0)
+    rn = simulate(g, pool, "async", options=SimOptions(**opts))
+    rl = simulate(g, pool, "async",
+                  options=SimOptions(tx_distribution="lognormal",
+                                     lognormal_sigma=0.6, **opts))
+    dn = [r.duration for r in rn.records]
+    dl = [r.duration for r in rl.records]
+    mean = lambda xs: sum(xs) / len(xs)
+    assert mean(dl) == pytest.approx(mean(dn), rel=0.15)   # same mean mu
+    assert max(dl) > max(dn) * 1.5                         # heavy tail

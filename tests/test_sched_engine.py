@@ -1,16 +1,18 @@
 """Shared scheduling engine: policy semantics, heterogeneous multi-pool
-placement, and simulator-vs-RealExecutor equivalence (both substrates
-dispatch through the same SchedEngine, so their schedules must agree)."""
+placement, locality-aware placement + bounded work stealing, and
+simulator-vs-RealExecutor equivalence (both substrates dispatch through
+the same SchedEngine, so their schedules must agree — with and without
+runtime feedback)."""
 
 import pytest
 
-from repro.core import (DAG, Allocation, ExecutionPolicy, NodeSpec, PoolSpec,
-                        RealExecutor, SchedEngine, SimOptions, TaskSet,
-                        fig2a_chain, fig2b_fork, fig2d_independent,
-                        get_scheduling_policy, gpu_bestfit_policy, lpt_policy,
-                        simulate)
+from repro.core import (DAG, Allocation, ExecutionPolicy, FeedbackOptions,
+                        LocalityAware, NodeSpec, PoolSpec, RealExecutor,
+                        SchedEngine, SimOptions, TaskSet, fig2a_chain,
+                        fig2b_fork, fig2d_independent, get_scheduling_policy,
+                        gpu_bestfit_policy, lpt_policy, simulate)
 
-ALL_POLICIES = ("fifo", "lpt", "gpu_bestfit")
+ALL_POLICIES = ("fifo", "lpt", "gpu_bestfit", "locality")
 
 
 def _no_noise():
@@ -185,6 +187,112 @@ def test_dependencies_respected_under_all_policies(policy):
 
 
 # ---------------------------------------------------------------------------
+# locality policy: data-movement-aware placement + bounded work stealing
+# ---------------------------------------------------------------------------
+
+def _transfer_alloc(transfer=50.0, cpus0=4, cpus1=4, pin_parents=False):
+    """Two CPU pools with a symmetric transfer cost.  ``pin_parents``
+    restricts p1 to kind="child" tasks so "parent" sets must run on p0
+    (giving the children a definite data-local pool)."""
+    return Allocation("tc", (
+        PoolSpec("p0", 1, NodeSpec(cpus=cpus0, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=cpus1, gpus=0),
+                 only_kinds=("child",) if pin_parents else None),
+    ), transfer_cost=((0.0, transfer), (transfer, 0.0)))
+
+
+def _parent_child(child_tasks=2):
+    g = DAG()
+    g.add(TaskSet("parent", 2, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("child", child_tasks, 2, 0, tx_mean=5.0, tx_sigma=0.0,
+                  kind="child"))
+    g.add_edge("parent", "child")
+    return g
+
+
+def _run_parents(eng):
+    done = 0
+    while done < 2:
+        for name, i, k in eng.startable():
+            assert (name, k) == ("parent", 0)
+            eng.complete(name, i)
+            done += 1
+
+
+def test_locality_places_child_with_parent_data():
+    """Both pools free, parents ran on p0, transfer cost is steep: every
+    child task must land on p0 (a steal would pay 50 s for nothing)."""
+    g = _parent_child(child_tasks=2)
+    eng = SchedEngine(g, _transfer_alloc(transfer=50.0, pin_parents=True),
+                      policy="locality")
+    _run_parents(eng)
+    started = eng.startable()
+    assert [(n, k) for n, _i, k in started] == [("child", 0), ("child", 0)]
+    assert eng.data_cost("child", 0) == 0.0
+    assert eng.data_cost("child", 1) == 50.0
+
+
+def test_locality_steals_within_budget_then_defers():
+    """p0 holds the parents' data but fits one child at a time; with
+    steal_budget=1 exactly one child may be stolen by idle p1 per pass,
+    the rest defer."""
+    g = _parent_child(child_tasks=4)
+    alloc = _transfer_alloc(transfer=50.0, cpus0=2, cpus1=8,
+                            pin_parents=True)
+    pol = LocalityAware(steal_budget=1)
+    eng = SchedEngine(g, alloc, policy=pol)
+    _run_parents(eng)
+    started = eng.startable()
+    pools = sorted(k for _n, _i, k in started)
+    # one child on local p0, exactly one stolen onto p1, two deferred
+    assert pools == [0, 1]
+    assert len(eng.ready["child"]) == 2
+
+
+def test_locality_zero_budget_waits_for_local_pool():
+    g = _parent_child(child_tasks=2)
+    alloc = _transfer_alloc(transfer=50.0, cpus0=2, cpus1=8,
+                            pin_parents=True)
+    pol = LocalityAware(steal_budget=0)
+    eng = SchedEngine(g, alloc, policy=pol)
+    _run_parents(eng)
+    first = eng.startable()
+    assert [(n, k) for n, _i, k in first] == [("child", 0)]
+    assert eng.startable() == []               # second child holds for p0
+    eng.complete("child", first[0][1])
+    assert [(n, k) for n, _i, k in eng.startable()] == [("child", 0)]
+
+
+def test_locality_without_transfer_matrix_is_load_balancing():
+    """No transfer_cost: the score degenerates to queue depth, so 4
+    identical tasks spread 2+2 over two equal pools."""
+    g = DAG()
+    g.add(TaskSet("s", 4, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    alloc = Allocation("flat", (
+        PoolSpec("p0", 1, NodeSpec(cpus=4, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=4, gpus=0)),
+    ))
+    eng = SchedEngine(g, alloc, policy="locality")
+    pools = sorted(k for _n, _i, k in eng.startable())
+    assert pools == [0, 0, 1, 1]
+
+
+def test_locality_end_to_end_simulation_completes():
+    from repro.core import cdg_dag, summit_pool
+    import dataclasses
+    half = summit_pool(8)
+    alloc = Allocation("split", (
+        dataclasses.replace(half, name="s1"),
+        dataclasses.replace(half, name="s2"),
+    ), transfer_cost=((0.0, 5.0), (5.0, 0.0)))
+    res = simulate(cdg_dag("c-DG2"), alloc, "async", options=_no_noise(),
+                   scheduling="locality")
+    # placement-constrained but complete and dependency-correct
+    assert res.tasks_total == sum(
+        ts.num_tasks for ts in cdg_dag("c-DG2").nodes.values())
+
+
+# ---------------------------------------------------------------------------
 # simulator vs RealExecutor equivalence (the shared-engine guarantee)
 # ---------------------------------------------------------------------------
 
@@ -218,6 +326,41 @@ def test_simulator_matches_real_executor(policy):
     assert real.makespan >= expected * 0.9
     assert real.makespan <= expected * 1.35 + 0.15, (policy, real.makespan,
                                                      expected)
+
+
+def test_simulator_matches_real_executor_with_feedback():
+    """Runtime feedback on (estimator active, no stragglers to migrate):
+    the two substrates must still agree through the shared engine."""
+    g = _equiv_dag()
+    pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))
+    tx_scale = 1.5e-3
+    fb = FeedbackOptions()
+    sim = simulate(g, pool, "async", options=_no_noise(), feedback=fb)
+    real = RealExecutor(pool, tx_scale=tx_scale).run(g, "async", feedback=fb)
+    assert real.tasks_total == sim.tasks_total
+    assert sim.migrations == real.migrations == 0
+    expected = sim.makespan * tx_scale
+    assert expected * 0.9 <= real.makespan <= expected * 1.35 + 0.15
+
+
+def test_real_executor_migrates_stragglers():
+    """Injected stragglers on a two-pool allocation: the executor's
+    watchdog must preempt + migrate at least one task, and every task must
+    still complete exactly once."""
+    g = DAG()
+    g.add(TaskSet("s", 12, 2, 0, tx_mean=40.0, tx_sigma=1.0))
+    alloc = Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=8, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=8, gpus=0)),
+    ), transfer_cost=((0.0, 1.0), (1.0, 0.0)))
+    ex = RealExecutor(alloc, tx_scale=1e-3, seed=7,
+                      straggler_prob=0.2, straggler_factor=50.0)
+    res = ex.run(g, "async", feedback=FeedbackOptions(straggler_k=2.0,
+                                                      min_samples=2))
+    assert res.tasks_total == 12
+    assert len({(r.set_name, r.index) for r in res.records}) == 12
+    assert res.migrations > 0
+    assert any(r.migrated for r in res.records)
 
 
 def test_execution_policy_carries_scheduling_to_both_substrates():

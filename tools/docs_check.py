@@ -1,0 +1,127 @@
+"""Docs sanity checker: `make docs-check`.
+
+Verifies that README.md and DESIGN.md only reference things that exist:
+
+1. every backtick-quoted repo path (``src/...``, ``benchmarks/...py``,
+   ``examples/...``, ``experiments/...``, glob patterns allowed) resolves
+   to at least one real file/directory;
+2. every scheduling-policy name in `SCHEDULING_POLICIES` is documented in
+   BOTH files, and every policy name the DESIGN.md policy table lists is
+   actually registered (docs and registry cannot drift).
+
+Exits non-zero with a list of problems; run by CI on every push.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DOCS = ("README.md", "DESIGN.md")
+
+#: backticked tokens that look like repo paths: contain a "/" or end in a
+#: known suffix, and start with a known top-level dir or file
+PATH_RE = re.compile(r"`([A-Za-z0-9_./*{}-]+?)`")
+TOP_LEVEL = ("src/", "benchmarks/", "examples/", "experiments/", "tests/",
+             "tools/", ".github/", "core/", "models/", "kernels/",
+             "launch/", "runtime/", "configs/")
+FILE_SUFFIXES = (".py", ".md", ".csv", ".yml", ".json", ".txt")
+
+
+def looks_like_path(tok: str) -> bool:
+    if tok.startswith(TOP_LEVEL):
+        return True
+    return "/" not in tok and tok.endswith(FILE_SUFFIXES) and "*" not in tok
+
+
+def resolve(tok: str) -> bool:
+    """True if the token matches at least one real path.
+
+    Handles: bare filenames (`dag.py` -> searched recursively), module
+    paths relative to src/repro (`core/sched_engine.py`), dotted member
+    references (`core/adaptive.compare_policies` -> core/adaptive.py),
+    `{a,b}` alternation and `*` globs."""
+    candidates = [tok,
+                  os.path.join("src", "repro", tok),
+                  os.path.join("**", tok)]
+    if not tok.endswith(FILE_SUFFIXES):
+        # `core/adaptive.compare_policies` -> the module file
+        base = tok.split(".")[0]
+        candidates += [base + ".py",
+                       os.path.join("src", "repro", base + ".py")]
+    out = []
+    for c in candidates:
+        m = re.match(r"(.*)\{([^}]*)\}(.*)", c)
+        if m:
+            out += [m.group(1) + alt + m.group(3)
+                    for alt in m.group(2).split(",")]
+        else:
+            out.append(c)
+    for c in out:
+        if glob.glob(os.path.join(ROOT, c), recursive=True):
+            return True
+    return False
+
+
+def main() -> int:
+    problems: list[str] = []
+
+    texts = {}
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            problems.append(f"{doc}: missing")
+            continue
+        texts[doc] = open(path).read()
+
+    # 1. every path-looking backtick reference exists
+    for doc, text in texts.items():
+        for tok in PATH_RE.findall(text):
+            if looks_like_path(tok) and not resolve(tok):
+                problems.append(f"{doc}: references `{tok}` "
+                                f"but no such path exists")
+
+    # 2. policy registry <-> docs agreement
+    try:
+        from repro.core import SCHEDULING_POLICIES
+        registered = set(SCHEDULING_POLICIES)
+    except Exception as e:  # pragma: no cover - import environment broken
+        problems.append(f"cannot import SCHEDULING_POLICIES: {e}")
+        registered = set()
+    for doc, text in texts.items():
+        for name in registered:
+            if f"`{name}`" not in text and f'"{name}"' not in text:
+                problems.append(
+                    f"{doc}: scheduling policy {name!r} is registered but "
+                    f"undocumented")
+    # the DESIGN policy table rows: | `name` | ... | — scan only the
+    # "Scheduling policies" section so other tables don't false-positive
+    design = texts.get("DESIGN.md", "")
+    m = re.search(r"### Scheduling policies(.*?)(?:\n#|\Z)", design,
+                  re.S)
+    for row_name in re.findall(r"^\| `([a-z_]+)` +\|",
+                               m.group(1) if m else "", re.M):
+        if row_name not in registered:
+            problems.append(
+                f"DESIGN.md: policy table lists {row_name!r} which is not "
+                f"in SCHEDULING_POLICIES")
+
+    if problems:
+        print("docs-check: FAILED")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    n_refs = sum(1 for t in texts.values() for tok in PATH_RE.findall(t)
+                 if looks_like_path(tok))
+    print(f"docs-check: OK ({n_refs} path references, "
+          f"{len(registered)} policies cross-checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
