@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench-policies bench-feedback bench-paper docs-check
+.PHONY: test-fast test-all bench-policies bench-feedback bench-predictor \
+        bench-check bench-paper docs-check lint format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -19,9 +20,29 @@ bench-policies:
 bench-feedback:
 	$(PY) benchmarks/bench_runtime_feedback.py
 
+## predictive control plane: makespan re-prediction convergence + the
+## speculation-vs-migration arbiter
+bench-predictor:
+	$(PY) benchmarks/bench_predictor.py
+
+## benchmark-regression gate: fresh benchmarks/out/*.json vs the
+## committed benchmarks/baseline/*.json (>10% makespan drift or a lost
+## headline fails); run after the bench targets
+bench-check:
+	$(PY) tools/bench_check.py
+
 ## README/DESIGN sanity: referenced paths + policy names must exist
 docs-check:
 	$(PY) tools/docs_check.py
+
+## ruff lint (CI `lint` job; needs ruff installed)
+lint:
+	ruff check src tools benchmarks
+
+## ruff formatter drift report (advisory in CI until the tree has been
+## `ruff format`-ed once; then fold into `lint`)
+format-check:
+	ruff format --check src
 
 ## the paper-reproduction benchmarks (Tables 1-3, Figs. 4-6)
 bench-paper:

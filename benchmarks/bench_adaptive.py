@@ -8,8 +8,6 @@ on the paper's own workloads and on a scaled 1024-node allocation."""
 
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core import (SimOptions, cdg_dag, compare_policies,
                         deepdrivemd_dag, summit_pool)
 

@@ -7,9 +7,9 @@ a workflow designer actually needs (the paper's §8 design guidance)."""
 
 from __future__ import annotations
 
-from repro.core import (SimOptions, async_ttx, fig2b_fork,
-                        fig2b_with_paper_tx, relative_improvement,
-                        sequential_ttx, simulate, summit_pool)
+from repro.core import (SimOptions, async_ttx, fig2b_with_paper_tx,
+                        relative_improvement, sequential_ttx, simulate,
+                        summit_pool)
 
 
 def worked_example():

@@ -13,12 +13,14 @@ from .sched_engine import (SCHEDULING_POLICIES, FifoBackfill, GpuAwareBestFit,
 from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     maskable_stages, predict, relative_improvement,
                     sequential_ttx, sequential_ttx_grouped,
-                    staggered_async_ttx)
+                    staggered_async_ttx, tx_lookup_fn)
+from .predictor import MakespanPrediction, MakespanPredictor
 from .simulator import SimOptions, SimResult, TaskRecord, simulate
 from .executor import ExecResult, RealExecutor
 from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
-                        adaptive_policy, async_policy, gpu_bestfit_policy,
-                        locality_policy, lpt_policy, sequential_policy)
+                        adaptive_policy, arbitrated_policy, async_policy,
+                        gpu_bestfit_policy, locality_policy, lpt_policy,
+                        sequential_policy)
 from .adaptive import PolicyComparison, compare_policies
 from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
                        Pipeline, Stage, cdg_dag, cdg_sequential_stage_tx,

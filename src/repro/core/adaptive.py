@@ -16,7 +16,11 @@ execution yields on top of the paper's set-level asynchronicity, and —
 since the runtime-feedback layer — the further gain of driving the
 adaptive scheduler by OBSERVED runtime TX (online EWMA estimates,
 straggler preemption + migration) instead of static ``tx_mean``
-(the ``adaptive_observed`` arm).
+(the ``adaptive_observed`` arm).  ``arbitrate=True`` upgrades that arm to
+the predictive control plane: speculation enabled next to migration, the
+engine's cost-model arbiter choosing per straggler, and the mid-run
+makespan re-predictions exposed on ``adaptive_observed.predictions``
+(see ``core/predictor.py``).
 """
 
 from __future__ import annotations
@@ -73,13 +77,18 @@ def compare_policies(dag: DAG, pool: PoolSpec, *,
                      options: SimOptions = SimOptions(),
                      sequential_stage_groups=None,
                      feedback: FeedbackOptions = FeedbackOptions(),
-                     observed_scheduling: str = "fifo") -> PolicyComparison:
+                     observed_scheduling: str = "fifo",
+                     arbitrate: bool = False) -> PolicyComparison:
     """Simulate the four execution policies on one workflow DG.
 
     The ``adaptive_observed`` arm shares the adaptive arm's task-level
     dependencies and ``observed_scheduling`` ordering (fifo by default, so
     the delta to ``adaptive`` isolates the feedback layer; pass "lpt" to
-    also re-rank sets by observed TX)."""
+    also re-rank sets by observed TX).  ``arbitrate=True`` additionally
+    enables speculative duplicates on that arm, so the engine's cost-model
+    arbiter picks migration vs speculation per straggler."""
+    if arbitrate:
+        feedback = dataclasses.replace(feedback, speculate=True)
     return PolicyComparison(
         sequential=simulate(dag, pool, "sequential", options=options,
                             sequential_stage_groups=sequential_stage_groups),

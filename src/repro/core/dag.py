@@ -72,6 +72,11 @@ class DAG:
         self._nodes: dict[str, TaskSet] = {}
         self._children: dict[str, list[str]] = {}
         self._parents: dict[str, list[str]] = {}
+        #: memoized structural traversals (topo order, ranks, branches);
+        #: invalidated on node/edge mutation.  The online predictor
+        #: re-evaluates Eqns. 2-6 every scheduling pass, so these being
+        #: O(V+E)-once instead of O(V+E)-per-call matters.
+        self._struct_cache: dict = {}
         for ts in task_sets:
             self.add(ts)
         for u, v in edges:
@@ -84,6 +89,7 @@ class DAG:
         self._nodes[ts.name] = ts
         self._children[ts.name] = []
         self._parents[ts.name] = []
+        self._struct_cache.clear()
         return ts
 
     def add_edge(self, parent: str, child: str) -> None:
@@ -93,9 +99,11 @@ class DAG:
             return
         self._children[parent].append(child)
         self._parents[child].append(parent)
+        self._struct_cache.clear()
         if self._has_cycle():
             self._children[parent].remove(child)
             self._parents[child].remove(parent)
+            self._struct_cache.clear()
             raise ValueError(f"edge ({parent!r}, {child!r}) creates a cycle")
 
     def replace(self, name: str, **kw) -> None:
@@ -138,6 +146,9 @@ class DAG:
             return True
 
     def topological_order(self) -> list[str]:
+        cached = self._struct_cache.get("topo")
+        if cached is not None:
+            return list(cached)
         indeg = {n: len(ps) for n, ps in self._parents.items()}
         q = deque(sorted(n for n, d in indeg.items() if d == 0))
         out: list[str] = []
@@ -150,24 +161,33 @@ class DAG:
                     q.append(c)
         if len(out) != len(self._nodes):
             raise ValueError("graph has a cycle")
-        return out
+        self._struct_cache["topo"] = out
+        return list(out)
 
     def ranks(self) -> dict[str, int]:
         """Breadth-first rank of each task set (paper Fig. 2/3 y-axis)."""
+        cached = self._struct_cache.get("ranks")
+        if cached is not None:
+            return dict(cached)
         r: dict[str, int] = {}
         for n in self.topological_order():
             ps = self._parents[n]
             r[n] = 0 if not ps else 1 + max(r[p] for p in ps)
-        return r
+        self._struct_cache["ranks"] = r
+        return dict(r)
 
     def rank_groups(self) -> list[list[str]]:
         """Task sets grouped by rank, rank-ascending (PST stages)."""
+        cached = self._struct_cache.get("rank_groups")
+        if cached is not None:
+            return [list(g) for g in cached]
         r = self.ranks()
         depth = max(r.values(), default=-1) + 1
         groups: list[list[str]] = [[] for _ in range(depth)]
         for n in self.topological_order():
             groups[r[n]].append(n)
-        return groups
+        self._struct_cache["rank_groups"] = groups
+        return [list(g) for g in groups]
 
     # -- the paper's §5.1 -------------------------------------------------
     def _chains_and_union(self) -> tuple[list[list[str]], dict[str, int], list[int]]:
@@ -225,8 +245,13 @@ class DAG:
 
     def branch_ids(self) -> dict[str, int]:
         """Final independent-branch id per task set (joins merged)."""
+        cached = self._struct_cache.get("branch_ids")
+        if cached is not None:
+            return dict(cached)
         _, owner, uf = self._chains_and_union()
-        return {n: uf[b] for n, b in owner.items()}
+        out = {n: uf[b] for n, b in owner.items()}
+        self._struct_cache["branch_ids"] = out
+        return dict(out)
 
     def num_branches(self) -> int:
         """Number of independent execution branches (see module docstring).

@@ -11,14 +11,22 @@ the engine an *observed* view of TX:
     variance over completed task durations.  Policies consult it (through
     :meth:`~repro.core.sched_engine.SchedEngine.tx_estimate`) instead of
     the static ``tx_mean`` once a set has ``min_samples`` completions;
-    before that the static value is the prior.
+    before that the static value is the prior.  Observations tagged with a
+    ``pool`` additionally feed a per-(set, pool) estimate, so a slow pool
+    raises only its own estimate instead of masquerading as set-wide
+    drift; pool-aware queries (``mean(name, pool=...)``) fall back
+    set-level -> prior when the pool split is not yet armed.
 
 ``FeedbackOptions``
     The knobs of the feedback loop: EWMA decay, straggler detection
-    threshold (runtime > mean + k*sigma above the set's running estimate),
-    and the migration cost model (base data-movement cost + the
-    allocation's per-pool-pair ``transfer_cost`` matrix, no-op'd when the
-    cost exceeds the expected benefit).
+    threshold (runtime > mean + k*sigma above the set's running estimate,
+    evaluated against the task's *pool* estimate when armed), the
+    migration cost model (base data-movement cost + the allocation's
+    per-pool-pair ``transfer_cost`` matrix, no-op'd when the cost exceeds
+    the expected benefit), and speculative duplicates (``speculate``) —
+    when both mitigations are enabled the engine's cost-model arbiter
+    picks per straggler using the predictor's marginal-makespan delta
+    (see ``core/predictor.py`` and ``SchedEngine.arbitrate``).
 
 Both execution substrates (``simulate()`` and ``RealExecutor.run()``) feed
 completions back via ``SchedEngine.observe``; see DESIGN.md
@@ -66,6 +74,22 @@ class FeedbackOptions:
     straggler_min_ratio: float = 1.5
     #: master switch for preemption + migration (estimation always runs).
     migrate: bool = True
+    #: launch speculative duplicates of stragglers (first finisher wins,
+    #: the loser is cancelled and its slot freed).  With ``migrate`` also
+    #: on, the engine's arbiter picks per straggler by predicted marginal
+    #: makespan (see ``SchedEngine.arbitrate``); off by default so plain
+    #: ``FeedbackOptions()`` keeps the PR-2 always-migrate behaviour.
+    speculate: bool = False
+    #: speculative duplicates allowed per task.
+    max_speculations_per_task: int = 1
+    #: the arbiter's model of a flagged straggler left alone: its expected
+    #: remaining runtime is ``max(mean, tail_mean_ratio * mean - elapsed)``
+    #: — heavy-tailed durations stay heavy once past the detection
+    #: threshold, so the default assumes ~4x the set mean in total.
+    straggler_tail_ratio: float = 4.0
+    #: maintain + consult per-(set, pool) TX estimates so a slow pool does
+    #: not pollute its siblings' estimates or straggler thresholds.
+    per_pool: bool = True
     #: fixed data-movement cost charged on every migration (seconds),
     #: added to the allocation's ``transfer_cost[src][dst]``.
     migration_base_cost: float = 0.0
@@ -97,6 +121,12 @@ class TxEstimator:
 
     The first observation initialises ``mean = x, var = 0``.  ``alpha``
     close to 1 tracks drift aggressively; close to 0 averages long-term.
+
+    Observations carrying a ``pool`` tag also update a per-(set, pool)
+    estimate.  Pool-aware queries prefer that split once it has
+    observations, falling back to the set-level blend, then the prior —
+    so a slow pool's durations raise only that pool's estimate instead of
+    reading as set-wide drift on its siblings.
     """
 
     def __init__(self, alpha: float = 0.25,
@@ -108,13 +138,13 @@ class TxEstimator:
         #: by :meth:`mean` until a set has observations.
         self.prior: dict[str, float] = dict(prior or {})
         self._est: dict[str, SetEstimate] = {}
+        self._pool_est: dict[tuple[str, str], SetEstimate] = {}
 
     # -- updates -----------------------------------------------------------
-    def observe(self, name: str, duration: float) -> SetEstimate:
-        """Fold one completed task's duration into the set's estimate."""
-        e = self._est.get(name)
+    def _fold(self, est: "dict", key, duration: float) -> SetEstimate:
+        e = est.get(key)
         if e is None:
-            e = self._est[name] = SetEstimate(mean=float(duration))
+            e = est[key] = SetEstimate(mean=float(duration))
         else:
             d = duration - e.mean
             e.mean += self.alpha * d
@@ -122,33 +152,65 @@ class TxEstimator:
         e.count += 1
         return e
 
-    def observe_many(self, name: str, durations: Iterable[float]) -> None:
+    def observe(self, name: str, duration: float,
+                pool: "str | None" = None) -> SetEstimate:
+        """Fold one completed task's duration into the set's estimate (and
+        into the per-(set, pool) estimate when ``pool`` is given)."""
+        if pool is not None:
+            self._fold(self._pool_est, (name, pool), duration)
+        return self._fold(self._est, name, duration)
+
+    def observe_many(self, name: str, durations: Iterable[float],
+                     pool: "str | None" = None) -> None:
         for d in durations:
-            self.observe(name, d)
+            self.observe(name, d, pool=pool)
 
     # -- queries -----------------------------------------------------------
-    def count(self, name: str) -> int:
+    def _lookup(self, name: str,
+                pool: "str | None") -> "SetEstimate | None":
+        if pool is not None:
+            e = self._pool_est.get((name, pool))
+            if e is not None and e.count > 0:
+                return e
+        return self._est.get(name)
+
+    def count(self, name: str, pool: "str | None" = None) -> int:
+        if pool is not None:
+            e = self._pool_est.get((name, pool))
+            return e.count if e else 0
         e = self._est.get(name)
         return e.count if e else 0
 
-    def mean(self, name: str, default: float = 0.0) -> float:
-        """Observed EWMA mean, falling back to the prior, then ``default``."""
-        e = self._est.get(name)
+    def mean(self, name: str, default: float = 0.0,
+             pool: "str | None" = None) -> float:
+        """Observed EWMA mean — the (set, pool) split when armed, else the
+        set-level blend — falling back to the prior, then ``default``."""
+        e = self._lookup(name, pool)
         if e is not None and e.count > 0:
             return e.mean
         return self.prior.get(name, default)
 
-    def std(self, name: str, default: float = 0.0) -> float:
-        e = self._est.get(name)
+    def std(self, name: str, default: float = 0.0,
+            pool: "str | None" = None) -> float:
+        e = self._lookup(name, pool)
         if e is not None and e.count > 1:
             return e.std
         return default
 
-    def is_straggler(self, name: str, runtime: float,
-                     fb: FeedbackOptions) -> bool:
+    def is_straggler(self, name: str, runtime: float, fb: FeedbackOptions,
+                     pool: "str | None" = None) -> bool:
         """Straggler test against the set's *running* estimate: armed only
-        after ``min_samples`` completions of the set."""
-        e = self._est.get(name)
+        after ``min_samples`` completions of the set.  With ``pool`` given
+        and its split armed, the test uses the pool's own estimate — tasks
+        on a uniformly slow pool are then not mass-flagged merely for
+        running there."""
+        e = None
+        if pool is not None:
+            pe = self._pool_est.get((name, pool))
+            if pe is not None and pe.count >= fb.min_samples:
+                e = pe
+        if e is None:
+            e = self._est.get(name)
         if e is None or e.count < fb.min_samples:
             return False
         return (runtime > e.mean + fb.straggler_k * e.std
@@ -157,3 +219,8 @@ class TxEstimator:
     def snapshot(self) -> dict[str, SetEstimate]:
         """A copy of every per-set estimate (for reporting/benchmarks)."""
         return {n: dataclasses.replace(e) for n, e in self._est.items()}
+
+    def pool_snapshot(self) -> dict[tuple[str, str], SetEstimate]:
+        """A copy of every per-(set, pool) estimate."""
+        return {k: dataclasses.replace(e)
+                for k, e in self._pool_est.items()}

@@ -19,10 +19,14 @@ uses, so the two substrates enforce identical semantics by construction.
 Heterogeneous multi-pool :class:`~repro.core.resources.Allocation`s and
 the ``fifo`` / ``lpt`` / ``gpu_bestfit`` / ``locality`` policies work
 unchanged here, as does runtime feedback (``feedback=FeedbackOptions()``):
-completions feed the shared engine's online TX estimator, and a watchdog
-in the dispatcher preempts stragglers and resubmits them on a different
+completions feed the shared engine's online TX estimator (pool-tagged,
+so per-pool splits work), a watchdog in the dispatcher mitigates
+stragglers through the engine's arbiter — preempt + resubmit on another
 pool (the abandoned attempt is invalidated by generation, exactly like
-the simulator's migration events).
+the simulator's migration events) or race a speculative duplicate
+(first finisher wins; the loser is cancelled via the engine's finished
+set) — and every scheduling pass re-predicts the makespan
+(``ExecResult.predictions``, see ``core/predictor.py``).
 """
 
 from __future__ import annotations
@@ -50,6 +54,11 @@ class ExecResult:
     policy: str = "fifo"
     #: straggler preemption + migration count (runtime feedback enabled)
     migrations: int = 0
+    #: speculative-duplicate launches (first finisher wins, loser freed)
+    speculations: int = 0
+    #: mid-run makespan re-predictions (``SchedEngine.repredict`` trace,
+    #: feedback enabled; see ``core/predictor.py``)
+    predictions: list = dataclasses.field(default_factory=list)
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -117,15 +126,17 @@ class RealExecutor:
         def preemptible_sleep(name: str, i: int, my_gen: int,
                               seconds: float) -> bool:
             """Sleep that wakes early when the attempt is preempted (gen
-            bumped), so an abandoned synthetic attempt does not hold its
-            worker slot for the full straggler duration.  True = slept to
-            completion, False = preempted.  (Real payloads cannot be
-            interrupted this way — they run to completion and their stale
-            result is discarded at the gen check.)"""
+            bumped) or another attempt already finished the task, so an
+            abandoned synthetic attempt does not hold its worker slot for
+            the full straggler duration.  True = slept to completion,
+            False = superseded.  (Real payloads cannot be interrupted this
+            way — they run to completion and their stale result is
+            discarded at the completion check.)"""
             deadline = time.perf_counter() + seconds
             with cv:
                 while True:
-                    if my_gen != gen.get((name, i), 0):
+                    if (my_gen != gen.get((name, i), 0)
+                            or (name, i) in engine.finished):
                         return False
                     remaining = deadline - time.perf_counter()
                     if remaining <= 0:
@@ -134,30 +145,40 @@ class RealExecutor:
 
         def body(name: str, i: int, pool_idx: int, my_gen: int,
                  migration_cost: float = 0.0,
-                 rerun_tx: float = 0.0) -> None:
+                 rerun_tx: float = 0.0,
+                 spec: bool = False) -> None:
             ts = g.node(name)
             with cv:
-                if my_gen != gen.get((name, i), 0):
+                if (name, i) in engine.finished:
+                    return  # another attempt already finished the task
+                if not spec and my_gen != gen.get((name, i), 0):
                     return  # superseded while still queued
                 first_start.setdefault((name, i),
                                        time.perf_counter() - t0)
             if self.launch_latency:
                 time.sleep(self.launch_latency)
             if migration_cost:
-                # data movement for a migrated re-run
+                # data movement for a migrated or speculative re-run
                 time.sleep(migration_cost * self.tx_scale)
             with cv:
-                if my_gen != gen.get((name, i), 0):
+                if (name, i) in engine.finished:
+                    return
+                if not spec and my_gen != gen.get((name, i), 0):
                     return
                 # straggler/estimator clock starts when the WORK starts:
-                # raw launch latency and migration cost must not read as
-                # (tx_scale-modelled) task duration
-                started[(name, i)] = time.perf_counter() - t0
+                # raw launch latency and migration/data cost must not read
+                # as (tx_scale-modelled) task duration.  A speculative
+                # duplicate keeps its own clock — the original's straggler
+                # clock must keep running while they race.
+                work_start = time.perf_counter() - t0
+                if not spec:
+                    started[(name, i)] = work_start
             if ts.payload is not None:
                 ts.payload(i)
-            elif my_gen:
-                # migrated re-run (regardless of the fabric's cost): a
-                # fresh attempt at the TX estimate read at preemption time
+            elif spec or my_gen:
+                # migrated or speculative re-run (regardless of the
+                # fabric's cost): a fresh attempt at the TX estimate read
+                # at mitigation time
                 if not preemptible_sleep(name, i, my_gen,
                                          rerun_tx * self.tx_scale):
                     return
@@ -168,25 +189,34 @@ class RealExecutor:
                     return
             end = time.perf_counter() - t0
             with cv:
-                if my_gen != gen.get((name, i), 0):
+                if (name, i) in engine.finished:
+                    return  # lost the race against the other attempt
+                if not spec and my_gen != gen.get((name, i), 0):
                     return  # preempted + migrated; a newer attempt owns it
-                attempt_start = started.pop((name, i), end)
+                attempt_start = (work_start if spec
+                                 else started.pop((name, i), end))
+                if spec:
+                    started.pop((name, i), None)
                 start = first_start.pop((name, i), attempt_start)
                 engine.complete(name, i)
                 # observe in MODELLED seconds (wall / tx_scale) so the
                 # estimates stay commensurate with the tx_mean priors and
                 # the allocation's transfer costs
-                engine.observe(name, (end - attempt_start) / self.tx_scale)
+                engine.observe(name, (end - attempt_start) / self.tx_scale,
+                               pool=pool_idx)
                 records.append(TaskRecord(name, i, start, end,
                                           ts.cpus_per_task, ts.gpus_per_task,
+                                          duplicate=spec,
                                           pool=engine.pool_name(pool_idx),
                                           migrated=(name, i) in gen))
                 cv.notify_all()
 
-        # no watchdog on single-pool allocations: try_migrate can never
-        # find a target, so don't busy-poll the dispatcher for it
-        watchdog = (feedback is not None and feedback.migrate
-                    and len(engine.pools) > 1)
+        # the watchdog needs a mitigation that can actually fire: migration
+        # needs a second pool; speculation only needs a free slot, so it
+        # keeps the watchdog alive even on single-pool allocations
+        watchdog = (feedback is not None
+                    and (feedback.speculate
+                         or (feedback.migrate and len(engine.pools) > 1)))
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
                 while not engine.done():
@@ -195,32 +225,44 @@ class RealExecutor:
                     for name, i, pool_idx in batch:
                         ex.submit(body, name, i, pool_idx, 0)
                     if not engine.done() and not batch:
-                        # with migration on, the wait doubles as the
+                        # with mitigation on, the wait doubles as the
                         # straggler watchdog cadence
                         cv.wait(timeout=0.05 if watchdog else 5.0)
+                    # scheduling pass on the modelled clock (see observe)
+                    now = (time.perf_counter() - t0) / self.tx_scale
+                    modelled = {k: v / self.tx_scale
+                                for k, v in started.items()}
                     if watchdog:
-                        # straggler scan on the modelled clock (see observe)
-                        now = (time.perf_counter() - t0) / self.tx_scale
-                        modelled = {k: v / self.tx_scale
-                                    for k, v in started.items()}
                         for (sn, si) in engine.stragglers(modelled, now):
-                            mig = engine.try_migrate(sn, si)
-                            if mig is None:
+                            act = engine.arbitrate(
+                                sn, si, now - modelled[(sn, si)])
+                            if act is None:
                                 continue
-                            dst, cost = mig
-                            gen[(sn, si)] = gen.get((sn, si), 0) + 1
-                            # straggler clock pauses until the re-run's
-                            # worker stamps its own start
-                            started.pop((sn, si), None)
-                            ex.submit(body, sn, si, dst, gen[(sn, si)],
-                                      cost, engine.tx_estimate(sn))
-                            # wake preempted synthetic sleeps so they
-                            # release their worker slots promptly
-                            cv.notify_all()
+                            kind, dst, cost = act
+                            if kind == "migrate":
+                                gen[(sn, si)] = gen.get((sn, si), 0) + 1
+                                # straggler clock pauses until the re-run's
+                                # worker stamps its own start
+                                started.pop((sn, si), None)
+                                ex.submit(body, sn, si, dst, gen[(sn, si)],
+                                          cost,
+                                          engine.tx_estimate(sn, pool=dst))
+                                # wake preempted synthetic sleeps so they
+                                # release their worker slots promptly
+                                cv.notify_all()
+                            else:  # speculate: a duplicate races the task
+                                ex.submit(body, sn, si, dst,
+                                          gen.get((sn, si), 0), cost,
+                                          engine.tx_estimate(sn, pool=dst),
+                                          True)
+                    # online makespan re-prediction (core/predictor.py)
+                    engine.repredict(now, modelled)
 
         makespan = max((r.end for r in records), default=0.0)
         return ExecResult(makespan=makespan, records=records,
                           mode=mode if not task_level else f"{mode}+task_level",
                           tasks_total=len(records),
                           policy=engine.policy.name,
-                          migrations=engine.migrations)
+                          migrations=engine.migrations,
+                          speculations=engine.speculations,
+                          predictions=engine.predictions)

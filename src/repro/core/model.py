@@ -5,6 +5,12 @@ relative improvement I = 1 - t_async / t_seq, including the paper's
 framework-overhead corrections (EnTK ~4%; enabling asynchronicity ~2%,
 Table 3 caption).
 
+Every equation evaluator takes an optional ``tx`` lookup (a callable
+``name -> mean TX`` or a mapping) overriding the static ``TaskSet.tx_mean``
+values: the offline model passes nothing (the paper's static priors) while
+the online predictor (``core/predictor.py``) passes the live EWMA
+estimates — one shared implementation of Eqns. 2-6, two TX sources.
+
 Terminology (paper):
   TX   task execution time
   TTX  total time to execution (makespan)
@@ -14,9 +20,24 @@ Terminology (paper):
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Mapping
 
 from .dag import DAG
 from .resources import PoolSpec, Resources, doa_res, DoaResStrategy
+
+#: override for the static ``TaskSet.tx_mean``: ``name -> mean TX``
+TxLookup = Callable[[str], float] | Mapping[str, float] | None
+
+
+def tx_lookup_fn(dag: DAG, tx: TxLookup = None) -> Callable[[str], float]:
+    """Normalise a :data:`TxLookup` into a ``name -> TX`` function, falling
+    back to the DG's static ``tx_mean`` (``tx=None`` or a mapping miss)."""
+    if tx is None:
+        return lambda n: dag.node(n).tx_mean
+    if callable(tx):
+        return tx
+    mapping = tx
+    return lambda n: mapping.get(n, dag.node(n).tx_mean)
 
 #: Overhead fractions measured by the paper (Table 3 caption).
 ENTK_OVERHEAD = 0.04
@@ -44,18 +65,20 @@ class Prediction:
 # ---------------------------------------------------------------------------
 
 def sequential_ttx(dag: DAG, overhead_c: float = 0.0,
-                   n_iterations: int = 1) -> float:
+                   n_iterations: int = 1, tx: TxLookup = None) -> float:
     """Eqn. 2: ``t_seq = sum_i t_i + C`` over PST stages.
 
     A stage is one DG rank executed under a BSP barrier; task sets sharing a
     rank run concurrently within the stage, so the stage TX is their max.
     For the paper's single-chain workflows this reduces literally to the sum
     of task-set TXs; ``n_iterations`` scales the whole pipeline (the paper's
-    ``3 t_seq`` for three DeepDriveMD iterations).
+    ``3 t_seq`` for three DeepDriveMD iterations).  ``tx`` overrides the
+    static per-set TXs (see :data:`TxLookup`).
     """
+    t = tx_lookup_fn(dag, tx)
     total = 0.0
     for group in dag.rank_groups():
-        total += max(dag.node(n).tx_mean for n in group)
+        total += max(t(n) for n in group)
     return n_iterations * total + overhead_c
 
 
@@ -69,7 +92,8 @@ def sequential_ttx_grouped(stage_tx: list[float], overhead_c: float = 0.0,
 # Eqn. 3/4 — asynchronous makespan via independent branches
 # ---------------------------------------------------------------------------
 
-def async_ttx(dag: DAG, overhead_c: float = 0.0) -> tuple[float, list[float]]:
+def async_ttx(dag: DAG, overhead_c: float = 0.0,
+              tx: TxLookup = None) -> tuple[float, list[float]]:
     """Eqn. 3: ``t_async = sum_i t_i + max_j tt_Hj + C``.
 
     ``sum_i t_i`` covers the sequential *trunk* (ranks before the last fork
@@ -77,12 +101,14 @@ def async_ttx(dag: DAG, overhead_c: float = 0.0) -> tuple[float, list[float]]:
     contributes its chain TTX (Eqn. 4) and only the longest one survives
     (TX masking).  Task sets sharing a rank within the same trunk stage or
     branch segment run concurrently (max), mirroring Eqn. 2's stage rule.
+    ``tx`` overrides the static per-set TXs (see :data:`TxLookup`).
     """
+    t = tx_lookup_fn(dag, tx)
     branch_of = dag.branch_ids()
     n_branches = len(set(branch_of.values()))
 
     if n_branches <= 1:
-        return sequential_ttx(dag, overhead_c), []
+        return sequential_ttx(dag, overhead_c, tx=tx), []
 
     # The sequential trunk is the prefix of ranks whose task sets all belong
     # to the branch of the first source; after the first rank that mixes
@@ -94,19 +120,19 @@ def async_ttx(dag: DAG, overhead_c: float = 0.0) -> tuple[float, list[float]]:
     for group in dag.rank_groups():
         ids = {branch_of[n] for n in group}
         if not forked and ids == {first_branch}:
-            trunk_tx += max(dag.node(n).tx_mean for n in group)
+            trunk_tx += max(t(n) for n in group)
             continue
         forked = True
         per_branch: dict[int, float] = {}
         for n in group:
             b = branch_of[n]
-            per_branch[b] = max(per_branch.get(b, 0.0), dag.node(n).tx_mean)
-        for b, tx in per_branch.items():
-            branch_tail[b] = branch_tail.get(b, 0.0) + tx
+            per_branch[b] = max(per_branch.get(b, 0.0), t(n))
+        for b, btx in per_branch.items():
+            branch_tail[b] = branch_tail.get(b, 0.0) + btx
 
     tails = sorted(branch_tail.values(), reverse=True)
-    t = trunk_tx + (tails[0] if tails else 0.0) + overhead_c
-    return t, tails
+    total = trunk_tx + (tails[0] if tails else 0.0) + overhead_c
+    return total, tails
 
 
 def relative_improvement(t_seq: float, t_async: float) -> float:
@@ -167,15 +193,18 @@ def predict(dag: DAG, pool: PoolSpec, *,
             strategy: DoaResStrategy = "minimal",
             entk_overhead: float = ENTK_OVERHEAD,
             async_overhead: float = ASYNC_OVERHEAD,
-            apply_overheads: bool = True) -> Prediction:
+            apply_overheads: bool = True,
+            tx: TxLookup = None) -> Prediction:
     """Predict t_seq, t_async and I for a workflow DG on an allocation.
 
     Matches the paper's Table 3 ``Pred.`` columns: the asynchronous
     prediction is inflated by the EnTK overhead (4%) and, when the DG
     actually admits asynchronicity, by the async-enablement overhead (2%).
+    ``tx`` swaps the static per-set TXs for live estimates (this is how
+    ``core/predictor.py`` re-evaluates Eqns. 2-5 mid-run).
     """
-    t_seq = sequential_ttx(dag)
-    t_async_raw, _ = async_ttx(dag)
+    t_seq = sequential_ttx(dag, tx=tx)
+    t_async_raw, _ = async_ttx(dag, tx=tx)
     dd = dag.doa_dep()
     dr = doa_res(dag, pool, strategy)
     w = min(dd, dr)

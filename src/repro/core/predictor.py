@@ -1,0 +1,270 @@
+"""Online makespan / asynchronicity prediction — the paper's analytic
+model (Eqns. 2-6) re-evaluated mid-run against *live* estimator state.
+
+The offline model (``core/model.py``) predicts the makespan once, from the
+static ``TaskSet.tx_mean`` priors.  PR 2 showed real runs have heavy-tailed,
+drifting durations that an online EWMA estimator tracks well — but the
+analytic model never saw the updates.  This module closes that loop:
+
+``MakespanPredictor``
+    Owns one workflow DG + allocation and re-evaluates the shared equation
+    implementations (``sequential_ttx`` / ``async_ttx`` /
+    ``relative_improvement`` / ``staggered_async_ttx`` — the *same* code
+    the offline model runs, via their ``tx`` lookup parameter) with the
+    engine's live TX estimates, plus a resource-aware *residual* bound on
+    the remaining makespan:
+
+    - per-set residual TTX: the not-yet-started tasks execute in waves of
+      ``slots_s`` (how many tasks of the set the whole allocation can run
+      concurrently); a wave of ``k`` tasks spans the *maximum* of ``k``
+      draws, so each wave is priced ``t_s + tail_factor * sigma_s *
+      sqrt(2 ln k)`` (the Gaussian expected-maximum order statistic) with
+      ``sigma_s`` the estimator's live dispersion — under heavy-tailed
+      durations the mean alone systematically underpredicts, and the
+      dispersion is exactly the information that accumulates as the run
+      observes completions;
+    - running tasks contribute their longest expected remainder
+      (``max(t_s - elapsed, 0)`` plus the same tail term);
+    - remaining makespan = max(longest residual dependency path, residual
+      work / capacity per non-oversubscribed resource class);
+    - predicted total = ``now + remaining``.
+
+``SchedEngine.repredict`` calls this at every scheduling pass (substrates
+amortise exactly like the straggler scans) and appends the result to the
+``SimResult`` / ``ExecResult`` ``predictions`` trace; as observations
+accumulate the predicted total converges onto the realized makespan
+(``benchmarks/bench_predictor.py`` asserts the error shrinks
+monotonically).
+
+The predictor also prices straggler mitigation for the engine's arbiter
+(``SchedEngine.arbitrate``): :meth:`MakespanPredictor.straggler_baseline`
+models a flagged straggler left alone (heavy tails stay heavy:
+``max(mean, tail_ratio * mean - elapsed)``) and
+:meth:`MakespanPredictor.mitigation_delta` is the marginal-makespan delta
+of an action — ``(cost + rerun TX) - baseline`` — negative when acting
+beats waiting.  Migration vs speculation is then a pure cost comparison.
+
+Early predictions lean on the static priors (no observations yet), which
+exclude the EnTK/async overheads that observed durations include — one of
+the error sources the convergence benchmark watches shrink.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence
+
+from .dag import DAG, TaskSet
+from .model import (async_ttx, relative_improvement, sequential_ttx,
+                    staggered_async_ttx)
+from .resources import Allocation, PoolSpec, as_allocation
+
+TxFn = Callable[[str], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class MakespanPrediction:
+    """One mid-run snapshot of the re-evaluated analytic model."""
+
+    #: scheduling clock the prediction was made at (modelled seconds)
+    now: float
+    #: fraction of the workflow's tasks finished at ``now``
+    done_fraction: float
+    #: Eqn. 2 on live TXs (whole workflow, sequential/BSP semantics)
+    t_seq: float
+    #: Eqn. 3/4 on live TXs (whole workflow, asynchronous semantics)
+    t_async: float
+    #: Eqn. 5 on live TXs: I = 1 - t_async / t_seq
+    improvement: float
+    #: predicted makespan still ahead of ``now`` (residual bound)
+    remaining: float
+    #: predicted total makespan: ``now + remaining``
+    total: float
+
+
+class MakespanPredictor:
+    """Re-evaluate Eqns. 2-6 for one DG + allocation from live TX state.
+
+    ``tail_factor`` scales the dispersion (expected-maximum) term of the
+    residual bound; 0 disables it (pure mean-based waves, the paper's
+    assumption), 1.0 prices each wave at mean + sigma * sqrt(2 ln k).
+    """
+
+    def __init__(self, dag: DAG, pool: "PoolSpec | Allocation",
+                 tail_factor: float = 1.0):
+        self.g = dag
+        self.tail_factor = tail_factor
+        self.alloc = as_allocation(pool)
+        self._order = dag.topological_order()
+        self._slots = {n: self._set_slots(dag.node(n)) for n in self._order}
+        # resource classes the work bound may use: skip a class as soon as
+        # any pool oversubscribes it (its capacity is then not a bound)
+        self._bound_cpus = (not any(p.oversubscribe_cpus
+                                    for p in self.alloc.pools))
+        self._bound_gpus = (not any(p.oversubscribe_gpus
+                                    for p in self.alloc.pools))
+
+    def _set_slots(self, ts: TaskSet) -> int:
+        """How many tasks of ``ts`` the allocation can run concurrently."""
+        total = 0
+        for p in self.alloc.pools:
+            if not p.accepts(ts):
+                continue
+            lims = []
+            if ts.cpus_per_task > 0 and not p.oversubscribe_cpus:
+                lims.append(p.total.cpus // ts.cpus_per_task)
+            if ts.gpus_per_task > 0 and not p.oversubscribe_gpus:
+                lims.append(p.total.gpus // ts.gpus_per_task)
+            total += min(lims) if lims else ts.num_tasks
+        return max(1, min(ts.num_tasks, total))
+
+    # -- Eqns. 2-6 on live TXs ---------------------------------------------
+    def live_model(self, tx: TxFn) -> tuple[float, float, float]:
+        """Whole-workflow Eqns. 2-5 with live TXs:
+        ``(t_seq, t_async, improvement)``."""
+        t_seq = sequential_ttx(self.g, tx=tx)
+        t_async, _ = async_ttx(self.g, tx=tx)
+        return t_seq, t_async, relative_improvement(t_seq, t_async)
+
+    def live_staggered(self, stage_names: Sequence[str], n: int,
+                       maskable: Sequence[bool], tx: TxFn) -> float:
+        """Eqn. 6 (staggered multi-iteration pipelines) with live stage
+        TXs — e.g. DeepDriveMD's ``3 t_seq - 2 t_Aggr - 1 t_Train``."""
+        return staggered_async_ttx([tx(s) for s in stage_names], n,
+                                   list(maskable))
+
+    # -- residual (remaining-makespan) bound -------------------------------
+    def _wave_span(self, t: float, sigma: float, k: int) -> float:
+        """Expected span of one wave of ``k`` concurrent task draws: the
+        mean plus the expected-maximum excess ``sigma * sqrt(2 ln k)``."""
+        if k <= 1 or sigma <= 0.0 or self.tail_factor <= 0.0:
+            return t
+        return t + self.tail_factor * sigma * math.sqrt(2.0 * math.log(k))
+
+    @staticmethod
+    def _norm_cdf(x: float) -> float:
+        return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+    def expected_remaining(self, t: float, sigma: float,
+                           elapsed: float) -> float:
+        """Expected remaining runtime of a task that has already run
+        ``elapsed`` seconds, modelling its duration as lognormal with mean
+        ``t`` and standard deviation ``sigma``: ``E[T | T > e] - e``.
+
+        This is the hazard correction the mean alone misses — under heavy
+        tails a task that has outlived its mean is *expected to keep
+        running*, and the correction grows with ``elapsed``.  With
+        ``sigma = 0`` it degenerates to ``max(t - elapsed, 0)``.
+        """
+        if elapsed <= 0.0:
+            return t
+        if sigma <= 0.0 or t <= 0.0 or self.tail_factor <= 0.0:
+            return max(0.0, t - elapsed)
+        s2 = math.log(1.0 + (sigma / t) ** 2)     # sigma_log^2
+        s = math.sqrt(s2)
+        mu = math.log(t) - 0.5 * s2
+        d = (math.log(elapsed) - mu) / s
+        denom = self._norm_cdf(-d)
+        if denom < 1e-12:       # far in the tail: heavy-tail linear growth
+            return max(0.0, t - elapsed) + sigma
+        cond_mean = t * self._norm_cdf(s - d) / denom
+        return max(max(0.0, t - elapsed), cond_mean - elapsed)
+
+    def predict(self, tx: TxFn, now: float,
+                pending: Mapping[str, int],
+                running_elapsed: "Mapping[tuple[str, int], float]",
+                done_fraction: float = 0.0,
+                tx_std: "TxFn | None" = None) -> MakespanPrediction:
+        """One prediction snapshot.
+
+        ``pending`` maps set -> tasks not yet started (queued or blocked);
+        ``running_elapsed`` maps (set, index) -> seconds the task has been
+        running on the caller's clock (the same clock the estimator was
+        fed, so live TXs and elapsed times are commensurate); ``tx_std``
+        supplies the live dispersion per set (``None`` = no tail term).
+        """
+        std = tx_std or (lambda _n: 0.0)
+        run_rem: dict[str, float] = {}
+        run_work: dict[str, float] = {}
+        run_count: dict[str, int] = {}
+        for (name, _i), elapsed in running_elapsed.items():
+            rem = self.expected_remaining(tx(name), std(name), elapsed)
+            run_rem[name] = max(run_rem.get(name, 0.0), rem)
+            run_work[name] = run_work.get(name, 0.0) + rem
+            run_count[name] = run_count.get(name, 0) + 1
+
+        residual: dict[str, float] = {}
+        cpu_work = gpu_work = 0.0
+        for n in self._order:
+            ts = self.g.node(n)
+            t = tx(n)
+            s = std(n)
+            m = pending.get(n, 0)
+            full, last = divmod(m, self._slots[n])
+            r = full * self._wave_span(t, s, self._slots[n])
+            if last:
+                r += self._wave_span(t, s, last)
+            k_run = run_count.get(n, 0)
+            if k_run:
+                r += (run_rem.get(n, 0.0)
+                      + self._wave_span(0.0, s, k_run))
+            residual[n] = r
+            work = m * t + run_work.get(n, 0.0)
+            cpu_work += work * ts.cpus_per_task
+            gpu_work += work * ts.gpus_per_task
+
+        # longest residual dependency path (finished sets weigh 0)
+        best: dict[str, float] = {}
+        for n in self._order:
+            base = max((best[p] for p in self.g.parents(n)), default=0.0)
+            best[n] = base + residual[n]
+        remaining = max(best.values(), default=0.0)
+
+        # residual work / capacity, per non-oversubscribed resource class
+        total = self.alloc.total
+        if self._bound_cpus and total.cpus:
+            remaining = max(remaining, cpu_work / total.cpus)
+        if self._bound_gpus and total.gpus:
+            remaining = max(remaining, gpu_work / total.gpus)
+
+        t_seq, t_async, improvement = self.live_model(tx)
+        return MakespanPrediction(
+            now=now, done_fraction=done_fraction, t_seq=t_seq,
+            t_async=t_async, improvement=improvement,
+            remaining=remaining, total=now + remaining)
+
+    # -- straggler-mitigation pricing (the arbiter's cost model) -----------
+    @staticmethod
+    def straggler_baseline(t_est: float, elapsed: float,
+                           tail_ratio: float) -> float:
+        """Expected *remaining* runtime of a flagged straggler left alone:
+        heavy-tailed durations stay heavy once past the detection
+        threshold, so assume ``tail_ratio x`` the set mean in total (but
+        never less than one fresh mean ahead)."""
+        return max(t_est, tail_ratio * t_est - elapsed)
+
+    @staticmethod
+    def mitigation_delta(t_rerun: float, cost: float,
+                         baseline_remaining: float) -> float:
+        """Marginal-makespan delta of *migration*: the original attempt is
+        killed, so the task finishes after data-movement cost + a fresh
+        rerun, against leaving the straggler alone.  Negative = the action
+        is predicted to finish the task sooner."""
+        return (cost + t_rerun) - baseline_remaining
+
+    @staticmethod
+    def speculation_delta(t_rerun: float, cost: float,
+                          baseline_remaining: float,
+                          slot_pressure: bool) -> float:
+        """Marginal-makespan delta of a *speculative duplicate*: first
+        finisher wins, so the task finishes at ``min(baseline, cost +
+        rerun)`` — but the race holds a second slot for its duration,
+        which under ``slot_pressure`` (queued work exists that could have
+        used it) is charged as displaced work.  Without pressure (tail
+        phase, idle capacity) the duplicate slot is free and speculation
+        strictly dominates."""
+        delta = min(baseline_remaining, cost + t_rerun) - baseline_remaining
+        if slot_pressure:
+            delta += min(t_rerun, baseline_remaining)
+        return delta

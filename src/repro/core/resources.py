@@ -150,8 +150,8 @@ class Allocation:
         if self.transfer_cost is not None:
             tc = tuple(tuple(float(c) for c in row)
                        for row in self.transfer_cost)
-            if len(tc) != len(self.pools) or \
-                    any(len(row) != len(self.pools) for row in tc):
+            if (len(tc) != len(self.pools)
+                    or any(len(row) != len(self.pools) for row in tc)):
                 raise ValueError(
                     f"transfer_cost must be {len(self.pools)}x"
                     f"{len(self.pools)} to match pools")

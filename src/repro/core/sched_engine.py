@@ -42,18 +42,38 @@ Policies (registry: ``SCHEDULING_POLICIES``; table mirrored in DESIGN.md)
 Runtime feedback (``core/estimator.py``)
 ----------------------------------------
 Constructed with ``feedback=FeedbackOptions(...)``, the engine keeps a
-per-set online TX estimate (EWMA mean + variance over completions fed in
-via :meth:`SchedEngine.observe`); :meth:`SchedEngine.tx_estimate` serves
+per-set (and, with ``per_pool``, per-(set, pool)) online TX estimate
+(EWMA mean + variance over completions fed in via
+:meth:`SchedEngine.observe`); :meth:`SchedEngine.tx_estimate` serves
 policies the observed mean once a set has ``min_samples`` completions and
 the static ``tx_mean`` prior before that, and the set priority order is
 recomputed whenever estimates move.  :meth:`SchedEngine.stragglers` flags
 running tasks whose runtime exceeds ``mean + k*sigma`` of the running
-estimate, and :meth:`SchedEngine.try_migrate` preempts + requeues such a
-task onto a different pool — releasing the source pool's resources,
-charging ``migration_base_cost + transfer_cost[src][dst]`` — unless the
-cost exceeds the expected benefit (``max_cost_ratio`` x estimated TX), no
-other pool fits, or the task already migrated ``max_migrations_per_task``
-times.
+estimate (the task's *pool* estimate when armed, so a uniformly slow pool
+is not mass-flagged), and two mitigations compete:
+
+- :meth:`SchedEngine.try_migrate` preempts + requeues the task onto a
+  different pool — releasing the source pool's resources, charging
+  ``migration_base_cost + transfer_cost[src][dst]``;
+- :meth:`SchedEngine.try_speculate` launches a duplicate attempt on a
+  pool with a *free* slot (the original keeps running; first finisher
+  wins, the loser is cancelled and its slot freed).
+
+Both no-op when the cost exceeds the expected benefit (``max_cost_ratio``
+x estimated TX), no pool fits, or the task hit its per-task cap.  With
+both enabled, :meth:`SchedEngine.arbitrate` picks per straggler by the
+predictor's marginal-makespan delta (``core/predictor.py``): each
+action's ``cost + fresh rerun TX`` against the straggler's expected
+remaining runtime if left alone; ties prefer migration (it frees the
+straggler's slot, speculation spends an extra one).
+
+Predictive control plane (``core/predictor.py``)
+------------------------------------------------
+With feedback enabled the engine owns a :class:`MakespanPredictor`;
+:meth:`SchedEngine.repredict` re-evaluates the paper's Eqns. 2-6 on the
+live estimates at every scheduling pass and appends to
+``SchedEngine.predictions`` (surfaced as ``SimResult.predictions`` /
+``ExecResult.predictions``).
 
 Scheduling stays O(#ready sets x #pools) per dispatch round — all tasks of
 a set share one footprint — so the engine sustains the simulator's 10^5-task
@@ -68,6 +88,7 @@ from typing import Sequence
 
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions, TxEstimator
+from .predictor import MakespanPrediction, MakespanPredictor
 from .resources import Allocation, PoolSpec, as_allocation
 
 
@@ -273,6 +294,15 @@ class SchedEngine:
         self.migrations = 0
         self._migrations_of: dict[tuple[str, int], int] = {}
         self._data_cost_cache: dict[tuple[str, int], float] = {}
+        #: speculative duplicates: (set, index) -> pool holding the
+        #: duplicate's slot while both attempts race
+        self._spec_pool: dict[tuple[str, int], int] = {}
+        self._speculations_of: dict[tuple[str, int], int] = {}
+        self.speculations = 0
+        #: online makespan re-prediction (core/predictor.py)
+        self.predictor = (MakespanPredictor(g, self.alloc)
+                          if feedback is not None else None)
+        self.predictions: list[MakespanPrediction] = []
 
         order = g.topological_order()
         ranks = g.ranks()
@@ -344,30 +374,52 @@ class SchedEngine:
         return self.pools[pool_idx].name
 
     # -- runtime feedback ---------------------------------------------------
-    def tx_estimate(self, name: str) -> float:
+    def tx_estimate(self, name: str, pool: "int | None" = None) -> float:
         """The mean TX a policy should reason with: the observed EWMA once
         the set has ``min_samples`` completions, the static ``tx_mean``
-        prior before that (or always, without feedback)."""
-        if self.estimator is not None and self.feedback is not None and \
-                self.estimator.count(name) >= self.feedback.min_samples:
-            return self.estimator.mean(name)
+        prior before that (or always, without feedback).  With ``pool``
+        given (an index) and ``per_pool`` feedback on, the (set, pool)
+        split is preferred once it is armed — so placement and mitigation
+        decisions price each pool's own speed."""
+        fb = self.feedback
+        if self.estimator is not None and fb is not None:
+            if pool is not None and fb.per_pool:
+                pname = self.pools[pool].name
+                if self.estimator.count(name, pool=pname) >= fb.min_samples:
+                    return self.estimator.mean(name, pool=pname)
+            if self.estimator.count(name) >= fb.min_samples:
+                return self.estimator.mean(name)
         return self.g.node(name).tx_mean
 
-    def observe(self, name: str, duration: float) -> None:
+    def observe(self, name: str, duration: float,
+                pool: "int | None" = None) -> None:
         """Feed one completed task's duration into the online estimator
-        (both substrates call this right after :meth:`complete`).  Straggler
-        durations are winsorized at ``winsorize_ratio`` x the running mean
-        so they cannot contaminate the very estimate they are detected
-        against.  Marks the priority order dirty so the next dispatch pass
-        re-ranks ready sets by observed TX."""
+        (both substrates call this right after :meth:`complete`, tagging
+        the pool the task ran on).  Straggler durations are winsorized at
+        ``winsorize_ratio`` x the running mean so they cannot contaminate
+        the very estimate they are detected against.  Marks the priority
+        order dirty so the next dispatch pass re-ranks ready sets by
+        observed TX."""
         if self.estimator is None:
             return
         fb = self.feedback
-        if fb is not None and fb.winsorize_ratio > 0 and \
-                self.estimator.count(name) >= fb.min_samples:
-            duration = min(duration,
-                           fb.winsorize_ratio * self.estimator.mean(name))
-        self.estimator.observe(name, duration)
+        pname = (self.pools[pool].name
+                 if pool is not None and fb is not None and fb.per_pool
+                 else None)
+        if fb is not None and fb.winsorize_ratio > 0:
+            # clip against the pool split's own mean once it is armed — a
+            # genuinely slow pool must not have its observations capped at
+            # a multiple of the faster cross-pool blend, or its estimate
+            # saturates low and its tasks read as permanent stragglers
+            if (pname is not None and
+                    self.estimator.count(name, pool=pname)
+                    >= fb.min_samples):
+                duration = min(duration, fb.winsorize_ratio
+                               * self.estimator.mean(name, pool=pname))
+            elif self.estimator.count(name) >= fb.min_samples:
+                duration = min(duration,
+                               fb.winsorize_ratio * self.estimator.mean(name))
+        self.estimator.observe(name, duration, pool=pname)
         # only TX-ordering policies need the priority rebuilt; fifo/
         # gpu_bestfit/locality orderings cannot change with estimates
         if self.policy.uses_tx:
@@ -376,35 +428,40 @@ class SchedEngine:
     def stragglers(self, running: "dict[tuple[str, int], float]",
                    now: float) -> list[tuple[str, int]]:
         """Running tasks whose runtime exceeds ``mean + k*sigma`` of their
-        set's running estimate (armed after ``min_samples`` completions).
-        ``running`` maps (set, index) -> start time on the caller's clock;
-        the estimator must have been fed durations on the same clock."""
-        if self.feedback is None or self.estimator is None:
+        set's running estimate (armed after ``min_samples`` completions;
+        the task's *pool* estimate when that split is armed).  ``running``
+        maps (set, index) -> start time on the caller's clock; the
+        estimator must have been fed durations on the same clock.  Tasks
+        with a speculative duplicate already racing are skipped."""
+        fb = self.feedback
+        if fb is None or self.estimator is None:
             return []
         out = []
         for (name, i), start in running.items():
             if (name, i) in self.finished:
                 continue  # completed at the detection tick
-            if self.estimator.is_straggler(name, now - start, self.feedback):
+            if (name, i) in self._spec_pool:
+                continue  # a duplicate is already racing it
+            pname = None
+            if fb.per_pool and (name, i) in self.pool_of:
+                pname = self.pools[self.pool_of[(name, i)]].name
+            if self.estimator.is_straggler(name, now - start, fb,
+                                           pool=pname):
                 out.append((name, i))
         return out
 
-    def try_migrate(self, name: str, i: int) -> "tuple[int, float] | None":
-        """Preempt straggler ``(name, i)`` and requeue it onto a different
-        pool: release the source pool's resources, acquire the cheapest
-        (by ``transfer_cost``) eligible target's, and return ``(new_pool,
-        migration_cost)``.  No-ops (returns ``None``) when the task already
-        finished or never launched, no other pool fits right now, the
-        data-movement cost exceeds ``max_cost_ratio`` x the set's estimated
-        TX, or the task hit ``max_migrations_per_task``.  The caller owns
-        cancelling the old attempt and scheduling the new one."""
+    # -- straggler mitigation: migration, speculation, arbitration ----------
+    def _migration_candidate(self, name: str,
+                             i: int) -> "tuple[int, float] | None":
+        """``(dst, cost)`` migration would use, or ``None`` — pure (no
+        state change), so the arbiter can price it before committing."""
         fb = self.feedback
         if fb is None or not fb.migrate:
             return None
         if (name, i) in self.finished or (name, i) not in self.launched:
             return None
-        if self._migrations_of.get((name, i), 0) >= \
-                fb.max_migrations_per_task:
+        if (self._migrations_of.get((name, i), 0)
+                >= fb.max_migrations_per_task):
             return None
         src = self.pool_of[(name, i)]
         ts = self.g.node(name)
@@ -415,6 +472,12 @@ class SchedEngine:
         cost = fb.migration_base_cost + self.alloc.transfer(src, dst)
         if cost > fb.max_cost_ratio * self.tx_estimate(name):
             return None  # moving the data costs more than the rerun saves
+        return dst, cost
+
+    def _apply_migration(self, name: str, i: int, dst: int,
+                         cost: float) -> tuple[int, float]:
+        src = self.pool_of[(name, i)]
+        ts = self.g.node(name)
         need_c, need_g = self._needs(src, ts)
         self.free_cpus[src] += need_c
         self.free_gpus[src] += need_g
@@ -424,10 +487,189 @@ class SchedEngine:
         self.free_gpus[dst] -= need_g
         self.running_per_pool[dst] += 1
         self.pool_of[(name, i)] = dst
-        self._migrations_of[(name, i)] = \
-            self._migrations_of.get((name, i), 0) + 1
+        self._migrations_of[(name, i)] = (
+            self._migrations_of.get((name, i), 0) + 1)
         self.migrations += 1
         return dst, cost
+
+    def try_migrate(self, name: str, i: int) -> "tuple[int, float] | None":
+        """Preempt straggler ``(name, i)`` and requeue it onto a different
+        pool: release the source pool's resources, acquire the cheapest
+        (by ``transfer_cost``) eligible target's, and return ``(new_pool,
+        migration_cost)``.  No-ops (returns ``None``) when the task already
+        finished or never launched, no other pool fits right now, the
+        data-movement cost exceeds ``max_cost_ratio`` x the set's estimated
+        TX, or the task hit ``max_migrations_per_task``.  The caller owns
+        cancelling the old attempt and scheduling the new one."""
+        cand = self._migration_candidate(name, i)
+        if cand is None:
+            return None
+        return self._apply_migration(name, i, *cand)
+
+    def _speculation_candidate(self, name: str,
+                               i: int) -> "tuple[int, float] | None":
+        """``(dst, cost)`` a speculative duplicate would use, or ``None``
+        — pure (no state change).  Unlike migration the source pool's slot
+        stays held (the original keeps running), so a *free* slot must
+        exist; the source pool itself is eligible (a same-pool duplicate
+        moves no data)."""
+        fb = self.feedback
+        if fb is None or not fb.speculate:
+            return None
+        if (name, i) in self.finished or (name, i) not in self.launched:
+            return None
+        if (name, i) in self._spec_pool:
+            return None  # one duplicate at a time
+        if (self._speculations_of.get((name, i), 0)
+                >= fb.max_speculations_per_task):
+            return None
+        src = self.pool_of[(name, i)]
+        ts = self.g.node(name)
+        cands = self._candidates(ts)
+        if not cands:
+            return None  # no free duplicate slot anywhere
+        dst = min(cands, key=lambda k: (self.alloc.transfer(src, k), k))
+        cost = self.alloc.transfer(src, dst)
+        if dst != src:
+            cost += fb.migration_base_cost
+        if cost > fb.max_cost_ratio * self.tx_estimate(name):
+            return None
+        return dst, cost
+
+    def _apply_speculation(self, name: str, i: int, dst: int,
+                           cost: float) -> tuple[int, float]:
+        ts = self.g.node(name)
+        need_c, need_g = self._needs(dst, ts)
+        self.free_cpus[dst] -= need_c
+        self.free_gpus[dst] -= need_g
+        self.running_per_pool[dst] += 1
+        self._spec_pool[(name, i)] = dst
+        self._speculations_of[(name, i)] = (
+            self._speculations_of.get((name, i), 0) + 1)
+        self.speculations += 1
+        return dst, cost
+
+    def try_speculate(self, name: str, i: int) -> "tuple[int, float] | None":
+        """Launch a speculative duplicate of straggler ``(name, i)``:
+        acquire a free slot on the cheapest eligible pool (the source pool
+        included — a same-pool duplicate moves no data) and return
+        ``(dup_pool, data_cost)``.  The original attempt keeps its slot
+        and keeps running; first finisher wins and :meth:`complete` frees
+        *both* slots (the loser is cancelled by the substrate).  No-ops
+        when the task finished, a duplicate is already racing, the cap
+        ``max_speculations_per_task`` is hit, no free slot exists, or the
+        data cost exceeds ``max_cost_ratio`` x the estimated TX."""
+        cand = self._speculation_candidate(name, i)
+        if cand is None:
+            return None
+        return self._apply_speculation(name, i, *cand)
+
+    def speculation_pool(self, name: str, i: int) -> "int | None":
+        """Pool index of the task's racing duplicate, if any."""
+        return self._spec_pool.get((name, i))
+
+    def arbitrate(self, name: str, i: int,
+                  elapsed: float) -> "tuple[str, int, float] | None":
+        """Pick and apply the better mitigation for straggler ``(name,
+        i)``: ``("migrate" | "speculate", dst_pool, cost)`` or ``None``.
+
+        With only one mechanism enabled this degenerates to that mechanism
+        (the always-migrate / always-speculate arms).  With both, each
+        candidate is priced by the predictor's marginal-makespan delta —
+        ``cost + fresh rerun TX on the candidate pool`` against the
+        straggler's expected remaining runtime if left alone
+        (``straggler_tail_ratio``) — and the action only happens when it
+        is predicted to finish the task sooner; ties prefer migration
+        (it frees the straggler's slot, speculation spends an extra one).
+        """
+        fb = self.feedback
+        if fb is None:
+            return None
+        mig = self._migration_candidate(name, i)
+        spec = self._speculation_candidate(name, i)
+        if mig is None and spec is None:
+            return None
+        arbitrated = fb.migrate and fb.speculate
+        if not arbitrated:
+            # pure arms (always-migrate / always-speculate): PR-2
+            # semantics, no cost-model gate beyond the candidates' own
+            if spec is None:
+                dst, cost = self._apply_migration(name, i, *mig)
+                return "migrate", dst, cost
+            dst, cost = self._apply_speculation(name, i, *spec)
+            return "speculate", dst, cost
+        pred = self.predictor
+        src = self.pool_of[(name, i)]
+        base = pred.straggler_baseline(self.tx_estimate(name, pool=src),
+                                       elapsed, fb.straggler_tail_ratio)
+        # queued work turns the duplicate's slot into displaced work;
+        # at the tail (nothing queued) speculation races for free
+        pressure = any(self.ready[n] for n in self.order)
+        d_mig = (pred.mitigation_delta(self.tx_estimate(name, pool=mig[0]),
+                                       mig[1], base)
+                 if mig is not None else None)
+        d_spec = (pred.speculation_delta(
+            self.tx_estimate(name, pool=spec[0]), spec[1], base, pressure)
+            if spec is not None else None)
+        # the arbiter declines whenever the action is predicted to finish
+        # the task strictly LATER than letting it run (delta > 0) —
+        # including when a cap or saturation left just one candidate
+        # standing.  At exactly zero it still acts: the baseline is an
+        # expectation, and a pressure-free duplicate races for free,
+        # keeping the chance of finishing sooner
+        if mig is None:
+            if d_spec > 0:
+                return None
+            dst, cost = self._apply_speculation(name, i, *spec)
+            return "speculate", dst, cost
+        if spec is None:
+            if d_mig > 0:
+                return None
+            dst, cost = self._apply_migration(name, i, *mig)
+            return "migrate", dst, cost
+        if d_mig > 0 and d_spec > 0:
+            return None  # neither beats letting the straggler run
+        # tie-break: under slot pressure migration wins (it frees the
+        # straggler's slot; the duplicate would spend an extra one) —
+        # without pressure speculation wins (the original races for free,
+        # keeping its chance of finishing first)
+        if d_mig < d_spec or (d_mig == d_spec and pressure):
+            dst, cost = self._apply_migration(name, i, *mig)
+            return "migrate", dst, cost
+        dst, cost = self._apply_speculation(name, i, *spec)
+        return "speculate", dst, cost
+
+    # -- online makespan re-prediction (core/predictor.py) ------------------
+    def repredict(self, now: float,
+                  running: "dict[tuple[str, int], float]"
+                  ) -> "MakespanPrediction | None":
+        """Re-evaluate the analytic model (Eqns. 2-6) on the live TX
+        estimates and the current progress; appends to (and returns the
+        newest entry of) ``self.predictions``.  ``running`` maps (set,
+        index) -> start time on the caller's clock, exactly as for
+        :meth:`stragglers`."""
+        if self.predictor is None:
+            return None
+        elapsed = {k: now - start for k, start in running.items()
+                   if k not in self.finished}
+        run_per_set: dict[str, int] = {}
+        for (n, _i) in elapsed:
+            run_per_set[n] = run_per_set.get(n, 0) + 1
+        pending = {n: max(0, self._set_remaining[n] - run_per_set.get(n, 0))
+                   for n in self.order}
+        p = self.predictor.predict(
+            self.tx_estimate, now, pending, elapsed,
+            done_fraction=self._n_done / max(1, self._n_total),
+            tx_std=self.tx_std_estimate)
+        self.predictions.append(p)
+        return p
+
+    def tx_std_estimate(self, name: str) -> float:
+        """Live dispersion of the set's observed TX (0 before feedback or
+        before the variance estimate has samples)."""
+        if self.estimator is None:
+            return 0.0
+        return self.estimator.std(name)
 
     def data_cost(self, name: str, k: int) -> float:
         """Mean data-movement cost of pulling set ``name``'s parent outputs
@@ -510,7 +752,9 @@ class SchedEngine:
     def complete(self, name: str, i: int) -> int:
         """Mark task ``(name, i)`` finished: release its pool's resources,
         decrement dependency counters, enqueue newly-ready tasks.  Returns
-        the pool index the task ran on.  Idempotent per task (duplicate
+        the pool index the task ran on (the *original* attempt's pool; a
+        racing speculative duplicate's slot is released too — the caller
+        knows which attempt actually won).  Idempotent per task (duplicate
         completions — straggler mitigation — are no-ops)."""
         if (name, i) in self.finished:
             return self.pool_of.get((name, i), 0)
@@ -521,6 +765,12 @@ class SchedEngine:
         self.free_gpus[k] += need_g
         if (name, i) in self.launched:
             self.running_per_pool[k] -= 1
+        spec = self._spec_pool.pop((name, i), None)
+        if spec is not None:  # the losing attempt's slot is freed with it
+            need_c, need_g = self._needs(spec, ts)
+            self.free_cpus[spec] += need_c
+            self.free_gpus[spec] += need_g
+            self.running_per_pool[spec] -= 1
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1

@@ -6,9 +6,10 @@ The ``mode``/``task_level`` axes pick the paper's execution semantics
 (sequential / asynchronous / adaptive); ``scheduling`` picks the shared
 engine's placement policy (``fifo`` / ``lpt`` / ``gpu_bestfit`` /
 ``locality``, see ``sched_engine.SCHEDULING_POLICIES``); ``feedback``
-enables the runtime-feedback loop (observed-TX estimation + straggler
-preemption/migration, see ``estimator.FeedbackOptions``).  The axes
-compose freely.
+enables the runtime-feedback loop (observed-TX estimation, straggler
+migration and/or speculative duplicates — cost-arbitrated when both are
+on — and online makespan re-prediction; see ``estimator.FeedbackOptions``
+and ``core/predictor.py``).  The axes compose freely.
 """
 
 from __future__ import annotations
@@ -106,4 +107,17 @@ def adaptive_observed_policy(
     static ``tx_mean``, with straggler preemption + migration — the
     ROADMAP's adaptive-scheduling follow-up to the paper's future work."""
     return ExecutionPolicy("async", True, None, "adaptive_observed",
+                           scheduling="lpt", feedback=feedback)
+
+
+def arbitrated_policy(
+        feedback: "FeedbackOptions | None" = None) -> ExecutionPolicy:
+    """Asynchronous mode with the full predictive control plane: observed
+    TX, online makespan re-prediction, and per-straggler arbitration
+    between preemptive migration and speculative duplicates (both
+    mitigations enabled; ``SchedEngine.arbitrate`` picks by the
+    predictor's marginal-makespan delta)."""
+    if feedback is None:
+        feedback = FeedbackOptions(speculate=True)
+    return ExecutionPolicy("async", False, None, "arbitrated",
                            scheduling="lpt", feedback=feedback)

@@ -14,8 +14,10 @@ resource bookkeeping) live in :class:`~repro.core.sched_engine.SchedEngine`,
 which the real executor shares — this module only advances the simulated
 clock.  Select a policy with ``scheduling="fifo" | "lpt" | "gpu_bestfit" |
 "locality"``; pass ``feedback=FeedbackOptions(...)`` to drive the policy
-by *observed* TX (online EWMA estimates) and to preempt + migrate
-stragglers between pools (see ``core/estimator.py``).
+by *observed* TX (online EWMA estimates, per-pool splits), to mitigate
+stragglers (arbitrated preemption + migration vs speculative duplicates,
+see ``core/estimator.py`` / ``SchedEngine.arbitrate``), and to re-predict
+the makespan mid-run (``SimResult.predictions``, ``core/predictor.py``).
 
 Modes:
   ``async``       dependency-driven dispatch (the paper's asynchronous mode)
@@ -37,6 +39,7 @@ from typing import Literal, Sequence
 
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions
+from .predictor import MakespanPrediction
 from .resources import Allocation, PoolSpec, as_allocation
 from .sched_engine import SchedEngine, SchedulingPolicy
 
@@ -91,6 +94,12 @@ class SimResult:
     policy: str = "fifo"
     #: straggler preemption + migration count (runtime feedback enabled)
     migrations: int = 0
+    #: speculative-duplicate launches (first finisher wins, loser freed)
+    speculations: int = 0
+    #: mid-run makespan re-predictions (``SchedEngine.repredict`` trace,
+    #: feedback enabled; see ``core/predictor.py``)
+    predictions: "list[MakespanPrediction]" = (
+        dataclasses.field(default_factory=list))
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -148,10 +157,13 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
     """Run one workflow execution and return its schedule.
 
     ``feedback`` enables the runtime-feedback loop (core/estimator.py):
-    every completion updates the engine's per-set TX estimate, ordering
-    policies re-rank by observed TX, and stragglers (runtime > mean +
-    k*sigma of the running estimate) are preempted and migrated onto a
-    different pool, charging the allocation's ``transfer_cost``."""
+    every completion updates the engine's per-set (and per-pool) TX
+    estimate, ordering policies re-rank by observed TX, stragglers
+    (runtime > mean + k*sigma of the running estimate) are mitigated by
+    preemptive migration and/or speculative duplicates — arbitrated per
+    straggler by predicted marginal makespan when both are enabled — and
+    the analytic model is re-evaluated mid-run on the live estimates
+    (``SimResult.predictions``)."""
     rng = random.Random(options.seed)
     g = dag if mode == "async" else dag.with_sequential_barriers(
         sequential_stage_groups)
@@ -218,46 +230,69 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
             heapq.heappush(events, (end, seq, name, i, False, 0))
             seq += 1
 
-    def complete(name: str, i: int) -> None:
+    #: speculative duplicates in flight: (set, i) -> (work start, pool)
+    spec_info: dict[tuple[str, int], tuple[float, int]] = {}
+
+    def complete(name: str, i: int, dup: bool = False) -> None:
         ts = g.node(name)
-        attempt_start = running.pop((name, i))
+        spec = spec_info.pop((name, i), None)
+        if dup and spec is not None:
+            # the speculative duplicate won: the original attempt is the
+            # loser — engine.complete frees both slots, the record and the
+            # estimate belong to the duplicate's pool and work span
+            attempt_start, k = spec
+            running.pop((name, i), None)
+            engine.complete(name, i)
+            won_by_dup = True
+        else:
+            attempt_start = running.pop((name, i))
+            k = engine.complete(name, i)
+            won_by_dup = False
         start = first_start.pop((name, i), attempt_start)
-        k = engine.complete(name, i)
         records.append(TaskRecord(name, i, start, now,
                                   ts.cpus_per_task, ts.gpus_per_task,
+                                  duplicate=won_by_dup,
                                   pool=engine.pool_name(k),
                                   migrated=(name, i) in gen))
         set_durations.setdefault(name, []).append(now - attempt_start)
-        engine.observe(name, now - attempt_start)
+        engine.observe(name, now - attempt_start, pool=k)
 
-    def migrate_scan() -> None:
+    def mitigate_scan() -> None:
         nonlocal seq
         for (sn, si) in engine.stragglers(running, now):
-            mig = engine.try_migrate(sn, si)
-            if mig is None:
+            act = engine.arbitrate(sn, si, now - running[(sn, si)])
+            if act is None:
                 continue
-            dst, cost = mig
-            gen[(sn, si)] = gen.get((sn, si), 0) + 1
+            kind, dst, cost = act
             d = sample_base(g.node(sn)) * overhead
-            heapq.heappush(events,
-                           (now + cost + options.launch_latency + d,
-                            seq, sn, si, False, gen[(sn, si)]))
-            seq += 1
-            # reset the straggler clock to the re-run's WORK start: the
-            # migration cost must not contaminate the TX estimate the
-            # detector and the cost/benefit gate consult
-            running[(sn, si)] = now + cost + options.launch_latency
+            work_start = now + cost + options.launch_latency
+            if kind == "migrate":
+                gen[(sn, si)] = gen.get((sn, si), 0) + 1
+                heapq.heappush(events, (work_start + d, seq, sn, si,
+                                        False, gen[(sn, si)]))
+                seq += 1
+                # reset the straggler clock to the re-run's WORK start:
+                # the migration cost must not contaminate the TX estimate
+                # the detector and the cost/benefit gate consult
+                running[(sn, si)] = work_start
+            else:  # speculate: the original keeps running, a dup races it
+                spec_info[(sn, si)] = (work_start, dst)
+                heapq.heappush(events, (work_start + d, seq, sn, si,
+                                        True, gen.get((sn, si), 0)))
+                seq += 1
 
-    # periodic watchdog (migration enabled only): completions trigger
+    # periodic watchdog (mitigation enabled only): completions trigger
     # scans too, but a lone tail straggler has no completion left to
     # piggyback on — without a timer event it would never be detected.
-    # A single-pool allocation has no migration target, so skip it all.
-    migrating = (feedback is not None and feedback.migrate
-                 and len(engine.pools) > 1)
+    # Migration needs a second pool; speculation only needs a free slot,
+    # so it keeps the watchdog alive even on single-pool allocations.
+    migrating = (feedback is not None
+                 and (feedback.speculate
+                      or (feedback.migrate and len(engine.pools) > 1)))
     if migrating:
         positive = [ts.tx_mean for ts in g.nodes.values() if ts.tx_mean > 0]
-        scan_dt = feedback.watchdog_interval or \
-            (0.5 * min(positive) if positive else 1.0)
+        scan_dt = (feedback.watchdog_interval
+                   or (0.5 * min(positive) if positive else 1.0))
     watchdog_pending = False
 
     def schedule_scan() -> None:
@@ -270,21 +305,28 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
 
     try_start()
     schedule_scan()
+    engine.repredict(now, running)   # prior-based prediction at t = 0
     event_count = 0
     while events:
         now_, _, name, i, dup, g_ = heapq.heappop(events)
         now = now_
         if name is _WATCHDOG:
             watchdog_pending = False
-            migrate_scan()
+            mitigate_scan()
+            engine.repredict(now, running)
             try_start()
             schedule_scan()
             continue
         if (name, i) in engine.finished:
             continue  # a duplicate already finished this task
         if g_ != gen.get((name, i), 0):
-            continue  # attempt preempted by a migration
-        complete(name, i)
+            # attempt preempted by a migration.  Speculative duplicates
+            # carry the gen current at launch and the engine never
+            # migrates a task while its duplicate races (stragglers()
+            # skips it), so they always pass; legacy adaptive duplicates
+            # are correctly discarded here, as before the arbiter.
+            continue
+        complete(name, i, dup)
         event_count += 1
         # straggler mitigation: inspect running tasks, duplicate laggards.
         # The scan is O(running); amortise it by checking every 32
@@ -308,12 +350,15 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
                     duplicates += 1
                     duplicated.add((rn, ri))
                     running[(rn, ri)] = min(running[(rn, ri)], st)
-        # runtime feedback: preempt + migrate stragglers.  The scan is
-        # O(running); amortise it on big workloads (every 16 completions)
-        # — the periodic watchdog above covers the gaps.
+        # runtime feedback: mitigate stragglers (arbitrated migration /
+        # speculation) and re-predict the makespan.  The scans are
+        # O(running); amortise them on big workloads (every 16
+        # completions) — the periodic watchdog above covers the gaps.
         scan_every = 16 if engine.tasks_total >= 1024 else 1
-        if migrating and event_count % scan_every == 0:
-            migrate_scan()
+        if event_count % scan_every == 0:
+            if migrating:
+                mitigate_scan()
+            engine.repredict(now, running)
         try_start()
         schedule_scan()
 
@@ -334,4 +379,6 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
         duplicates=duplicates,
         policy=engine.policy.name,
         migrations=engine.migrations,
+        speculations=engine.speculations,
+        predictions=engine.predictions,
     )

@@ -63,8 +63,8 @@ def make_global_batch(ds: SyntheticTokenDataset, step: int, mesh,
     def cb(key):
         def make(index):
             lo = index[0].start or 0
-            hi = index[0].stop if index[0].stop is not None \
-                else ds.global_batch
+            hi = (index[0].stop if index[0].stop is not None
+                  else ds.global_batch)
             return ds.batch_slice(step, lo, hi)[key]
 
         return jax.make_array_from_callback(shape, sharding, make)

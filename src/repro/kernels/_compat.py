@@ -3,5 +3,5 @@
 from jax.experimental.pallas import tpu as _pltpu
 
 # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
-CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
-    _pltpu.TPUCompilerParams
+CompilerParams = (getattr(_pltpu, "CompilerParams", None)
+                  or _pltpu.TPUCompilerParams)

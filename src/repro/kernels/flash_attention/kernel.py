@@ -51,8 +51,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if window is not None:
         live &= k_hi > q_pos[0] - window
     if chunk is not None:
-        live &= ((k_lo // chunk) <= (q_pos[-1] // chunk)) & \
-                ((k_hi // chunk) >= (q_pos[0] // chunk))
+        live &= (((k_lo // chunk) <= (q_pos[-1] // chunk))
+                 & ((k_hi // chunk) >= (q_pos[0] // chunk)))
 
     @pl.when(live)
     def _compute():

@@ -19,7 +19,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.runtime.sharding import shard_act
 
 from . import ref
 from .kernel import flash_attention_pallas

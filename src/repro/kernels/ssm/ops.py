@@ -102,6 +102,6 @@ def ssd_decode_step(state, x, dt, a_log, b, c, d):
     xbar = dtf[..., None] * xf
     upd = b.astype(jnp.float32)[:, None, :, None] * xbar[:, :, None, :]
     new = decay[..., None, None] * sf + upd
-    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), new) \
-        + d.astype(jnp.float32)[None, :, None] * xf
+    y = (jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), new)
+         + d.astype(jnp.float32)[None, :, None] * xf)
     return y.astype(x.dtype), new.astype(state.dtype)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs import SHAPES, ShapeSpec
+from repro.configs import ShapeSpec
 from repro.models.config import ModelConfig
 
 CAPACITY_FACTOR = 1.25
@@ -44,16 +44,16 @@ def _avg_kv(cfg: ModelConfig, s: int, layer_frac_global: float = 0.0) -> float:
 def _attn_flops_per_layer(cfg: ModelConfig, b: int, s: int) -> float:
     """QKV/out projections + score/value contractions for one layer."""
     t = b * s
-    proj = 2 * t * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) \
-        + 2 * t * cfg.q_dim * cfg.d_model
+    proj = (2 * t * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim)
+            + 2 * t * cfg.q_dim * cfg.d_model)
     sc = 4 * t * _avg_kv(cfg, s) * cfg.q_dim
     return proj + sc
 
 
 def _mlp_flops_per_layer(cfg: ModelConfig, tokens: float) -> float:
     if cfg.family == "moe":
-        f = 6 * tokens * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff \
-            * CAPACITY_FACTOR
+        f = (6 * tokens * cfg.experts_per_token * cfg.d_model
+             * cfg.moe_d_ff * CAPACITY_FACTOR)
         f += 2 * tokens * cfg.d_model * cfg.num_experts          # router
         if cfg.shared_expert:
             f += 6 * tokens * cfg.d_model * cfg.d_ff
@@ -117,8 +117,8 @@ def forward_flops(cfg: ModelConfig, b: int, s: int) -> float:
                    + 6 * t * cfg.d_model * cfg.d_ff)
             body += n_inv * per
         return body + unembed
-    per_layer = _attn_flops_per_layer(cfg, b, s) + \
-        _mlp_flops_per_layer(cfg, t)
+    per_layer = (_attn_flops_per_layer(cfg, b, s)
+                 + _mlp_flops_per_layer(cfg, t))
     return cfg.num_layers * per_layer + unembed
 
 
@@ -129,8 +129,8 @@ def decode_flops(cfg: ModelConfig, b: int, s_cache: int) -> float:
     if cfg.rwkv:
         d, k = cfg.d_model, 64
         h = d // k
-        per = 2 * d * d * 5 + 4 * h * k * k * 2 + 2 * d * cfg.d_ff * 2 \
-            + 2 * d * d
+        per = (2 * d * d * 5 + 4 * h * k * k * 2 + 2 * d * cfg.d_ff * 2
+               + 2 * d * d)
         return cfg.num_layers * t * per + unembed
     if cfg.family in ("ssm", "hybrid"):
         d = cfg.d_model
@@ -147,8 +147,8 @@ def decode_flops(cfg: ModelConfig, b: int, s_cache: int) -> float:
                                  + 6 * d * cfg.d_ff)
         return body + unembed
     kv = min(s_cache, cfg.sliding_window or s_cache)
-    per = 2 * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) \
-        + 2 * cfg.q_dim * cfg.d_model + 4 * kv * cfg.q_dim
+    per = (2 * cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim)
+           + 2 * cfg.q_dim * cfg.d_model + 4 * kv * cfg.q_dim)
     if cfg.family == "moe":
         mlp = 6 * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff
         if cfg.shared_expert:
@@ -187,8 +187,8 @@ def analyse_cell(cfg: ModelConfig, shape: ShapeSpec, n_params: int,
         hbm = n_params * 28.0 + act
     elif shape.mode == "prefill":
         # prefill unembeds only the final position (runtime slices first)
-        flops = forward_flops(cfg, b, s) \
-            - 2 * (tokens - b) * cfg.d_model * cfg.vocab_size
+        flops = (forward_flops(cfg, b, s)
+                 - 2 * (tokens - b) * cfg.d_model * cfg.vocab_size)
         model = 2.0 * n_active * tokens
         act = 4 * tokens * cfg.d_model * cfg.num_layers * 2
         hbm = n_params * 4.0 + act

@@ -34,8 +34,7 @@ from repro.models.params import count_params, abstract_params
 from repro.runtime import ShardingRules
 from repro.runtime.steps import (TrainOptions, abstract_train_state,
                                  batch_shardings, build_decode_step,
-                                 build_prefill_step, build_train_step,
-                                 state_shardings)
+                                 build_prefill_step, build_train_step)
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")

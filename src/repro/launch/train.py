@@ -14,7 +14,6 @@ import logging
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager, latest_step, restore_pytree
 from repro.configs import ARCH_IDS, get_config
@@ -23,8 +22,7 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.api import build_model
 from repro.runtime import (FailureInjector, ShardingRules, StragglerMonitor,
                            TrainOptions)
-from repro.runtime.steps import (build_train_step, make_train_state,
-                                 state_shardings)
+from repro.runtime.steps import build_train_step, make_train_state
 
 log = logging.getLogger("repro.train")
 

@@ -15,7 +15,7 @@ from repro.runtime.sharding import (current_flags, current_mesh,
                                     current_rules, gathered, shard_act)
 from ._compat import shard_map
 from .config import ModelConfig
-from .layers import COMPUTE_DTYPE, apply_rope, rms_norm
+from .layers import apply_rope, rms_norm
 from .params import spec
 
 
@@ -84,8 +84,8 @@ def _headparallel_flash(q, k, v, mesh, batch_axes, **kw):
     alternative (GSPMD inferring layouts for the blocked scan) reconciles
     fwd/remat/bwd layouts with score-sized all-gathers/all-reduces
     (measured 580 GB/device/step on llama4 train)."""
-    bspec = batch_axes if len(batch_axes) > 1 else \
-        (batch_axes[0] if batch_axes else None)
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
 
     def body(q, k, v):
         return fa.flash_attention(q, k, v, **kw)
@@ -128,8 +128,8 @@ def _sharded_flash_decode(q, k, v, cache_k, cache_v, pos, mesh, batch_axes):
     s_max = cache_k.shape[1]
     m = mesh.shape["model"]
     s_loc = s_max // m
-    bspec = batch_axes if len(batch_axes) > 1 else \
-        (batch_axes[0] if batch_axes else None)
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
 
     def body(q, k, v, ck, cv, pos):
         rank = jax.lax.axis_index("model")
@@ -160,8 +160,8 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos, *,
     pos: [B] number of tokens already in the cache.  Returns
     (out [B, 1, D], new_cache_k, new_cache_v)."""
     b = x.shape[0]
-    positions = pos[None, :, None].repeat(3, 0) if cfg.mrope_sections \
-        else pos[:, None]
+    positions = (pos[None, :, None].repeat(3, 0) if cfg.mrope_sections
+                 else pos[:, None])
     q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
     s_max = cache_k.shape[1]
 

@@ -108,8 +108,9 @@ def _collect(buf, flat_e, pos, capacity, keep):
 
 def _expert_ffn(p, buf):
     """buf: [E, C, D] with per-expert weight stacks [E, D, F]/[E, F, D]."""
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))) \
-        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                p["w_gate"].astype(buf.dtype)))
+         * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype)))
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(buf.dtype))
 
 
@@ -275,8 +276,8 @@ def moe_block(p, x, cfg: ModelConfig, *, decode: bool = False,
         y, aux = moe_ep_a2a(p, x, cfg, opts)
     if cfg.shared_expert:
         from repro.runtime.sharding import gathered
-        h = jax.nn.silu(x @ gathered(p["s_gate"], "embed", "ffn",
-                                     dtype=x.dtype)) * \
-            (x @ gathered(p["s_up"], "embed", "ffn", dtype=x.dtype))
+        h = (jax.nn.silu(x @ gathered(p["s_gate"], "embed", "ffn",
+                                      dtype=x.dtype))
+             * (x @ gathered(p["s_up"], "embed", "ffn", dtype=x.dtype)))
         y = y + h @ gathered(p["s_down"], "ffn", "embed", dtype=x.dtype)
     return y, aux * opts.aux_weight

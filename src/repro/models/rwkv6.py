@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from repro.kernels.rwkv6 import ops as rwkv_ops
 from repro.runtime.sharding import shard_act
 from .config import ModelConfig
-from .layers import COMPUTE_DTYPE, cross_entropy, embed, embed_specs, \
-    rms_norm, unembed
+from .layers import (COMPUTE_DTYPE, cross_entropy, embed, embed_specs,
+                     rms_norm, unembed)
 from .params import spec
 
 HEAD_K = 64          # rwkv6 head size
@@ -87,8 +87,8 @@ def _ddlerp(p, x, xx):
 
 def _decay(p, xw):
     """Data-dependent per-channel decay in (0, 1)."""
-    lo = jnp.tanh(xw @ p["decay_a"].astype(xw.dtype)) @ \
-        p["decay_b"].astype(xw.dtype)
+    lo = (jnp.tanh(xw @ p["decay_a"].astype(xw.dtype))
+          @ p["decay_b"].astype(xw.dtype))
     logit = p["decay_base"].astype(jnp.float32) + lo.astype(jnp.float32)
     return jnp.exp(-jnp.exp(jnp.clip(logit, -10.0, 4.0)))
 
@@ -140,8 +140,8 @@ def _channel_mix(p, x, *, shift_state=None):
     xr = x + (xx - x) * p["cm_mu_r"].astype(x.dtype)
     k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
     k = shard_act(k, "batch", None, "act_ffn")
-    return jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * \
-        (k @ p["cm_v"].astype(x.dtype)), x[:, -1]
+    return (jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype))
+            * (k @ p["cm_v"].astype(x.dtype)), x[:, -1])
 
 
 def _block(p, x, cfg: ModelConfig):

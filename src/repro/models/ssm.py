@@ -17,10 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels.ssm import ops as ssd_ops
 from repro.runtime.sharding import shard_act
-from .attention import cache_shape
 from .config import ModelConfig
-from .layers import COMPUTE_DTYPE, cross_entropy, embed, embed_specs, \
-    rms_norm, swiglu, unembed
+from .layers import (COMPUTE_DTYPE, cross_entropy, embed, embed_specs,
+                     rms_norm, unembed)
 from .params import spec
 from .transformer import _layer_params
 
@@ -146,8 +145,8 @@ def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
     y = y * jax.nn.silu(z)
     yf = y.astype(jnp.float32)
     var = jnp.mean(yf * yf, axis=-1, keepdims=True)
-    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * \
-        p["gn"].astype(x.dtype)
+    y = ((yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+         * p["gn"].astype(x.dtype))
     return y @ p["w_out"].astype(x.dtype), new_conv, new_ssm
 
 
@@ -182,8 +181,8 @@ def shared_block(p, x, x0, cfg: ModelConfig, inv: int, positions, *,
     else:
         ck, cv = cache
         s_max = ck.shape[1]
-        slot = jnp.minimum(pos, s_max - 1) if s_max >= SHARED_WINDOW \
-            else pos % s_max
+        slot = (jnp.minimum(pos, s_max - 1) if s_max >= SHARED_WINDOW
+                else pos % s_max)
         rolling = s_max <= SHARED_WINDOW
         slot = pos % s_max if rolling else pos
         ck = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(

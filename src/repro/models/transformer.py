@@ -12,9 +12,6 @@ group body.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -93,8 +93,8 @@ def _attn(p, xq, xkv, cfg, *, causal):
     v = _heads(xkv @ p["wv"].astype(xq.dtype) + p["bv"].astype(xq.dtype), cfg)
     o = fa.flash_attention(q, k, v, causal=causal)
     b, s = xq.shape[:2]
-    return o.reshape(b, s, cfg.q_dim) @ p["wo"].astype(xq.dtype) + \
-        p["bo"].astype(xq.dtype)
+    return (o.reshape(b, s, cfg.q_dim) @ p["wo"].astype(xq.dtype)
+            + p["bo"].astype(xq.dtype))
 
 
 def encode(params, frames, cfg: ModelConfig):
@@ -206,15 +206,15 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
         o = da.decode_attention(q[:, 0], ck, cv,
                                 jnp.minimum(pos + 1, ck.shape[1]))
         o = o.reshape(b, 1, cfg.q_dim)
-        x = x + o @ p["self_attn"]["wo"].astype(x.dtype) + \
-            p["self_attn"]["bo"].astype(x.dtype)
+        x = (x + o @ p["self_attn"]["wo"].astype(x.dtype)
+             + p["self_attn"]["bo"].astype(x.dtype))
         h = layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
         q = _heads(h @ p["cross_attn"]["wq"].astype(h.dtype) +
                    p["cross_attn"]["bq"].astype(h.dtype), cfg)
         o = da.decode_attention(q[:, 0], ek, ev, enc_valid)
         o = o.reshape(b, 1, cfg.q_dim)
-        x = x + o @ p["cross_attn"]["wo"].astype(x.dtype) + \
-            p["cross_attn"]["bo"].astype(x.dtype)
+        x = (x + o @ p["cross_attn"]["wo"].astype(x.dtype)
+             + p["cross_attn"]["bo"].astype(x.dtype))
         h = layer_norm(x, p["ln3_w"], p["ln3_b"], cfg.norm_eps)
         x = x + gelu_mlp(p["mlp"], h)
         return x, (ck, cv)

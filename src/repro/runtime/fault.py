@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import math
 import time
 from typing import Callable, Sequence
 

@@ -10,8 +10,7 @@ serves the real trainer, the smoke tests (mesh=None) and the dry-run
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -237,6 +237,77 @@ def test_sim_feedback_noop_without_stragglers():
     assert b.migrations == 0
 
 
+def test_per_pool_estimates_split_and_fallback():
+    """Pool-tagged observations feed a per-(set, pool) split; pool-aware
+    queries prefer it once it has samples, then fall back set-level, then
+    to the prior."""
+    est = TxEstimator(alpha=0.5, prior={"s": 7.0})
+    assert est.mean("s", pool="fast") == 7.0     # nothing yet: prior
+    est.observe("s", 10.0, pool="fast")
+    est.observe("s", 10.0, pool="fast")
+    assert est.mean("s", pool="fast") == pytest.approx(10.0)
+    assert est.count("s", pool="fast") == 2
+    # a pool with no observations of its own falls back to the blend
+    assert est.mean("s", pool="slow") == pytest.approx(10.0)
+    assert est.count("s", pool="slow") == 0
+
+
+def test_slow_pool_does_not_pollute_sibling_pool_estimate():
+    """A uniformly slow pool must raise only its own estimate — the fast
+    pool's split stays on the fast regime even as slow observations
+    stream in (set-wide drift is exactly what per-pool splits prevent)."""
+    est = TxEstimator(alpha=0.25)
+    for _ in range(10):
+        est.observe("s", 10.0, pool="fast")
+    for _ in range(40):
+        est.observe("s", 40.0, pool="slow")
+    assert est.mean("s", pool="fast") == pytest.approx(10.0)
+    assert est.mean("s", pool="slow") == pytest.approx(40.0, rel=0.01)
+    # the set-level blend did drift -- that is what pool queries bypass
+    assert est.mean("s") > 30.0
+
+
+def test_pool_aware_straggler_detection():
+    """Runtime 35 s: a straggler by the polluted set-level estimate, but
+    perfectly normal for the slow pool once its split is armed."""
+    fb = FeedbackOptions(min_samples=3, straggler_k=2.0)
+    est = TxEstimator(alpha=0.25)
+    for _ in range(10):
+        est.observe("s", 10.0, pool="fast")
+    for _ in range(10):
+        est.observe("s", 40.0, pool="slow")
+    assert est.is_straggler("s", 35.0, fb, pool="fast")
+    assert not est.is_straggler("s", 35.0, fb, pool="slow")
+    # but a genuine outlier on the slow pool is still flagged
+    assert est.is_straggler("s", 90.0, fb, pool="slow")
+
+
+def test_engine_tx_estimate_is_pool_aware():
+    g = DAG()
+    g.add(TaskSet("s", 8, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, _two_pools(), feedback=FeedbackOptions(min_samples=2))
+    for _ in range(3):
+        eng.observe("s", 12.0, pool=0)
+        eng.observe("s", 48.0, pool=1)
+    assert eng.tx_estimate("s", pool=0) == pytest.approx(12.0)
+    assert eng.tx_estimate("s", pool=1) == pytest.approx(48.0)
+    # set-level estimate blends both pools
+    assert 12.0 < eng.tx_estimate("s") < 48.0
+
+
+def test_engine_per_pool_disabled_keeps_single_estimate():
+    g = DAG()
+    g.add(TaskSet("s", 8, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, _two_pools(),
+                      feedback=FeedbackOptions(min_samples=2,
+                                               per_pool=False))
+    for _ in range(3):
+        eng.observe("s", 12.0, pool=0)
+        eng.observe("s", 48.0, pool=1)
+    assert eng.tx_estimate("s", pool=0) == eng.tx_estimate("s", pool=1) \
+        == eng.tx_estimate("s")
+
+
 def test_lognormal_durations_have_heavier_tail_same_mean():
     g = DAG()
     g.add(TaskSet("s", 400, 1, 0, tx_mean=10.0, tx_sigma=0.05))

@@ -1,0 +1,141 @@
+"""Predictive control plane: the shared Eqn. 2-6 implementation (tx
+lookup), the online makespan predictor (residual bound, hazard-aware
+remaining time), and the mid-run re-prediction traces both substrates
+record."""
+
+import pytest
+
+from repro.core import (DAG, FeedbackOptions, MakespanPredictor, NodeSpec,
+                        PoolSpec, RealExecutor, SimOptions, TaskSet,
+                        async_ttx, sequential_ttx, simulate)
+
+
+def _chain():
+    g = DAG()
+    g.add(TaskSet("a", 4, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("b", 4, 1, 0, tx_mean=20.0, tx_sigma=0.0))
+    g.add_edge("a", "b")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# one shared Eqn. 2-6 implementation: the tx lookup parameter
+# ---------------------------------------------------------------------------
+
+def test_tx_lookup_overrides_static_means():
+    g = _chain()
+    assert sequential_ttx(g) == 30.0
+    # mapping override (missing keys fall back to the static tx_mean)
+    assert sequential_ttx(g, tx={"a": 100.0}) == 120.0
+    # callable override
+    assert sequential_ttx(g, tx=lambda n: 1.0) == 2.0
+    t_async, _ = async_ttx(g, tx={"a": 100.0})
+    assert t_async == 120.0  # chain: async == sequential
+
+
+def test_predictor_live_model_matches_offline_equations():
+    g = _chain()
+    pred = MakespanPredictor(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0)))
+    live = {"a": 5.0, "b": 40.0}
+    t_seq, t_async, improvement = pred.live_model(live.__getitem__)
+    assert t_seq == sequential_ttx(g, tx=live)
+    assert t_async == async_ttx(g, tx=live)[0]
+    assert improvement == pytest.approx(1.0 - t_async / t_seq)
+
+
+def test_predictor_live_staggered_eqn6():
+    g = _chain()
+    pred = MakespanPredictor(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0)))
+    # 3 staggered iterations, second stage (k=1) maskable: (n - k) = 2 of
+    # its 3 instances hide behind later iterations' pacing stages
+    t = pred.live_staggered(["a", "b"], 3, [False, True],
+                            {"a": 10.0, "b": 20.0}.__getitem__)
+    assert t == pytest.approx(3 * 30.0 - 2 * 20.0)
+
+
+# ---------------------------------------------------------------------------
+# residual bound + hazard-aware expected remaining time
+# ---------------------------------------------------------------------------
+
+def test_expected_remaining_degenerates_without_dispersion():
+    pred = MakespanPredictor(_chain(), PoolSpec("p", 1, NodeSpec(8, 0)))
+    assert pred.expected_remaining(10.0, 0.0, 0.0) == 10.0
+    assert pred.expected_remaining(10.0, 0.0, 4.0) == 6.0
+    assert pred.expected_remaining(10.0, 0.0, 15.0) == 0.0
+
+
+def test_expected_remaining_hazard_grows_with_elapsed():
+    """Heavy tails: a task that outlived its mean is expected to keep
+    running, and the expectation grows with elapsed time."""
+    pred = MakespanPredictor(_chain(), PoolSpec("p", 1, NodeSpec(8, 0)))
+    r1 = pred.expected_remaining(10.0, 5.0, 12.0)
+    r2 = pred.expected_remaining(10.0, 5.0, 30.0)
+    assert r1 > 0.0
+    assert r2 > r1
+    # and always at least the dispersion-free remainder
+    assert pred.expected_remaining(10.0, 5.0, 2.0) >= 8.0
+
+
+def test_residual_bound_full_and_empty():
+    g = _chain()
+    pool = PoolSpec("p", 1, NodeSpec(cpus=2, gpus=0))  # 2 slots per set
+    pred = MakespanPredictor(g, pool)
+    tx = lambda n: g.node(n).tx_mean
+    # nothing started: both sets pending in 2 waves each
+    p0 = pred.predict(tx, 0.0, {"a": 4, "b": 4}, {})
+    assert p0.remaining == pytest.approx(2 * 10.0 + 2 * 20.0)
+    assert p0.total == p0.remaining
+    # everything finished: remaining is zero, total == now
+    p1 = pred.predict(tx, 123.0, {"a": 0, "b": 0}, {}, done_fraction=1.0)
+    assert p1.remaining == 0.0
+    assert p1.total == 123.0
+
+
+def test_residual_bound_counts_running_tasks():
+    g = _chain()
+    pool = PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0))
+    pred = MakespanPredictor(g, pool)
+    tx = lambda n: g.node(n).tx_mean
+    # all of "a" running for 4 s, "b" fully pending (one wave of 4)
+    p = pred.predict(tx, 4.0, {"a": 0, "b": 4},
+                     {("a", i): 4.0 for i in range(4)})
+    assert p.remaining == pytest.approx(6.0 + 20.0)
+
+
+# ---------------------------------------------------------------------------
+# mid-run re-prediction traces (both substrates)
+# ---------------------------------------------------------------------------
+
+def test_sim_records_prediction_trace_and_converges():
+    g = DAG()
+    g.add(TaskSet("s", 64, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=16, gpus=0))
+    res = simulate(g, pool, "async",
+                   options=SimOptions(seed=5, tx_distribution="lognormal",
+                                      lognormal_sigma=0.5),
+                   feedback=FeedbackOptions(migrate=False))
+    assert len(res.predictions) > 4
+    fractions = [p.done_fraction for p in res.predictions]
+    assert fractions == sorted(fractions)
+    assert res.predictions[0].now == 0.0
+    # late predictions must beat the blind prior-based first one
+    first_err = abs(res.predictions[0].total - res.makespan)
+    late = res.predictions[int(len(res.predictions) * 0.8)]
+    assert abs(late.total - res.makespan) < first_err
+
+
+def test_sim_no_feedback_records_no_predictions():
+    g = _chain()
+    res = simulate(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0)), "async")
+    assert res.predictions == []
+
+
+def test_executor_records_prediction_trace():
+    g = _chain()
+    pool = PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0))
+    res = RealExecutor(pool, tx_scale=2e-3).run(
+        g, "async", feedback=FeedbackOptions())
+    assert res.tasks_total == 8
+    assert len(res.predictions) >= 1
+    assert res.predictions[-1].done_fraction >= \
+        res.predictions[0].done_fraction

@@ -363,6 +363,180 @@ def test_real_executor_migrates_stragglers():
     assert any(r.migrated for r in res.records)
 
 
+# ---------------------------------------------------------------------------
+# speculation + the migration-vs-speculation arbiter
+# ---------------------------------------------------------------------------
+
+def _spec_alloc(transfer=2.0, cpus=4):
+    return Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=cpus, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=cpus, gpus=0)),
+    ), transfer_cost=((0.0, transfer), (transfer, 0.0)))
+
+
+def _spec_engine(alloc, num_tasks=1, speculate=True, migrate=True):
+    g = DAG()
+    g.add(TaskSet("s", num_tasks, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc,
+                      feedback=FeedbackOptions(min_samples=1,
+                                               migrate=migrate,
+                                               speculate=speculate))
+    for _ in range(3):
+        eng.observe("s", 10.0)
+    return eng
+
+
+def test_speculation_acquires_and_complete_frees_both_slots():
+    eng = _spec_engine(_spec_alloc(), num_tasks=1)
+    (name, i, src), = eng.startable()
+    free_before = list(eng.free_cpus)
+    spec = eng.try_speculate(name, i)
+    assert spec is not None
+    dst, cost = spec
+    # same-pool slot is free and cheapest: no data movement
+    assert dst == src and cost == 0.0
+    assert eng.free_cpus[src] == free_before[src] - 2
+    assert eng.speculations == 1
+    assert eng.speculation_pool(name, i) == dst
+    # one duplicate at a time
+    assert eng.try_speculate(name, i) is None
+    # whichever attempt wins, complete() frees BOTH slots exactly once
+    eng.complete(name, i)
+    assert eng.free_cpus == [4, 4]
+    assert eng.running_per_pool == [0, 0]
+    assert eng.speculation_pool(name, i) is None
+
+
+def test_duplicate_finishing_second_is_cancelled():
+    """First finisher wins: the second completion (the losing attempt)
+    must be a no-op — no double resource release, no double count."""
+    eng = _spec_engine(_spec_alloc(), num_tasks=2)
+    started = eng.startable()
+    (name, i, _src) = started[0]
+    assert eng.try_speculate(name, i) is not None
+    eng.complete(name, i)          # winner
+    free_after = list(eng.free_cpus)
+    done_after = eng._n_done
+    eng.complete(name, i)          # loser arrives late: no-op
+    assert eng.free_cpus == free_after
+    assert eng._n_done == done_after
+
+
+def test_speculation_noop_without_free_slot():
+    """Cluster saturated: no duplicate slot exists anywhere -> the
+    speculation candidate is None, and the arbiter (with migration also
+    impossible) declines to act."""
+    eng = _spec_engine(_spec_alloc(cpus=2), num_tasks=2)
+    started = eng.startable()          # one task per pool: saturated
+    assert len(started) == 2
+    (name, i, _k) = started[0]
+    assert eng.try_speculate(name, i) is None
+    assert eng.arbitrate(name, i, elapsed=50.0) is None
+    assert eng.speculations == 0 and eng.migrations == 0
+
+
+def test_arbiter_falls_back_to_migration_when_speculation_unavailable():
+    """Any migration target is also a valid duplicate slot, so pure
+    capacity can never leave only migration — but an exhausted speculation
+    budget (or a dup already racing) can.  The arbiter must then fall back
+    to the always-migrate path."""
+    g = DAG()
+    g.add(TaskSet("s", 1, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, _spec_alloc(),
+                      feedback=FeedbackOptions(min_samples=1, speculate=True,
+                                               max_speculations_per_task=0))
+    for _ in range(3):
+        eng.observe("s", 10.0)
+    (name, i, _), = eng.startable()
+    # elapsed 5 s of an expected ~40 s tail: migrating (cost 2 + rerun 10)
+    # beats the predicted 35 s remainder, so the arbiter acts
+    act = eng.arbitrate(name, i, elapsed=5.0)
+    assert act is not None and act[0] == "migrate"
+    assert eng.migrations == 1 and eng.speculations == 0
+    # ...but with the tail nearly paid off (elapsed 50 s -> baseline is
+    # one mean), a rerun cannot finish sooner and the arbiter declines
+    eng2 = SchedEngine(g, _spec_alloc(),
+                       feedback=FeedbackOptions(min_samples=1, speculate=True,
+                                                max_speculations_per_task=0))
+    for _ in range(3):
+        eng2.observe("s", 10.0)
+    (n2, i2, _), = eng2.startable()
+    assert eng2.arbitrate(n2, i2, elapsed=50.0) is None
+
+
+def test_arbiter_tie_breaks_by_slot_pressure():
+    """Identical costs both ways: with queued work the duplicate's slot
+    displaces it, so the arbiter migrates; with an empty queue the
+    original races for free, so it speculates."""
+    # pressure: 3 tasks, 2 started (one per pool), 1 queued; zero transfer
+    alloc = _spec_alloc(transfer=0.0, cpus=2)
+    eng = _spec_engine(alloc, num_tasks=3)
+    started = eng.startable()
+    assert len(started) == 2 and len(eng.ready["s"]) == 1
+    (name, i, _k) = started[0]
+    eng.complete(name, i)              # frees a slot; queue still has one
+    (qname, qi, _qk) = started[1]
+    # drain the queue? no -- it is still pending, so pressure holds
+    act = eng.arbitrate(qname, qi, elapsed=50.0)
+    assert act is not None and act[0] == "migrate"
+
+    # no pressure: single task, both pools otherwise idle, zero transfer
+    eng2 = _spec_engine(alloc, num_tasks=1)
+    (n2, i2, _), = eng2.startable()
+    act2 = eng2.arbitrate(n2, i2, elapsed=50.0)
+    assert act2 is not None and act2[0] == "speculate"
+
+
+def test_single_mechanism_configs_skip_arbitration():
+    """speculate=False degenerates to always-migrate; migrate=False to
+    always-speculate (the benchmark's pure arms)."""
+    eng = _spec_engine(_spec_alloc(), num_tasks=1, speculate=False)
+    (n, i, _), = eng.startable()
+    act = eng.arbitrate(n, i, elapsed=50.0)
+    assert act is not None and act[0] == "migrate"
+
+    eng2 = _spec_engine(_spec_alloc(), num_tasks=1, migrate=False)
+    (n2, i2, _), = eng2.startable()
+    act2 = eng2.arbitrate(n2, i2, elapsed=50.0)
+    assert act2 is not None and act2[0] == "speculate"
+
+
+def test_sim_speculation_rescues_stragglers_single_pool():
+    """Migration needs a second pool; speculation only needs a free slot,
+    so it rescues stragglers even on a single-pool allocation — and every
+    task still completes exactly once."""
+    g = DAG()
+    g.add(TaskSet("s", 24, 2, 0, tx_mean=10.0, tx_sigma=0.5))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=16, gpus=0))
+    opts = SimOptions(seed=2, launch_latency=0.0, straggler_prob=0.15,
+                      straggler_factor=20.0)
+    base = simulate(g, pool, "async", options=opts)
+    fed = simulate(g, pool, "async", options=opts,
+                   feedback=FeedbackOptions(straggler_k=2.0, migrate=False,
+                                            speculate=True))
+    assert fed.tasks_total == base.tasks_total == 24
+    assert fed.speculations > 0 and fed.migrations == 0
+    assert fed.makespan < base.makespan
+    assert len({(r.set_name, r.index) for r in fed.records}) == 24
+    assert sum(1 for r in fed.records if r.duplicate) > 0
+
+
+def test_real_executor_speculates_stragglers():
+    """The executor's watchdog launches speculative duplicates through the
+    same engine; first finisher wins and the records stay exactly-once."""
+    g = DAG()
+    g.add(TaskSet("s", 12, 2, 0, tx_mean=40.0, tx_sigma=1.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=16, gpus=0))
+    ex = RealExecutor(pool, tx_scale=1e-3, seed=7,
+                      straggler_prob=0.2, straggler_factor=50.0)
+    res = ex.run(g, "async",
+                 feedback=FeedbackOptions(straggler_k=2.0, min_samples=2,
+                                          migrate=False, speculate=True))
+    assert res.tasks_total == 12
+    assert len({(r.set_name, r.index) for r in res.records}) == 12
+    assert res.speculations > 0 and res.migrations == 0
+
+
 def test_execution_policy_carries_scheduling_to_both_substrates():
     g = _equiv_dag()
     pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))

@@ -1,0 +1,136 @@
+"""Benchmark-regression gate: `make bench-check`.
+
+Compares fresh benchmark JSON (``benchmarks/out/*.json``, written by the
+bench targets) against the committed baselines
+(``benchmarks/baseline/*.json``).  The baseline directory is the source
+of truth for *which* benchmarks are gated: every baseline file must have
+a fresh counterpart.
+
+Failure conditions:
+
+1. **Makespan regression**: any numeric leaf whose key contains
+   ``makespan`` may not exceed its baseline value by more than
+   ``THRESHOLD`` (10%).  Improvements (smaller makespans) always pass —
+   the gate is one-sided.
+2. **Headline guards**: the paper-level claims must hold in the fresh
+   run regardless of drift —
+   - the shared-GPU c-DG2 async win survives locality placement
+     (``runtime_feedback.json``: ``locality_cdg2_shared.i`` >= 0.25,
+     the I ~= 0.34 headline with margin);
+   - the online predictor still converges
+     (``predictor.json``: final mean re-prediction error < 0.10);
+   - the arbiter still beats both pure mitigation arms
+     (``predictor.json``: arbitrated mean <= min(always-migrate,
+     always-speculate)).
+
+Exits non-zero with a list of problems; wired into CI after the bench
+targets.  To accept an intentional change, regenerate the baseline:
+``make bench-policies bench-feedback bench-predictor`` and copy the new
+``benchmarks/out/*.json`` over ``benchmarks/baseline/``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baseline")
+OUT_DIR = os.path.join(ROOT, "benchmarks", "out")
+
+#: one-sided makespan-regression tolerance (fresh <= baseline * (1 + T))
+THRESHOLD = 0.10
+
+
+def walk_makespans(baseline, fresh, path, problems):
+    """Recursively pair up makespan-keyed numeric leaves."""
+    if isinstance(baseline, dict):
+        if not isinstance(fresh, dict):
+            problems.append(f"{path}: baseline is an object, fresh is not")
+            return
+        for key, bval in baseline.items():
+            if key not in fresh:
+                problems.append(f"{path}.{key}: missing from fresh output")
+                continue
+            walk_makespans(bval, fresh[key], f"{path}.{key}", problems)
+        return
+    if isinstance(baseline, list):
+        if not isinstance(fresh, list) or len(fresh) != len(baseline):
+            problems.append(f"{path}: list shape changed")
+            return
+        for k, (b, f) in enumerate(zip(baseline, fresh)):
+            walk_makespans(b, f, f"{path}[{k}]", problems)
+        return
+    leaf = path.rsplit(".", 1)[-1].split("[")[0]
+    if "makespan" in leaf and isinstance(baseline, (int, float)) \
+            and isinstance(fresh, (int, float)) and baseline > 0:
+        if fresh > baseline * (1.0 + THRESHOLD):
+            problems.append(
+                f"{path}: makespan regressed {baseline} -> {fresh} "
+                f"(+{100 * (fresh / baseline - 1):.1f}% > "
+                f"{100 * THRESHOLD:.0f}%)")
+
+
+def check_headlines(name, fresh, problems):
+    if name == "runtime_feedback.json":
+        i = fresh.get("locality_cdg2_shared", {}).get("i")
+        if i is None or i < 0.25:
+            problems.append(
+                f"{name}: shared-GPU c-DG2 async win lost under locality "
+                f"(I = {i!r}, needs >= 0.25)")
+    if name == "predictor.json":
+        errs = fresh.get("convergence", {}).get("mean_errors") or []
+        if not errs or errs[-1] >= 0.10:
+            problems.append(
+                f"{name}: predictor no longer converges (final mean "
+                f"re-prediction error {errs[-1] if errs else 'missing'!r}, "
+                f"needs < 0.10)")
+        arms = fresh.get("arbitrage", {}).get("arms", {})
+        try:
+            arb = arms["arbitrated"]["makespan_mean"]
+            pure = min(arms["always_migrate"]["makespan_mean"],
+                       arms["always_speculate"]["makespan_mean"])
+            if arb > pure * 1.0001:
+                problems.append(
+                    f"{name}: arbitrated mitigation ({arb}) lost to the "
+                    f"best pure arm ({pure})")
+        except KeyError as e:
+            problems.append(f"{name}: arbitrage arm missing: {e}")
+
+
+def main() -> int:
+    problems: list[str] = []
+    baselines = sorted(f for f in os.listdir(BASELINE_DIR)
+                       if f.endswith(".json")) \
+        if os.path.isdir(BASELINE_DIR) else []
+    if not baselines:
+        print("bench-check: FAILED\n  - no baselines committed under "
+              "benchmarks/baseline/")
+        return 1
+    checked = 0
+    for name in baselines:
+        fresh_path = os.path.join(OUT_DIR, name)
+        if not os.path.exists(fresh_path):
+            problems.append(f"{name}: no fresh output in benchmarks/out/ "
+                            f"(did the bench target run?)")
+            continue
+        with open(os.path.join(BASELINE_DIR, name)) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        walk_makespans(baseline, fresh, name, problems)
+        check_headlines(name, fresh, problems)
+        checked += 1
+    if problems:
+        print("bench-check: FAILED")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"bench-check: OK ({checked} baseline files, "
+          f"<= {100 * THRESHOLD:.0f}% makespan drift, headlines held)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
