@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all bench-policies bench-feedback bench-predictor \
-        bench-check bench-paper docs-check lint format-check
+        bench-topology bench-check bench-paper docs-check lint format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -25,6 +25,12 @@ bench-feedback:
 bench-predictor:
 	$(PY) benchmarks/bench_predictor.py
 
+## node-level topology: nodepack-vs-gpu_bestfit fragmentation win,
+## contention-aware prediction on strict-GPU c-DG2, and the
+## node_level=False bit-identity check against committed baselines
+bench-topology:
+	$(PY) benchmarks/bench_topology.py
+
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost
 ## headline fails); run after the bench targets
@@ -39,10 +45,13 @@ docs-check:
 lint:
 	ruff check src tools benchmarks
 
-## ruff formatter drift report (advisory in CI until the tree has been
-## `ruff format`-ed once; then fold into `lint`)
+## formatting gate (BLOCKING in CI): the pure-Python checker in
+## tools/format_check.py, so it runs in the dev container too (ruff is
+## not installable there — the one-time cleanup it enforces landed with
+## the topology PR).  `ruff check` above still runs on CI for the
+## deeper lint rules.
 format-check:
-	ruff format --check src
+	$(PY) tools/format_check.py
 
 ## the paper-reproduction benchmarks (Tables 1-3, Figs. 4-6)
 bench-paper:

@@ -79,7 +79,8 @@ def main():
     hdr = f"  {'workload':12s} {'policy':12s} {'gpus':7s} " \
           f"{'t_seq':>8s} {'t_async':>8s} {'I':>7s}"
     for shared in (False, True):
-        print(f"-- {'shared (paper-reproducing)' if shared else 'strict exclusive'} GPUs --")
+        label = "shared (paper-reproducing)" if shared else "strict exclusive"
+        print(f"-- {label} GPUs --")
         print(hdr)
         for which in WORKLOADS:
             for policy in POLICIES:

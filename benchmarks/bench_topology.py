@@ -1,0 +1,210 @@
+"""Node-level topology: NVLink-aware packing + contention-aware
+prediction (``core/resources.py`` node model, ``nodepack`` policy,
+``core/predictor.py`` cross-set contention term).
+
+Three claims, all asserted (CI gates on them via
+``benchmarks/baseline/topology.json`` + ``make bench-check``):
+
+(a) **Packing** — on a fragmented multi-GPU mix (an ML-serving stream of
+    1-GPU tasks next to periodic 6-GPU training tasks that each need a
+    whole node), ``nodepack`` — which packs narrow tasks into the
+    tightest NVLink groups, preserving contiguous free blocks — beats
+    pool-aggregate-minded ``gpu_bestfit`` (RM-default *spread* node
+    choice) on mean makespan: spreading leaves every node partially
+    busy, so the wide tasks wait for whole nodes to drain.
+
+(b) **Contention-aware prediction** — on strict-GPU c-DG2 (the paper's
+    Summit allocation WITHOUT GPU sharing, where rank-2 task sets demand
+    112 GPUs on 96), the mid-run re-prediction error is strictly lower
+    with the cross-set contention term (node-level occupancy feeding
+    ``MakespanPredictor._effective_slots``) than without: T3/T6 waves
+    serialize behind T4/T5's GPUs, which the per-set path bound cannot
+    see.  The schedules themselves are identical (1-GPU tasks cannot
+    fragment a 6-GPU node), so the error delta is pure predictor.
+
+(c) **Aggregate bit-identity** — with ``node_level=False`` (the default)
+    nothing changes: re-running one seed of each committed baseline
+    configuration (``predictor.json`` convergence seed 3,
+    ``runtime_feedback.json`` c-DG2 migration arm seed 3) reproduces the
+    committed makespans exactly.
+
+Writes ``benchmarks/out/topology.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import (DAG, Allocation, FeedbackOptions, NodeSpec, PoolSpec,
+                        SimOptions, TaskSet, cdg_dag, simulate, summit_pool)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baseline")
+
+FRAG_SEEDS = tuple(range(1, 9))
+CONTENTION_SEEDS = (3, 7, 11, 13, 17)
+#: heavy-tailed durations, as in bench_predictor's convergence run
+LOGNORMAL = dict(tx_distribution="lognormal", lognormal_sigma=0.5)
+
+
+def frag_pool() -> PoolSpec:
+    """4 GPU nodes, 6 GPUs each in 2 NVLink groups of 3 (Summit-like),
+    node-granular accounting."""
+    return PoolSpec("gpu", 4, NodeSpec(cpus=32, gpus=6, nvlink_groups=2),
+                    node_level=True)
+
+
+def frag_dag() -> DAG:
+    """The fragmented multi-GPU mix: a 1-GPU inference stream occupying
+    the cluster when 6-GPU (whole-node) training tasks arrive mid-run,
+    with more 1-GPU serving work backfilling around them."""
+    g = DAG()
+    g.add(TaskSet("stage_a", 12, 2, 1, tx_mean=100.0, tx_sigma=15.0,
+                  kind="inference"))
+    g.add(TaskSet("trigger", 1, 2, 0, tx_mean=50.0, tx_sigma=2.0))
+    g.add(TaskSet("train", 2, 4, 6, tx_mean=400.0, tx_sigma=10.0,
+                  kind="training"))
+    g.add(TaskSet("serve", 16, 2, 1, tx_mean=80.0, tx_sigma=10.0,
+                  kind="inference"))
+    g.add_edge("trigger", "train")
+    g.add_edge("trigger", "serve")
+    return g
+
+
+def run_fragmented() -> dict:
+    out: dict = {"seeds": list(FRAG_SEEDS), "arms": {}}
+    for policy in ("gpu_bestfit", "nodepack"):
+        ms = []
+        for seed in FRAG_SEEDS:
+            res = simulate(frag_dag(), frag_pool(), "async",
+                           options=SimOptions(seed=seed), scheduling=policy)
+            assert res.tasks_total == 31
+            assert all(r.node >= 0 for r in res.records)
+            ms.append(res.makespan)
+        out["arms"][policy] = dict(
+            makespan_mean=round(sum(ms) / len(ms), 1),
+            makespans=[round(m, 1) for m in ms])
+    return out
+
+
+def midrun_error(res, lo: float = 0.1, hi: float = 0.9) -> float:
+    """Mean |predicted total - realized| / realized over the mid-run
+    prediction window (done fraction in [lo, hi])."""
+    errs = [abs(p.total - res.makespan) / res.makespan
+            for p in res.predictions if lo <= p.done_fraction <= hi]
+    return sum(errs) / len(errs)
+
+
+def run_contention() -> dict:
+    fb = FeedbackOptions(straggler_k=2.0)
+    per_seed = {}
+    sum_with = sum_without = 0.0
+    for seed in CONTENTION_SEEDS:
+        opts = SimOptions(seed=seed, **LOGNORMAL)
+        base = simulate(cdg_dag("c-DG2"), summit_pool(), "async",
+                        options=opts, feedback=fb)
+        node = simulate(cdg_dag("c-DG2"), summit_pool(node_level=True),
+                        "async", options=opts, feedback=fb)
+        # same schedule — the error delta is pure predictor
+        assert base.makespan == node.makespan, (seed, base.makespan,
+                                                node.makespan)
+        e_without, e_with = midrun_error(base), midrun_error(node)
+        per_seed[seed] = dict(makespan=round(base.makespan, 1),
+                              err_without=round(e_without, 4),
+                              err_with=round(e_with, 4))
+        sum_without += e_without
+        sum_with += e_with
+    n = len(CONTENTION_SEEDS)
+    return dict(seeds=list(CONTENTION_SEEDS),
+                err_without=round(sum_without / n, 4),
+                err_with=round(sum_with / n, 4),
+                per_seed=per_seed)
+
+
+def run_baseline_identity() -> dict:
+    """Recompute one seed of each committed-baseline configuration with
+    the (default) aggregate resource model and compare bit-exactly."""
+    out: dict = {}
+
+    # predictor.json convergence, seed 3: c-DG2 shared-GPU + lognormal
+    shared = dataclasses.replace(summit_pool(), oversubscribe_gpus=True)
+    res = simulate(cdg_dag("c-DG2"), shared, "async",
+                   options=SimOptions(seed=3, **LOGNORMAL),
+                   feedback=FeedbackOptions(straggler_k=2.0, speculate=True))
+    with open(os.path.join(BASELINE_DIR, "predictor.json")) as f:
+        committed = json.load(f)["convergence"]["per_seed"]["3"]["makespan"]
+    out["predictor_seed3"] = dict(fresh=round(res.makespan, 1),
+                                  committed=committed,
+                                  identical=round(res.makespan, 1)
+                                  == committed)
+
+    # runtime_feedback.json c-DG2 migration arm, seed 3: split Summit +
+    # lognormal + 10% x16 stragglers, lpt + full feedback
+    half = summit_pool(8)
+    split = Allocation(
+        "summit-split",
+        (dataclasses.replace(half, name="summit-a"),
+         dataclasses.replace(half, name="summit-b")),
+        transfer_cost=((0.0, 10.0), (10.0, 0.0)))
+    res = simulate(cdg_dag("c-DG2"), split, "async",
+                   options=SimOptions(seed=3, straggler_prob=0.1,
+                                      straggler_factor=16.0, **LOGNORMAL),
+                   scheduling="lpt",
+                   feedback=FeedbackOptions(straggler_k=2.0))
+    with open(os.path.join(BASELINE_DIR, "runtime_feedback.json")) as f:
+        wl = next(w for w in json.load(f)["workloads"]
+                  if w["workload"] == "c-DG2")
+    committed = wl["arms"]["migration"]["makespans"][0]
+    out["feedback_seed3"] = dict(fresh=round(res.makespan, 1),
+                                 committed=committed,
+                                 identical=round(res.makespan, 1)
+                                 == committed)
+    return out
+
+
+def main() -> dict:
+    print("== (a) nodepack vs gpu_bestfit, fragmented multi-GPU mix "
+          "(4x6-GPU nodes, 2 NVLink groups each) ==")
+    frag = run_fragmented()
+    for arm, r in frag["arms"].items():
+        print(f"  {arm:12s} mean={r['makespan_mean']:8.1f}  "
+              f"{r['makespans']}")
+    a = frag["arms"]
+    assert a["nodepack"]["makespan_mean"] <= \
+        a["gpu_bestfit"]["makespan_mean"], frag
+    # every seed, not just the mean: packing must never lose here
+    for np_m, bf_m in zip(a["nodepack"]["makespans"],
+                          a["gpu_bestfit"]["makespans"]):
+        assert np_m <= bf_m, frag
+
+    print("== (b) contention-aware prediction, strict-GPU c-DG2 "
+          "(112-GPU rank-2 demand on 96 GPUs) ==")
+    cont = run_contention()
+    print(f"  mid-run mean |err|: without={cont['err_without']:.4f}  "
+          f"with={cont['err_with']:.4f}")
+    assert cont["err_with"] < cont["err_without"], cont
+    for seed, r in cont["per_seed"].items():
+        assert r["err_with"] < r["err_without"], (seed, cont)
+
+    print("== (c) node_level=False stays bit-identical to the committed "
+          "baselines ==")
+    ident = run_baseline_identity()
+    for which, r in ident.items():
+        print(f"  {which:16s} fresh={r['fresh']} committed={r['committed']}"
+              f" identical={r['identical']}")
+        assert r["identical"], (which, ident)
+
+    out = {"fragmented": frag, "contention": cont,
+           "baseline_identity": ident}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "topology.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  topology: OK (wrote {os.path.relpath(path)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

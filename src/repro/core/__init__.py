@@ -4,12 +4,13 @@ discrete-event simulator, and a real asynchronous executor."""
 
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions, SetEstimate, TxEstimator
-from .resources import (Allocation, NodeSpec, PoolSpec, Resources,
-                        as_allocation, doa_res, hybrid_pool, summit_pool,
-                        tpu_pod_pool, wla)
+from .resources import (Allocation, NodeSpec, NodeState, PoolSpec, Resources,
+                        as_allocation, doa_res, hybrid_pool, node_states,
+                        summit_pool, tpu_pod_pool, wla)
 from .sched_engine import (SCHEDULING_POLICIES, FifoBackfill, GpuAwareBestFit,
-                           LargestTxFirst, LocalityAware, SchedEngine,
-                           SchedulingPolicy, SetInfo, get_scheduling_policy)
+                           LargestTxFirst, LocalityAware, NodePackTopology,
+                           SchedEngine, SchedulingPolicy, SetInfo,
+                           get_scheduling_policy)
 from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     maskable_stages, predict, relative_improvement,
                     sequential_ttx, sequential_ttx_grouped,
@@ -20,7 +21,7 @@ from .executor import ExecResult, RealExecutor
 from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
                         adaptive_policy, arbitrated_policy, async_policy,
                         gpu_bestfit_policy, locality_policy, lpt_policy,
-                        sequential_policy)
+                        nodepack_policy, sequential_policy)
 from .adaptive import PolicyComparison, compare_policies
 from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
                        Pipeline, Stage, cdg_dag, cdg_sequential_stage_tx,

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Iterable, Mapping
 
 
@@ -87,6 +88,13 @@ class FeedbackOptions:
     #: — heavy-tailed durations stay heavy once past the detection
     #: threshold, so the default assumes ~4x the set mean in total.
     straggler_tail_ratio: float = 4.0
+    #: calibrate the tail ratio online from each set's OBSERVED tail
+    #: quantile (un-winsorized durations / running mean) instead of the
+    #: fixed default above; arms per set after ``min_samples`` raw
+    #: observations.  Off by default (keeps prior behaviour bit-identical).
+    calibrate_tail: bool = False
+    #: the quantile the online calibration reads as "the tail".
+    tail_quantile: float = 0.95
     #: maintain + consult per-(set, pool) TX estimates so a slow pool does
     #: not pollute its siblings' estimates or straggler thresholds.
     per_pool: bool = True
@@ -129,6 +137,10 @@ class TxEstimator:
     reading as set-wide drift on its siblings.
     """
 
+    #: raw (un-winsorized) durations kept per set for online tail-quantile
+    #: calibration; bounded so memory stays O(sets)
+    RAW_WINDOW = 128
+
     def __init__(self, alpha: float = 0.25,
                  prior: "Mapping[str, float] | None" = None):
         if not 0.0 < alpha <= 1.0:
@@ -139,6 +151,7 @@ class TxEstimator:
         self.prior: dict[str, float] = dict(prior or {})
         self._est: dict[str, SetEstimate] = {}
         self._pool_est: dict[tuple[str, str], SetEstimate] = {}
+        self._raw: dict[str, deque] = {}
 
     # -- updates -----------------------------------------------------------
     def _fold(self, est: "dict", key, duration: float) -> SetEstimate:
@@ -153,9 +166,17 @@ class TxEstimator:
         return e
 
     def observe(self, name: str, duration: float,
-                pool: "str | None" = None) -> SetEstimate:
+                pool: "str | None" = None,
+                raw: "float | None" = None) -> SetEstimate:
         """Fold one completed task's duration into the set's estimate (and
-        into the per-(set, pool) estimate when ``pool`` is given)."""
+        into the per-(set, pool) estimate when ``pool`` is given).
+        ``raw`` is the pre-winsorize duration, recorded for online tail
+        calibration (:meth:`tail_ratio`) — stragglers must count there
+        even though clipping keeps them out of the EWMA."""
+        if raw is None:
+            raw = duration
+        self._raw.setdefault(
+            name, deque(maxlen=self.RAW_WINDOW)).append(float(raw))
         if pool is not None:
             self._fold(self._pool_est, (name, pool), duration)
         return self._fold(self._est, name, duration)
@@ -196,6 +217,24 @@ class TxEstimator:
         if e is not None and e.count > 1:
             return e.std
         return default
+
+    def tail_ratio(self, name: str, q: float = 0.95,
+                   min_count: int = 3) -> "float | None":
+        """The set's observed tail: the ``q``-quantile of its raw
+        (un-winsorized) durations over its running EWMA mean, or ``None``
+        before ``min_count`` raw observations.  Clamped to >= 1 (a tail
+        can not be shorter than the mean for mitigation purposes)."""
+        raw = self._raw.get(name)
+        if raw is None or len(raw) < max(min_count, 2):
+            return None
+        mean = self.mean(name)
+        if mean <= 0:
+            return None
+        xs = sorted(raw)
+        # round the index UP: the tail estimate must not ignore a lone
+        # outlier merely because the window is small
+        idx = min(len(xs) - 1, math.ceil(q * (len(xs) - 1)))
+        return max(1.0, xs[idx] / mean)
 
     def is_straggler(self, name: str, runtime: float, fb: FeedbackOptions,
                      pool: "str | None" = None) -> bool:

@@ -17,8 +17,11 @@ resource accounting and placement — are delegated to the SAME
 :class:`~repro.core.sched_engine.SchedEngine` the discrete-event simulator
 uses, so the two substrates enforce identical semantics by construction.
 Heterogeneous multi-pool :class:`~repro.core.resources.Allocation`s and
-the ``fifo`` / ``lpt`` / ``gpu_bestfit`` / ``locality`` policies work
-unchanged here, as does runtime feedback (``feedback=FeedbackOptions()``):
+the ``fifo`` / ``lpt`` / ``gpu_bestfit`` / ``locality`` / ``nodepack``
+policies work unchanged here — node-level pools
+(``PoolSpec.node_level``) stamp the concrete node of every winning
+attempt onto its ``TaskRecord`` exactly as the simulator does — as does
+runtime feedback (``feedback=FeedbackOptions()``):
 completions feed the shared engine's online TX estimator (pool-tagged,
 so per-pool splits work), a watchdog in the dispatcher mitigates
 stragglers through the engine's arbiter — preempt + resubmit on another
@@ -198,6 +201,9 @@ class RealExecutor:
                 if spec:
                     started.pop((name, i), None)
                 start = first_start.pop((name, i), attempt_start)
+                # node id must be read before complete() frees the slot
+                node = (engine.spec_node(name, i) if spec
+                        else engine.node_placement(name, i))
                 engine.complete(name, i)
                 # observe in MODELLED seconds (wall / tx_scale) so the
                 # estimates stay commensurate with the tx_mean priors and
@@ -208,7 +214,8 @@ class RealExecutor:
                                           ts.cpus_per_task, ts.gpus_per_task,
                                           duplicate=spec,
                                           pool=engine.pool_name(pool_idx),
-                                          migrated=(name, i) in gen))
+                                          migrated=(name, i) in gen,
+                                          node=node))
                 cv.notify_all()
 
         # the watchdog needs a mitigation that can actually fire: migration

@@ -25,6 +25,12 @@ analytic model never saw the updates.  This module closes that loop:
       observes completions;
     - running tasks contribute their longest expected remainder
       (``max(t_s - elapsed, 0)`` plus the same tail term);
+    - with node-level occupancy (``contention=True``, set by the engine
+      for ``PoolSpec.node_level`` allocations) a cross-set GPU
+      contention term shrinks ``slots_s`` to the set's share of strict
+      GPU capacity whenever order-unrelated sets' live demand exceeds it
+      (strict-GPU c-DG2's T3/T6 waves serialize behind T4/T5's GPUs,
+      which the per-set path bound alone cannot see);
     - remaining makespan = max(longest residual dependency path, residual
       work / capacity per non-oversubscribed resource class);
     - predicted total = ``now + remaining``.
@@ -92,10 +98,15 @@ class MakespanPredictor:
     """
 
     def __init__(self, dag: DAG, pool: "PoolSpec | Allocation",
-                 tail_factor: float = 1.0):
+                 tail_factor: float = 1.0, contention: bool = False):
         self.g = dag
         self.tail_factor = tail_factor
         self.alloc = as_allocation(pool)
+        #: cross-set GPU contention term (see :meth:`_effective_slots`):
+        #: enabled by the engine when the allocation carries node-level
+        #: occupancy (``PoolSpec.node_level``), whose honest accounting is
+        #: what makes the live ``gpu_held`` signal trustworthy.
+        self.contention = contention
         self._order = dag.topological_order()
         self._slots = {n: self._set_slots(dag.node(n)) for n in self._order}
         # resource classes the work bound may use: skip a class as soon as
@@ -104,12 +115,53 @@ class MakespanPredictor:
                                     for p in self.alloc.pools))
         self._bound_gpus = (not any(p.oversubscribe_gpus
                                     for p in self.alloc.pools))
+        #: sets related by a dependency path (ancestors/descendants/self):
+        #: those can NEVER contend — only order-unrelated sets co-run
+        self._related = {n: self._related_sets(n) for n in self._order}
+
+    def _related_sets(self, name: str) -> set[str]:
+        out = {name}
+        for direction in (self.g.parents, self.g.children):
+            frontier = [name]
+            while frontier:
+                cur = frontier.pop()
+                for m in direction(cur):
+                    if m not in out:
+                        out.add(m)
+                        frontier.append(m)
+        return out
+
+    @staticmethod
+    def _node_level_slots(p: PoolSpec, ts: TaskSet) -> int:
+        """Per-node slot count for a node-level pool, summed over the
+        pool's two node-capacity classes (``reserved_cpus`` spreads as
+        evenly as possible, so the first ``reserved % num_nodes`` nodes
+        carry one core less — mirroring ``resources.node_states``)."""
+        base, extra = divmod(p.reserved_cpus, p.num_nodes)
+        out = 0
+        for cap_c, count in ((p.node.cpus - base - 1, extra),
+                             (p.node.cpus - base, p.num_nodes - extra)):
+            if not count:
+                continue
+            lims = []
+            if ts.cpus_per_task > 0 and not p.oversubscribe_cpus:
+                lims.append(cap_c // ts.cpus_per_task)
+            if ts.gpus_per_task > 0 and not p.oversubscribe_gpus:
+                lims.append(p.node.gpus // ts.gpus_per_task)
+            out += (min(lims) if lims else ts.num_tasks) * count
+        return out
 
     def _set_slots(self, ts: TaskSet) -> int:
-        """How many tasks of ``ts`` the allocation can run concurrently."""
+        """How many tasks of ``ts`` the allocation can run concurrently.
+        Node-level pools bound this per node (a task must fit one node),
+        so e.g. 4-GPU tasks on 6-GPU nodes get one slot per node — not
+        ``total_gpus // 4`` — matching the engine's placement honesty."""
         total = 0
         for p in self.alloc.pools:
             if not p.accepts(ts):
+                continue
+            if p.node_level:
+                total += self._node_level_slots(p, ts)
                 continue
             lims = []
             if ts.cpus_per_task > 0 and not p.oversubscribe_cpus:
@@ -171,18 +223,66 @@ class MakespanPredictor:
         cond_mean = t * self._norm_cdf(s - d) / denom
         return max(max(0.0, t - elapsed), cond_mean - elapsed)
 
+    def _effective_slots(self, name: str, pending: Mapping[str, int],
+                         run_count: Mapping[str, int],
+                         gpu_held: Mapping[str, int]) -> int:
+        """Cross-set GPU contention: shrink a set's concurrency to its
+        *share* of the strict GPU capacity when order-unrelated sets with
+        remaining work compete for the same devices.
+
+        The per-set path bound prices each set's waves as if it had the
+        whole allocation; under strict GPUs, co-runnable sets (e.g.
+        c-DG2's T3/T6 next to T4/T5) serialize behind each other's
+        devices, which that bound cannot see.  Each contender's demand is
+        its *live* GPU holdings (``gpu_held``, from the engine's
+        node-level occupancy) plus what its still-pending tasks can draw;
+        set ``name``'s slots scale by its demand share whenever the total
+        exceeds capacity."""
+        slots = self._slots[name]
+        if not (self.contention and self._bound_gpus):
+            return slots
+        g_n = self.g.node(name).gpus_per_task
+        if g_n <= 0:
+            return slots
+
+        def demand(m: str) -> int:
+            g = self.g.node(m).gpus_per_task
+            can_start = max(0, self._slots[m] - run_count.get(m, 0))
+            return (gpu_held.get(m, run_count.get(m, 0) * g)
+                    + min(pending.get(m, 0), can_start) * g)
+
+        mine = demand(name)
+        if mine <= 0:
+            return slots
+        total = mine
+        for m in self._order:
+            if m in self._related[name]:
+                continue
+            if pending.get(m, 0) or run_count.get(m, 0):
+                total += demand(m)
+        capacity = self.alloc.total.gpus
+        if total <= capacity:
+            return slots  # no contention: everyone fits side by side
+        eff = int(capacity * (mine / total)) // g_n
+        return max(1, min(slots, eff))
+
     def predict(self, tx: TxFn, now: float,
                 pending: Mapping[str, int],
                 running_elapsed: "Mapping[tuple[str, int], float]",
                 done_fraction: float = 0.0,
-                tx_std: "TxFn | None" = None) -> MakespanPrediction:
+                tx_std: "TxFn | None" = None,
+                gpu_held: "Mapping[str, int] | None" = None,
+                ) -> MakespanPrediction:
         """One prediction snapshot.
 
         ``pending`` maps set -> tasks not yet started (queued or blocked);
         ``running_elapsed`` maps (set, index) -> seconds the task has been
         running on the caller's clock (the same clock the estimator was
         fed, so live TXs and elapsed times are commensurate); ``tx_std``
-        supplies the live dispersion per set (``None`` = no tail term).
+        supplies the live dispersion per set (``None`` = no tail term);
+        ``gpu_held`` the GPUs each set's running tasks hold right now
+        (the engine's occupancy accounting — only read by the cross-set
+        contention term, see :meth:`_effective_slots`).
         """
         std = tx_std or (lambda _n: 0.0)
         run_rem: dict[str, float] = {}
@@ -196,13 +296,15 @@ class MakespanPredictor:
 
         residual: dict[str, float] = {}
         cpu_work = gpu_work = 0.0
+        held = gpu_held or {}
         for n in self._order:
             ts = self.g.node(n)
             t = tx(n)
             s = std(n)
             m = pending.get(n, 0)
-            full, last = divmod(m, self._slots[n])
-            r = full * self._wave_span(t, s, self._slots[n])
+            slots = self._effective_slots(n, pending, run_count, held)
+            full, last = divmod(m, slots)
+            r = full * self._wave_span(t, s, slots)
             if last:
                 r += self._wave_span(t, s, last)
             k_run = run_count.get(n, 0)

@@ -11,11 +11,19 @@ Building blocks (consumed by ``core/sched_engine.py``; see DESIGN.md):
 - :class:`Resources` — a partially ordered (cpus, gpus) footprint;
 - :class:`NodeSpec` / :class:`PoolSpec` — one homogeneous partition, with
   per-pool ``oversubscribe_cpus`` / ``oversubscribe_gpus`` flags and an
-  optional ``only_kinds`` placement constraint;
+  optional ``only_kinds`` placement constraint; ``NodeSpec.nvlink_groups``
+  describes the node's NVLink islands (Summit: 2 groups of 3 GPUs);
+- :class:`NodeState` / :func:`node_states` — per-node occupancy (free
+  cores/GPUs and per-NVLink-group free maps) for ``node_level`` pools:
+  placement is then node-granular (a task must fit ONE node — aggregate
+  co-fit alone is fragmentation-dishonest) and the engine's aggregate
+  counters become a derived view;
 - :class:`Allocation` — several pools scheduled as one heterogeneous
   resource, plus an optional pairwise ``transfer_cost`` data-movement
   matrix used by the ``locality`` scheduling policy and by straggler
-  migration;
+  migration.  With node-level endpoints, :meth:`Allocation.transfer`
+  prices the topology distances same-NVLink-group <= same-node <=
+  intra-pool <= cross-pool;
 - builders: :func:`summit_pool` (the paper's 16-node allocation),
   :func:`hybrid_pool` (GPU + CPU-only partitions), :func:`tpu_pod_pool`.
 
@@ -76,10 +84,122 @@ class Resources:
 
 @dataclasses.dataclass(frozen=True)
 class NodeSpec:
-    """One homogeneous compute node."""
+    """One homogeneous compute node.
+
+    ``nvlink_groups`` is the number of NVLink islands the node's GPUs are
+    wired into (Summit: 6 GPUs in 2 groups of 3, one per socket).  GPUs
+    inside a group are "contiguous" for placement purposes: a multi-GPU
+    task placed within one group communicates over NVLink, while spanning
+    groups (or nodes) pays fabric costs — see :meth:`Allocation.transfer`.
+    The default of one group keeps pool-aggregate behaviour unchanged.
+    """
 
     cpus: int
     gpus: int
+    nvlink_groups: int = 1
+
+    def __post_init__(self):
+        if self.nvlink_groups < 1:
+            raise ValueError("nvlink_groups must be >= 1")
+        if self.gpus and self.gpus % self.nvlink_groups:
+            raise ValueError(
+                f"gpus ({self.gpus}) must divide evenly into "
+                f"nvlink_groups ({self.nvlink_groups})")
+
+    @property
+    def gpus_per_group(self) -> int:
+        return self.gpus // self.nvlink_groups if self.gpus else 0
+
+
+@dataclasses.dataclass
+class NodeState:
+    """Mutable occupancy of one node of a ``node_level`` pool: free CPU
+    cores, free GPUs, and the per-NVLink-group free GPU counts.  Owned by
+    the scheduling engine; the aggregate pool counters stay a derived
+    view of these (see ``core/sched_engine.py``)."""
+
+    spec: NodeSpec
+    #: usable cores on this node (capacity minus its share of the pool's
+    #: ``reserved_cpus``)
+    cpus: int
+    free_cpus: int = -1
+    free_gpus: int = -1
+    #: free GPUs per NVLink group (contiguity domains)
+    group_free: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.free_cpus < 0:
+            self.free_cpus = self.cpus
+        if self.free_gpus < 0:
+            self.free_gpus = self.spec.gpus
+        if not self.group_free:
+            self.group_free = [self.spec.gpus_per_group
+                               for _ in range(self.spec.nvlink_groups)]
+
+    def fits(self, need_cpus: int, need_gpus: int) -> bool:
+        return need_cpus <= self.free_cpus and need_gpus <= self.free_gpus
+
+    def best_group(self, need_gpus: int) -> "int | None":
+        """Tightest single NVLink group with ``need_gpus`` free, or
+        ``None`` when no single group fits (the task must span groups)."""
+        best, best_free = None, None
+        for gi, free in enumerate(self.group_free):
+            if free >= need_gpus and (best_free is None or free < best_free):
+                best, best_free = gi, free
+        return best
+
+    def largest_block(self) -> int:
+        """Largest contiguous free GPU block (within one NVLink group) —
+        the fragmentation metric ``nodepack`` scores candidates by."""
+        return max(self.group_free, default=0)
+
+    def acquire(self, need_cpus: int,
+                need_gpus: int) -> list[tuple[int, int]]:
+        """Take resources; returns the per-group GPU takes (group index,
+        gpus) so :meth:`release` can return exactly what was taken.
+        Prefers a single NVLink group (tightest fit); spans groups —
+        fullest first, to keep other groups contiguous — otherwise."""
+        if not self.fits(need_cpus, need_gpus):
+            raise ValueError("node cannot fit the requested resources")
+        self.free_cpus -= need_cpus
+        self.free_gpus -= need_gpus
+        takes: list[tuple[int, int]] = []
+        left = need_gpus
+        if left:
+            gi = self.best_group(left)
+            if gi is not None:
+                self.group_free[gi] -= left
+                takes.append((gi, left))
+                left = 0
+            else:
+                order = sorted(range(len(self.group_free)),
+                               key=lambda g: (self.group_free[g], g))
+                for gi in order:
+                    take = min(left, self.group_free[gi])
+                    if take:
+                        self.group_free[gi] -= take
+                        takes.append((gi, take))
+                        left -= take
+                    if not left:
+                        break
+        return takes
+
+    def release(self, need_cpus: int,
+                takes: "list[tuple[int, int]]") -> None:
+        self.free_cpus += need_cpus
+        for gi, g in takes:
+            self.group_free[gi] += g
+            self.free_gpus += g
+
+
+def node_states(pool: "PoolSpec") -> list[NodeState]:
+    """Fresh per-node occupancy for a pool, with ``reserved_cpus`` spread
+    as evenly as possible (the first ``reserved % num_nodes`` nodes carry
+    one extra reserved core)."""
+    base, extra = divmod(pool.reserved_cpus, pool.num_nodes)
+    return [NodeState(pool.node, pool.node.cpus - base - (1 if i < extra
+                                                          else 0))
+            for i in range(pool.num_nodes)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +223,12 @@ class PoolSpec:
     #: this tuple may be placed on the pool (e.g. a debug partition that only
     #: accepts ``aggregation`` tasks).  ``None`` accepts everything.
     only_kinds: tuple[str, ...] | None = None
+    #: node-granular placement: when True the engine accounts resources
+    #: per node (see :class:`NodeState`) — a task must fit on ONE node, so
+    #: a mix that only fits in aggregate is honestly rejected
+    #: (fragmentation), and placements carry concrete node ids.  False
+    #: (default) keeps the pool-aggregate accounting bit-identical.
+    node_level: bool = False
 
     @property
     def total(self) -> Resources:
@@ -111,13 +237,25 @@ class PoolSpec:
             self.num_nodes * self.node.gpus,
         )
 
+    @property
+    def node_cpu_capacity(self) -> int:
+        """Usable cores of the best node once ``reserved_cpus`` is spread
+        evenly (the honest per-node CPU bound for node-level placement)."""
+        return self.node.cpus - self.reserved_cpus // self.num_nodes
+
     def accepts(self, ts: TaskSet) -> bool:
-        """Static placement eligibility (ignores current occupancy)."""
+        """Static placement eligibility (ignores current occupancy).  A
+        ``node_level`` pool bounds the footprint per NODE — a task wider
+        than one node can never be placed, even if the pool's aggregate
+        would fit it."""
         if self.only_kinds is not None and ts.kind not in self.only_kinds:
             return False
         total = self.total
         need_c = 0 if self.oversubscribe_cpus else ts.cpus_per_task
         need_g = 0 if self.oversubscribe_gpus else ts.gpus_per_task
+        if self.node_level:
+            return (need_c <= self.node_cpu_capacity
+                    and need_g <= self.node.gpus)
         return need_c <= total.cpus and need_g <= total.gpus
 
 
@@ -133,13 +271,30 @@ class Allocation:
     pool ``j``.  The ``locality`` scheduling policy weighs it against
     queue depth when placing tasks, and straggler migration charges it on
     every preemption + requeue (see ``core/estimator.FeedbackOptions``).
-    ``None`` means free movement (a uniform fabric)."""
+    ``None`` means free movement (a uniform fabric).
+
+    With node-level placement (``PoolSpec.node_level``) the distances
+    become topology-derived — :meth:`transfer` accepts node/NVLink-group
+    endpoints and prices the four hop classes
+
+        same NVLink group  <=  same node  <=  intra-pool  <  cross-pool
+
+    via ``same_group_cost`` / ``same_node_cost`` / ``intra_pool_cost``
+    (all default 0, keeping aggregate behaviour bit-identical) and the
+    ``transfer_cost`` matrix for the cross-pool hop."""
 
     name: str
     pools: tuple[PoolSpec, ...]
     #: pairwise data-movement cost matrix, seconds, indexed [src][dst];
     #: must be square over ``pools`` with non-negative entries.
     transfer_cost: tuple[tuple[float, ...], ...] | None = None
+    #: data movement within one NVLink group (NVLink hop; effectively 0)
+    same_group_cost: float = 0.0
+    #: between NVLink groups of one node (PCIe/X-bus hop)
+    same_node_cost: float = 0.0
+    #: between nodes of one pool (fabric hop); cross-pool movement reads
+    #: the ``transfer_cost`` matrix as before
+    intra_pool_cost: float = 0.0
 
     def __post_init__(self):
         if not self.pools:
@@ -147,6 +302,11 @@ class Allocation:
         names = [p.name for p in self.pools]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate pool names in allocation: {names}")
+        if not (0.0 <= self.same_group_cost <= self.same_node_cost
+                <= self.intra_pool_cost):
+            raise ValueError(
+                "topology costs must satisfy 0 <= same_group_cost <= "
+                "same_node_cost <= intra_pool_cost")
         if self.transfer_cost is not None:
             tc = tuple(tuple(float(c) for c in row)
                        for row in self.transfer_cost)
@@ -157,13 +317,40 @@ class Allocation:
                     f"{len(self.pools)} to match pools")
             if any(c < 0 for row in tc for c in row):
                 raise ValueError("transfer_cost entries must be >= 0")
+            # the documented distance ordering ends with the cross-pool
+            # hop: off-diagonal entries may not undercut the intra-pool
+            # hop, or the arbiter would "save" by moving data further
+            if any(tc[i][j] < self.intra_pool_cost
+                   for i in range(len(tc)) for j in range(len(tc))
+                   if i != j):
+                raise ValueError(
+                    "cross-pool transfer_cost entries must be >= "
+                    "intra_pool_cost (the topology distance ordering)")
             object.__setattr__(self, "transfer_cost", tc)
 
-    def transfer(self, src: int, dst: int) -> float:
-        """Data-movement cost (s) from pool ``src`` to pool ``dst``."""
-        if self.transfer_cost is None or src == dst:
-            return 0.0
-        return self.transfer_cost[src][dst]
+    def transfer(self, src: int, dst: int, src_node: int = -1,
+                 dst_node: int = -1, src_group: int = -1,
+                 dst_group: int = -1) -> float:
+        """Data-movement cost (s) between two placements.
+
+        Pool-granular calls (node args omitted) behave exactly as before:
+        free within a pool, ``transfer_cost[src][dst]`` across pools.
+        With node endpoints given (node-level pools) the same-pool case
+        resolves to the topology distance: same NVLink group <= same node
+        <= intra-pool fabric."""
+        if src != dst:
+            if self.transfer_cost is None:
+                # a uniform (legacy-free) fabric still cannot beat the
+                # intra-pool hop: a cross-pool move traverses it too
+                return self.intra_pool_cost
+            return self.transfer_cost[src][dst]
+        if src_node < 0 or dst_node < 0:
+            return 0.0  # aggregate view: legacy same-pool movement is free
+        if src_node != dst_node:
+            return self.intra_pool_cost
+        if src_group < 0 or dst_group < 0 or src_group != dst_group:
+            return self.same_node_cost
+        return self.same_group_cost
 
     @property
     def total(self) -> Resources:
@@ -190,31 +377,42 @@ def hybrid_pool(gpu_nodes: int = 8, cpu_nodes: int = 8,
                 gpu_node: NodeSpec = NodeSpec(cpus=48, gpus=6),
                 cpu_node: NodeSpec = NodeSpec(cpus=64, gpus=0),
                 name: str = "hybrid",
-                transfer_cost: float = 0.0) -> Allocation:
+                transfer_cost: float = 0.0,
+                node_level: bool = False) -> Allocation:
     """A Summit-like heterogeneous allocation: GPU nodes plus CPU-only
     nodes.  GPU-node cores are oversubscribable (the paper's task sets are
     GPU-bound there); the CPU partition is strict, so CPU-only work queues
     honestly when packed around the GPU tasks.  ``transfer_cost`` is the
-    symmetric data-movement cost (s) between the two partitions."""
+    symmetric data-movement cost (s) between the two partitions;
+    ``node_level`` turns on node-granular placement for both."""
     tc = None
     if transfer_cost:
         tc = ((0.0, float(transfer_cost)), (float(transfer_cost), 0.0))
     return Allocation(name, (
-        PoolSpec(f"{name}-gpu", gpu_nodes, gpu_node, oversubscribe_cpus=True),
-        PoolSpec(f"{name}-cpu", cpu_nodes, cpu_node),
+        PoolSpec(f"{name}-gpu", gpu_nodes, gpu_node, oversubscribe_cpus=True,
+                 node_level=node_level),
+        PoolSpec(f"{name}-cpu", cpu_nodes, cpu_node, node_level=node_level),
     ), transfer_cost=tc)
 
 
-def summit_pool(num_nodes: int = 16, oversubscribe_cpus: bool = True) -> PoolSpec:
+def summit_pool(num_nodes: int = 16, oversubscribe_cpus: bool = True,
+                node_level: bool = False) -> PoolSpec:
     """The paper's allocation: 16 Summit nodes, 706 usable cores, 96 GPUs.
 
     Summit nodes expose 2x24 cores with 2 reserved per socket -> 44 usable,
     but the paper reports 706 usable cores for 16 nodes (62 reserved).
+
+    ``node_level=True`` switches to node-granular accounting with the real
+    Summit GPU wiring — 6 GPUs in 2 NVLink groups of 3, one per socket —
+    so placement is fragmentation-honest and NVLink-locality-aware.
     """
     reserved = round(62 * num_nodes / 16)
-    return PoolSpec("summit", num_nodes, NodeSpec(cpus=48, gpus=6),
+    node = (NodeSpec(cpus=48, gpus=6, nvlink_groups=2) if node_level
+            else NodeSpec(cpus=48, gpus=6))
+    return PoolSpec("summit", num_nodes, node,
                     reserved_cpus=reserved,
-                    oversubscribe_cpus=oversubscribe_cpus)
+                    oversubscribe_cpus=oversubscribe_cpus,
+                    node_level=node_level)
 
 
 def tpu_pod_pool(num_pods: int = 1, chips_per_pod: int = 256,
@@ -239,7 +437,7 @@ def _branch_sets_by_rank(dag: DAG) -> list[list[tuple[int, str]]]:
     return out
 
 
-def doa_res(dag: DAG, pool: PoolSpec,
+def doa_res(dag: DAG, pool: "PoolSpec | Allocation",
             strategy: DoaResStrategy = "minimal") -> int:
     """Resource-permitted degree of asynchronicity (paper §5.2).
 
@@ -247,8 +445,17 @@ def doa_res(dag: DAG, pool: PoolSpec,
     *distinct* branches whose footprints co-fit in the pool; the maximum
     over ranks, minus one, is DOA_res.  ``strategy`` picks the footprint
     definition (see module docstring).
+
+    Accepts a single :class:`PoolSpec` or a heterogeneous
+    :class:`Allocation` (e.g. :func:`hybrid_pool`): a multi-pool
+    allocation is evaluated against its *aggregate* footprint — DOA_res
+    is the paper's coarse co-fit metric, so the CPU check is waived when
+    any pool oversubscribes cores (minimal strategy), matching the
+    single-pool semantics.
     """
-    total = pool.total
+    alloc = as_allocation(pool)
+    total = alloc.total
+    oversub_cpus = any(p.oversubscribe_cpus for p in alloc.pools)
     footprint = (Resources.of_full_set if strategy == "full_set"
                  else Resources.of_task)
     best = 1 if len(dag) else 0
@@ -267,8 +474,7 @@ def doa_res(dag: DAG, pool: PoolSpec,
                     for n in pick:
                         req = req + footprint(dag.node(n))
                     cpu_ok = (req.cpus <= total.cpus
-                              or (pool.oversubscribe_cpus
-                                  and strategy == "minimal"))
+                              or (oversub_cpus and strategy == "minimal"))
                     if cpu_ok and req.gpus <= total.gpus:
                         ok = True
                         break
@@ -280,7 +486,7 @@ def doa_res(dag: DAG, pool: PoolSpec,
     return max(0, best - 1)
 
 
-def wla(dag: DAG, pool: PoolSpec,
+def wla(dag: DAG, pool: "PoolSpec | Allocation",
         strategy: DoaResStrategy = "minimal") -> int:
     """Workload-level asynchronicity, Eqn. 1: min(DOA_dep, DOA_res)."""
     return min(dag.doa_dep(), doa_res(dag, pool, strategy))

@@ -38,6 +38,26 @@ Policies (registry: ``SCHEDULING_POLICIES``; table mirrored in DESIGN.md)
                  queue-depth penalty, and waits for its cheapest pool unless
                  an idling pool may *steal* it (bounded steals per dispatch
                  pass).
+``nodepack``     NVLink-aware packing for node-level pools
+                 (``PoolSpec.node_level``): multi-GPU sets first, each task
+                 into the tightest NVLink group that fits it, candidate
+                 pools scored by fragmentation (largest contiguous free GPU
+                 block) — preserving whole nodes/groups for wide tasks.
+                 Other policies on node-level pools keep the RM-default
+                 *spread* node choice, which fragments under mixed widths.
+
+Node-level topology (``core/resources.py``)
+-------------------------------------------
+Pools with ``node_level=True`` are accounted node-granularly
+(:class:`~repro.core.resources.NodeState`): a task must fit on ONE node
+(an aggregate-only co-fit is honestly rejected — fragmentation), every
+placement carries a concrete node id (``SchedEngine.node_placement``,
+``TaskRecord.node``), and straggler migration/speculation land on
+concrete nodes too — including same-pool cross-node migration, priced by
+the topology distances of :meth:`~repro.core.resources.Allocation.transfer`
+(same NVLink group <= same node <= intra-pool <= cross-pool).  The
+aggregate ``free_cpus``/``free_gpus`` counters remain a derived view, so
+aggregate pools behave bit-identically.
 
 Runtime feedback (``core/estimator.py``)
 ----------------------------------------
@@ -89,7 +109,8 @@ from typing import Sequence
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions, TxEstimator
 from .predictor import MakespanPrediction, MakespanPredictor
-from .resources import Allocation, PoolSpec, as_allocation
+from .resources import (Allocation, NodeState, PoolSpec, as_allocation,
+                        node_states)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +155,18 @@ class SchedulingPolicy:
     def choose_pool(self, ts: TaskSet, candidates: Sequence[int],
                     engine: "SchedEngine") -> "int | None":
         return candidates[0]
+
+    def choose_node(self, ts: TaskSet, pool_idx: int,
+                    nodes: Sequence[int],
+                    engine: "SchedEngine") -> int:
+        """Node choice within a ``node_level`` pool, among the nodes that
+        can start one task of ``ts`` right now.  The default *spreads*
+        (most free GPUs, then most free cores — the load-balancing
+        behaviour typical resource managers default to); ``nodepack``
+        overrides it to pack.  Only consulted for node-level pools."""
+        states = engine.node_states[pool_idx]
+        return min(nodes, key=lambda n: (-states[n].free_gpus,
+                                         -states[n].free_cpus, n))
 
     def begin_pass(self, engine: "SchedEngine") -> None:
         pass
@@ -229,11 +262,69 @@ class LocalityAware(SchedulingPolicy):
         return None
 
 
+class NodePackTopology(SchedulingPolicy):
+    """Topology-aware packing for ``node_level`` pools (``nodepack``).
+
+    Ordering is ``gpu_bestfit``'s (GPU sets first, widest first) so
+    multi-GPU tasks claim contiguous blocks before narrow fillers scatter.
+    Placement packs: a task lands in the *tightest* NVLink group that
+    fits it (single-node, single-group when possible), and candidate
+    pools are scored by fragmentation — prefer a single-group fit with
+    the least leftover, then the pool whose largest contiguous free GPU
+    block is smallest (placing there preserves the other pools' big
+    blocks for wider tasks).  On aggregate pools it degenerates to
+    ``gpu_bestfit`` placement."""
+
+    name = "nodepack"
+
+    def order_sets(self, sets: Sequence[SetInfo]) -> list[str]:
+        return [s.name for s in
+                sorted(sets, key=lambda s: (s.gpus == 0, -s.gpus,
+                                            s.rank, s.topo))]
+
+    @staticmethod
+    def _node_key(ts: TaskSet, states: "Sequence[NodeState]", n: int,
+                  engine: "SchedEngine", k: int) -> tuple:
+        ns = states[n]
+        need_c, need_g = engine._needs(k, ts)
+        if need_g:
+            gi = ns.best_group(need_g)
+            if gi is not None:  # single NVLink group: leftover = shrink
+                return (0, ns.group_free[gi] - need_g, ns.free_gpus, n)
+            return (1, ns.free_gpus - need_g, ns.free_gpus, n)
+        return (0, ns.free_cpus - need_c, 0, n)
+
+    def choose_node(self, ts: TaskSet, pool_idx: int,
+                    nodes: Sequence[int],
+                    engine: "SchedEngine") -> int:
+        states = engine.node_states[pool_idx]
+        return min(nodes, key=lambda n: self._node_key(ts, states, n,
+                                                       engine, pool_idx))
+
+    def choose_pool(self, ts: TaskSet, candidates: Sequence[int],
+                    engine: "SchedEngine") -> int:
+        def key(k: int) -> tuple:
+            states = engine.node_states[k]
+            if states is None:  # aggregate pool: gpu_bestfit placement
+                if ts.gpus_per_task > 0:
+                    return (2, engine.free_gpus[k] - ts.gpus_per_task,
+                            engine.free_cpus[k], k)
+                # CPU-only: prefer GPU-less pools, then tightest CPU fit
+                return (2, engine.pools[k].total.gpus > 0,
+                        engine.free_cpus[k] - ts.cpus_per_task, k)
+            nodes = engine.fitting_nodes(k, ts)
+            best = min(self._node_key(ts, states, n, engine, k)
+                       for n in nodes)
+            return (best[0], best[1], engine.largest_free_block(k), k)
+        return min(candidates, key=key)
+
+
 SCHEDULING_POLICIES: dict[str, type[SchedulingPolicy]] = {
     FifoBackfill.name: FifoBackfill,
     LargestTxFirst.name: LargestTxFirst,
     GpuAwareBestFit.name: GpuAwareBestFit,
     LocalityAware.name: LocalityAware,
+    NodePackTopology.name: NodePackTopology,
 }
 
 
@@ -277,6 +368,18 @@ class SchedEngine:
         self.pools: tuple[PoolSpec, ...] = self.alloc.pools
         self.free_cpus = [p.total.cpus for p in self.pools]
         self.free_gpus = [p.total.gpus for p in self.pools]
+        #: per-node occupancy for ``node_level`` pools (None = aggregate
+        #: accounting); the aggregate counters above stay a derived view
+        self.node_states: list["list[NodeState] | None"] = [
+            node_states(p) if p.node_level else None for p in self.pools]
+        self._node_level_any = any(p.node_level for p in self.pools)
+        #: (set, index) -> (node, per-group GPU takes) of the primary
+        #: attempt on a node-level pool (absent on aggregate pools)
+        self._node_alloc: dict[tuple[str, int],
+                               tuple[int, list[tuple[int, int]]]] = {}
+        #: same, for the racing speculative duplicate's slot
+        self._spec_node_alloc: dict[tuple[str, int],
+                                    tuple[int, list[tuple[int, int]]]] = {}
         self.policy = get_scheduling_policy(policy)
         self.task_level = task_level
 
@@ -299,8 +402,10 @@ class SchedEngine:
         self._spec_pool: dict[tuple[str, int], int] = {}
         self._speculations_of: dict[tuple[str, int], int] = {}
         self.speculations = 0
-        #: online makespan re-prediction (core/predictor.py)
-        self.predictor = (MakespanPredictor(g, self.alloc)
+        #: online makespan re-prediction (core/predictor.py); node-level
+        #: occupancy unlocks the cross-set GPU contention term
+        self.predictor = (MakespanPredictor(g, self.alloc,
+                                            contention=self._node_level_any)
                           if feedback is not None else None)
         self.predictions: list[MakespanPrediction] = []
 
@@ -373,6 +478,90 @@ class SchedEngine:
     def pool_name(self, pool_idx: int) -> str:
         return self.pools[pool_idx].name
 
+    # -- node-level topology ------------------------------------------------
+    def fitting_nodes(self, k: int, ts: TaskSet) -> list[int]:
+        """Nodes of pool ``k`` that can start one task of ``ts`` now
+        (empty for aggregate pools)."""
+        states = self.node_states[k]
+        if states is None:
+            return []
+        need_c, need_g = self._needs(k, ts)
+        return [n for n, ns in enumerate(states) if ns.fits(need_c, need_g)]
+
+    def largest_free_block(self, k: int) -> int:
+        """Largest contiguous free GPU block of pool ``k`` — for a
+        node-level pool the widest free NVLink group across its nodes
+        (``nodepack``'s fragmentation score); for an aggregate pool the
+        free GPU count (one conceptual block)."""
+        states = self.node_states[k]
+        if states is None:
+            return self.free_gpus[k]
+        return max((ns.largest_block() for ns in states), default=0)
+
+    def node_placement(self, name: str, i: int) -> int:
+        """Node index the task's primary attempt occupies (-1 on
+        aggregate pools or before launch)."""
+        alloc = self._node_alloc.get((name, i))
+        return alloc[0] if alloc is not None else -1
+
+    def spec_node(self, name: str, i: int) -> int:
+        """Node index of the racing speculative duplicate (-1 if none or
+        on an aggregate pool)."""
+        alloc = self._spec_node_alloc.get((name, i))
+        return alloc[0] if alloc is not None else -1
+
+    def node_occupancy(self) -> "dict[str, list[dict] | None]":
+        """Live per-node occupancy per pool (None = aggregate pool):
+        ``{pool: [{node, free_cpus, free_gpus, group_free}, ...]}``."""
+        out: "dict[str, list[dict] | None]" = {}
+        for k, p in enumerate(self.pools):
+            states = self.node_states[k]
+            if states is None:
+                out[p.name] = None
+            else:
+                out[p.name] = [dict(node=n, free_cpus=ns.free_cpus,
+                                    free_gpus=ns.free_gpus,
+                                    group_free=list(ns.group_free))
+                               for n, ns in enumerate(states)]
+        return out
+
+    def _choose_node(self, k: int, ts: TaskSet,
+                     exclude: int = -1) -> int:
+        """Pick the node of pool ``k`` the task lands on (policy hook;
+        ``exclude`` bars the straggler's own node for migrations)."""
+        nodes = self.fitting_nodes(k, ts)
+        if exclude >= 0:
+            nodes = [n for n in nodes if n != exclude]
+        return self.policy.choose_node(ts, k, nodes, self)
+
+    def _acquire(self, k: int, ts: TaskSet,
+                 node: int = -1) -> "tuple[int, list[tuple[int, int]]] | None":
+        """Take one task's resources on pool ``k`` (node-granular when the
+        pool is node-level; ``node`` pins the choice).  Returns the node
+        allocation to store for release, or ``None`` for aggregate."""
+        need_c, need_g = self._needs(k, ts)
+        self.free_cpus[k] -= need_c
+        self.free_gpus[k] -= need_g
+        self.running_per_pool[k] += 1
+        states = self.node_states[k]
+        if states is None:
+            return None
+        if node < 0 or not states[node].fits(need_c, need_g):
+            node = self._choose_node(k, ts)
+        takes = states[node].acquire(need_c, need_g)
+        return node, takes
+
+    def _release(self, k: int, ts: TaskSet,
+                 node_alloc: "tuple[int, list[tuple[int, int]]] | None",
+                 ) -> None:
+        need_c, need_g = self._needs(k, ts)
+        self.free_cpus[k] += need_c
+        self.free_gpus[k] += need_g
+        self.running_per_pool[k] -= 1
+        if node_alloc is not None:
+            node, takes = node_alloc
+            self.node_states[k][node].release(need_c, takes)
+
     # -- runtime feedback ---------------------------------------------------
     def tx_estimate(self, name: str, pool: "int | None" = None) -> float:
         """The mean TX a policy should reason with: the observed EWMA once
@@ -403,6 +592,7 @@ class SchedEngine:
         if self.estimator is None:
             return
         fb = self.feedback
+        raw = duration  # pre-winsorize, for online tail calibration
         pname = (self.pools[pool].name
                  if pool is not None and fb is not None and fb.per_pool
                  else None)
@@ -419,7 +609,7 @@ class SchedEngine:
             elif self.estimator.count(name) >= fb.min_samples:
                 duration = min(duration,
                                fb.winsorize_ratio * self.estimator.mean(name))
-        self.estimator.observe(name, duration, pool=pname)
+        self.estimator.observe(name, duration, pool=pname, raw=raw)
         # only TX-ordering policies need the priority rebuilt; fifo/
         # gpu_bestfit/locality orderings cannot change with estimates
         if self.policy.uses_tx:
@@ -452,9 +642,13 @@ class SchedEngine:
 
     # -- straggler mitigation: migration, speculation, arbitration ----------
     def _migration_candidate(self, name: str,
-                             i: int) -> "tuple[int, float] | None":
-        """``(dst, cost)`` migration would use, or ``None`` — pure (no
-        state change), so the arbiter can price it before committing."""
+                             i: int) -> "tuple[int, float, int] | None":
+        """``(dst, cost, node)`` migration would use, or ``None`` — pure
+        (no state change), so the arbiter can price it before committing.
+        On node-level pools the straggler may also migrate *within* its
+        own pool onto a different node (priced at the topology's
+        intra-pool distance); the landing node is chosen here so the cost
+        the arbiter sees matches the placement that gets applied."""
         fb = self.feedback
         if fb is None or not fb.migrate:
             return None
@@ -464,28 +658,43 @@ class SchedEngine:
                 >= fb.max_migrations_per_task):
             return None
         src = self.pool_of[(name, i)]
+        src_node = self.node_placement(name, i)
         ts = self.g.node(name)
-        cands = [k for k in self._candidates(ts) if k != src]
-        if not cands:
-            return None  # no eligible target pool with free capacity
-        dst = min(cands, key=lambda k: (self.alloc.transfer(src, k), k))
-        cost = fb.migration_base_cost + self.alloc.transfer(src, dst)
+        best: "tuple[float, int, int] | None" = None
+        for k in self._candidates(ts):
+            if k == src:
+                # same-pool migration: only onto a DIFFERENT node of a
+                # node-level pool (moving within one node is a no-op)
+                if self.node_states[k] is None:
+                    continue
+                nodes = [n for n in self.fitting_nodes(k, ts)
+                         if n != src_node]
+                if not nodes:
+                    continue
+                node = self.policy.choose_node(ts, k, nodes, self)
+                cost = self.alloc.transfer(src, k, src_node, node)
+            else:
+                node = (self._choose_node(k, ts)
+                        if self.node_states[k] is not None else -1)
+                cost = self.alloc.transfer(src, k)
+            if best is None or (cost, k) < (best[0], best[1]):
+                best = (cost, k, node)
+        if best is None:
+            return None  # no eligible target with free capacity
+        cost, dst, node = best
+        cost += fb.migration_base_cost
         if cost > fb.max_cost_ratio * self.tx_estimate(name):
             return None  # moving the data costs more than the rerun saves
-        return dst, cost
+        return dst, cost, node
 
-    def _apply_migration(self, name: str, i: int, dst: int,
-                         cost: float) -> tuple[int, float]:
+    def _apply_migration(self, name: str, i: int, dst: int, cost: float,
+                         node: int = -1) -> tuple[int, float]:
         src = self.pool_of[(name, i)]
         ts = self.g.node(name)
-        need_c, need_g = self._needs(src, ts)
-        self.free_cpus[src] += need_c
-        self.free_gpus[src] += need_g
-        self.running_per_pool[src] -= 1
-        need_c, need_g = self._needs(dst, ts)
-        self.free_cpus[dst] -= need_c
-        self.free_gpus[dst] -= need_g
-        self.running_per_pool[dst] += 1
+        self._release(src, ts, self._node_alloc.pop((name, i), None))
+        node_alloc = self._acquire(dst, ts, node)
+        if node_alloc is not None:
+            self._node_alloc[(name, i)] = node_alloc
         self.pool_of[(name, i)] = dst
         self._migrations_of[(name, i)] = (
             self._migrations_of.get((name, i), 0) + 1)
@@ -507,12 +716,12 @@ class SchedEngine:
         return self._apply_migration(name, i, *cand)
 
     def _speculation_candidate(self, name: str,
-                               i: int) -> "tuple[int, float] | None":
-        """``(dst, cost)`` a speculative duplicate would use, or ``None``
-        — pure (no state change).  Unlike migration the source pool's slot
-        stays held (the original keeps running), so a *free* slot must
-        exist; the source pool itself is eligible (a same-pool duplicate
-        moves no data)."""
+                               i: int) -> "tuple[int, float, int] | None":
+        """``(dst, cost, node)`` a speculative duplicate would use, or
+        ``None`` — pure (no state change).  Unlike migration the source
+        pool's slot stays held (the original keeps running), so a *free*
+        slot must exist; the source pool itself is eligible (a same-pool
+        duplicate moves data over the cheap intra-pool topology hops)."""
         fb = self.feedback
         if fb is None or not fb.speculate:
             return None
@@ -524,25 +733,33 @@ class SchedEngine:
                 >= fb.max_speculations_per_task):
             return None
         src = self.pool_of[(name, i)]
+        src_node = self.node_placement(name, i)
         ts = self.g.node(name)
-        cands = self._candidates(ts)
-        if not cands:
+        best: "tuple[float, int, int] | None" = None
+        for k in self._candidates(ts):
+            if self.node_states[k] is not None:
+                node = self._choose_node(k, ts)
+                cost = (self.alloc.transfer(src, k, src_node, node)
+                        if k == src else self.alloc.transfer(src, k))
+            else:
+                node, cost = -1, self.alloc.transfer(src, k)
+            if best is None or (cost, k) < (best[0], best[1]):
+                best = (cost, k, node)
+        if best is None:
             return None  # no free duplicate slot anywhere
-        dst = min(cands, key=lambda k: (self.alloc.transfer(src, k), k))
-        cost = self.alloc.transfer(src, dst)
+        cost, dst, node = best
         if dst != src:
             cost += fb.migration_base_cost
         if cost > fb.max_cost_ratio * self.tx_estimate(name):
             return None
-        return dst, cost
+        return dst, cost, node
 
-    def _apply_speculation(self, name: str, i: int, dst: int,
-                           cost: float) -> tuple[int, float]:
+    def _apply_speculation(self, name: str, i: int, dst: int, cost: float,
+                           node: int = -1) -> tuple[int, float]:
         ts = self.g.node(name)
-        need_c, need_g = self._needs(dst, ts)
-        self.free_cpus[dst] -= need_c
-        self.free_gpus[dst] -= need_g
-        self.running_per_pool[dst] += 1
+        node_alloc = self._acquire(dst, ts, node)
+        if node_alloc is not None:
+            self._spec_node_alloc[(name, i)] = node_alloc
         self._spec_pool[(name, i)] = dst
         self._speculations_of[(name, i)] = (
             self._speculations_of.get((name, i), 0) + 1)
@@ -601,7 +818,7 @@ class SchedEngine:
         pred = self.predictor
         src = self.pool_of[(name, i)]
         base = pred.straggler_baseline(self.tx_estimate(name, pool=src),
-                                       elapsed, fb.straggler_tail_ratio)
+                                       elapsed, self.tail_ratio(name))
         # queued work turns the duplicate's slot into displaced work;
         # at the tail (nothing queued) speculation races for free
         pressure = any(self.ready[n] for n in self.order)
@@ -657,10 +874,23 @@ class SchedEngine:
             run_per_set[n] = run_per_set.get(n, 0) + 1
         pending = {n: max(0, self._set_remaining[n] - run_per_set.get(n, 0))
                    for n in self.order}
+        # live GPU holdings per set (speculative duplicates included):
+        # what the node-level occupancy accounting actually charged, so
+        # the contention term prices the GPUs concurrent sets truly hold
+        gpu_held: dict[str, int] = {}
+        for (n, i) in elapsed:
+            k = self.pool_of.get((n, i))
+            if k is not None:
+                gpu_held[n] = (gpu_held.get(n, 0)
+                               + self._needs(k, self.g.node(n))[1])
+        for (n, i), k in self._spec_pool.items():
+            if (n, i) not in self.finished:
+                gpu_held[n] = (gpu_held.get(n, 0)
+                               + self._needs(k, self.g.node(n))[1])
         p = self.predictor.predict(
             self.tx_estimate, now, pending, elapsed,
             done_fraction=self._n_done / max(1, self._n_total),
-            tx_std=self.tx_std_estimate)
+            tx_std=self.tx_std_estimate, gpu_held=gpu_held)
         self.predictions.append(p)
         return p
 
@@ -670,6 +900,23 @@ class SchedEngine:
         if self.estimator is None:
             return 0.0
         return self.estimator.std(name)
+
+    def tail_ratio(self, name: str) -> float:
+        """The arbiter's straggler-left-alone tail ratio: the static
+        ``FeedbackOptions.straggler_tail_ratio`` by default, or — with
+        ``calibrate_tail`` on — the set's *observed* tail quantile over
+        its running mean (un-winsorized durations), once enough
+        completions accumulated.  Never below ``straggler_min_ratio``
+        (a flagged straggler is by definition past that)."""
+        fb = self.feedback
+        if fb is None:
+            return 4.0
+        if fb.calibrate_tail and self.estimator is not None:
+            r = self.estimator.tail_ratio(name, q=fb.tail_quantile,
+                                          min_count=fb.min_samples)
+            if r is not None:
+                return max(r, fb.straggler_min_ratio)
+        return fb.straggler_tail_ratio
 
     def data_cost(self, name: str, k: int) -> float:
         """Mean data-movement cost of pulling set ``name``'s parent outputs
@@ -705,8 +952,14 @@ class SchedEngine:
             if p.only_kinds is not None and ts.kind not in p.only_kinds:
                 continue
             need_c, need_g = self._needs(k, ts)
-            if need_c <= self.free_cpus[k] and need_g <= self.free_gpus[k]:
-                out.append(k)
+            if need_c > self.free_cpus[k] or need_g > self.free_gpus[k]:
+                continue
+            # fragmentation honesty: a node-level pool must have ONE node
+            # that fits the task — aggregate co-fit alone is not placement
+            if self.node_states[k] is not None \
+                    and not self.fitting_nodes(k, ts):
+                continue
+            out.append(k)
         return out
 
     # -- scheduling ---------------------------------------------------------
@@ -740,10 +993,9 @@ class SchedEngine:
                 if k is None:  # policy defers: wait for the preferred pool
                     q.appendleft(i)
                     break
-                need_c, need_g = self._needs(k, ts)
-                self.free_cpus[k] -= need_c
-                self.free_gpus[k] -= need_g
-                self.running_per_pool[k] += 1
+                node_alloc = self._acquire(k, ts)
+                if node_alloc is not None:
+                    self._node_alloc[(name, i)] = node_alloc
                 self.launched.add((name, i))
                 self.pool_of[(name, i)] = k
                 out.append((name, i, k))
@@ -765,12 +1017,14 @@ class SchedEngine:
         self.free_gpus[k] += need_g
         if (name, i) in self.launched:
             self.running_per_pool[k] -= 1
+        node_alloc = self._node_alloc.pop((name, i), None)
+        if node_alloc is not None:
+            node, takes = node_alloc
+            self.node_states[k][node].release(need_c, takes)
         spec = self._spec_pool.pop((name, i), None)
         if spec is not None:  # the losing attempt's slot is freed with it
-            need_c, need_g = self._needs(spec, ts)
-            self.free_cpus[spec] += need_c
-            self.free_gpus[spec] += need_g
-            self.running_per_pool[spec] -= 1
+            self._release(spec, ts, self._spec_node_alloc.pop((name, i),
+                                                              None))
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1

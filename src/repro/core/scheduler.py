@@ -101,6 +101,14 @@ def locality_policy() -> ExecutionPolicy:
                            scheduling="locality")
 
 
+def nodepack_policy() -> ExecutionPolicy:
+    """Asynchronous mode with NVLink-aware node packing (for node-level
+    pools, ``PoolSpec.node_level``): multi-GPU tasks onto single
+    nodes/NVLink groups, candidates scored by fragmentation."""
+    return ExecutionPolicy("async", False, None, "nodepack",
+                           scheduling="nodepack")
+
+
 def adaptive_observed_policy(
         feedback: FeedbackOptions = FeedbackOptions()) -> ExecutionPolicy:
     """Task-level asynchronicity driven by OBSERVED runtime TX instead of

@@ -13,7 +13,10 @@ Scheduling decisions (ready-queue order, pool placement, dependency and
 resource bookkeeping) live in :class:`~repro.core.sched_engine.SchedEngine`,
 which the real executor shares — this module only advances the simulated
 clock.  Select a policy with ``scheduling="fifo" | "lpt" | "gpu_bestfit" |
-"locality"``; pass ``feedback=FeedbackOptions(...)`` to drive the policy
+"locality" | "nodepack"``; with node-level pools
+(``PoolSpec.node_level``) every ``TaskRecord`` carries the concrete node
+the winning attempt ran on.  Pass ``feedback=FeedbackOptions(...)`` to
+drive the policy
 by *observed* TX (online EWMA estimates, per-pool splits), to mitigate
 stragglers (arbitrated preemption + migration vs speculative duplicates,
 see ``core/estimator.py`` / ``SchedEngine.arbitrate``), and to re-predict
@@ -72,6 +75,9 @@ class TaskRecord:
     #: True when the task was preempted + migrated off a straggling pool
     #: (``pool`` is the pool it finally completed on)
     migrated: bool = False
+    #: node index within the pool the winning attempt ran on (-1 on
+    #: aggregate pools — see ``PoolSpec.node_level``)
+    node: int = -1
 
     @property
     def duration(self) -> float:
@@ -241,11 +247,13 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
             # loser — engine.complete frees both slots, the record and the
             # estimate belong to the duplicate's pool and work span
             attempt_start, k = spec
+            node = engine.spec_node(name, i)
             running.pop((name, i), None)
             engine.complete(name, i)
             won_by_dup = True
         else:
             attempt_start = running.pop((name, i))
+            node = engine.node_placement(name, i)
             k = engine.complete(name, i)
             won_by_dup = False
         start = first_start.pop((name, i), attempt_start)
@@ -253,7 +261,8 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
                                   ts.cpus_per_task, ts.gpus_per_task,
                                   duplicate=won_by_dup,
                                   pool=engine.pool_name(k),
-                                  migrated=(name, i) in gen))
+                                  migrated=(name, i) in gen,
+                                  node=node))
         set_durations.setdefault(name, []).append(now - attempt_start)
         engine.observe(name, now - attempt_start, pool=k)
 

@@ -1,0 +1,461 @@
+"""Node-level topology: NVLink group structure, per-node occupancy,
+fragmentation-honest placement, the ``nodepack`` packing policy,
+topology-derived transfer distances, node-granular straggler
+migration/speculation, sim-vs-executor node-placement equivalence, and
+the satellites riding along (multi-pool DOA_res, online tail
+calibration)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (DAG, Allocation, FeedbackOptions, NodeSpec, NodeState,
+                        PoolSpec, RealExecutor, SchedEngine, SimOptions,
+                        TaskSet, TxEstimator, cdg_dag, doa_res, hybrid_pool,
+                        node_states, simulate, summit_pool, wla)
+
+ALL_POLICIES = ("fifo", "lpt", "gpu_bestfit", "locality", "nodepack")
+
+
+def _no_noise():
+    return SimOptions(seed=0, sample_tx=False, entk_overhead=0.0,
+                      async_overhead=0.0, launch_latency=0.0)
+
+
+# ---------------------------------------------------------------------------
+# NodeSpec / NodeState primitives
+# ---------------------------------------------------------------------------
+
+def test_nodespec_nvlink_validation():
+    assert NodeSpec(48, 6, nvlink_groups=2).gpus_per_group == 3
+    assert NodeSpec(48, 0).gpus_per_group == 0
+    with pytest.raises(ValueError, match="divide evenly"):
+        NodeSpec(48, 6, nvlink_groups=4)
+    with pytest.raises(ValueError, match="nvlink_groups"):
+        NodeSpec(48, 6, nvlink_groups=0)
+
+
+def test_nodestate_single_group_acquire_release():
+    ns = NodeState(NodeSpec(8, 6, nvlink_groups=2), cpus=8)
+    takes = ns.acquire(2, 3)          # exactly one full NVLink group
+    assert takes == [(0, 3)]
+    assert ns.free_gpus == 3 and ns.group_free == [0, 3]
+    assert ns.largest_block() == 3
+    # tightest-fit: a 2-GPU ask prefers... only group 1 fits now
+    assert ns.best_group(2) == 1
+    ns.release(2, takes)
+    assert ns.free_gpus == 6 and ns.group_free == [3, 3]
+
+
+def test_nodestate_spans_groups_when_no_single_group_fits():
+    ns = NodeState(NodeSpec(8, 6, nvlink_groups=2), cpus=8)
+    ns.acquire(0, 2)                  # group 0 down to 1 free
+    takes = ns.acquire(0, 4)          # must span: no group has 4 free
+    assert sorted(takes) == [(0, 1), (1, 3)]
+    assert ns.free_gpus == 0
+    with pytest.raises(ValueError):
+        ns.acquire(0, 1)
+
+
+def test_node_states_spread_reserved_cpus():
+    pool = PoolSpec("p", 4, NodeSpec(cpus=48, gpus=6), reserved_cpus=6)
+    caps = [ns.cpus for ns in node_states(pool)]
+    assert sorted(caps) == [46, 46, 47, 47]
+    assert sum(caps) == pool.total.cpus
+
+
+# ---------------------------------------------------------------------------
+# fragmentation honesty: node-granular acceptance + candidacy
+# ---------------------------------------------------------------------------
+
+def test_task_wider_than_node_rejected_at_construction():
+    g = DAG()
+    g.add(TaskSet("wide", 1, 1, 8, tx_mean=1.0))
+    pool = PoolSpec("p", 4, NodeSpec(cpus=8, gpus=6), node_level=True)
+    assert pool.total.gpus == 24  # aggregate would happily "fit" it
+    with pytest.raises(ValueError, match="fits no pool"):
+        SchedEngine(g, pool)
+    # the same task on the aggregate view of the same hardware is accepted
+    SchedEngine(g, PoolSpec("p", 4, NodeSpec(cpus=8, gpus=6)))
+
+
+def test_aggregate_fit_without_node_fit_waits():
+    """Two 1-GPU tasks spread over two 2-GPU nodes leave 2 GPUs free in
+    aggregate, but no node can host a 2-GPU task: the node-level pool
+    honestly defers it, the aggregate pool dishonestly starts it."""
+    def build():
+        g = DAG()
+        g.add(TaskSet("narrow", 2, 1, 1, tx_mean=10.0, tx_sigma=0.0))
+        g.add(TaskSet("wide", 1, 1, 2, tx_mean=10.0, tx_sigma=0.0))
+        return g
+
+    honest = SchedEngine(build(), PoolSpec("p", 2, NodeSpec(4, 2),
+                                           node_level=True))
+    started = honest.startable()
+    assert [(n, i) for n, i, _k in started] == [("narrow", 0), ("narrow", 1)]
+    # default node choice spreads: one narrow task per node
+    assert {honest.node_placement("narrow", 0),
+            honest.node_placement("narrow", 1)} == {0, 1}
+    assert honest.free_gpus[0] == 2 and not honest.startable()
+    assert list(honest.ready["wide"]) == [0]
+    # once a narrow task completes, a whole node frees up and wide starts
+    honest.complete("narrow", 0)
+    assert [(n, i) for n, i, _k in honest.startable()] == [("wide", 0)]
+
+    naive = SchedEngine(build(), PoolSpec("p", 2, NodeSpec(4, 2)))
+    assert len(naive.startable()) == 3  # aggregate co-fit: all start
+
+
+def test_per_node_capacity_never_exceeded_all_policies():
+    """Reconstruct per-(pool, node) concurrent GPU usage from the records:
+    no node may ever exceed its own GPUs, under every policy."""
+    g = DAG()
+    g.add(TaskSet("w2", 8, 1, 2, tx_mean=7.0, tx_sigma=0.0))
+    g.add(TaskSet("w1", 8, 1, 1, tx_mean=3.0, tx_sigma=0.0))
+    g.add(TaskSet("w3", 4, 1, 3, tx_mean=5.0, tx_sigma=0.0, kind="train"))
+    alloc = Allocation("two", (
+        PoolSpec("a", 2, NodeSpec(cpus=16, gpus=4), node_level=True),
+        PoolSpec("b", 2, NodeSpec(cpus=16, gpus=6,
+                                  nvlink_groups=2), node_level=True),
+    ))
+    caps = {"a": 4, "b": 6}
+    for policy in ALL_POLICIES:
+        res = simulate(g, alloc, "async", options=_no_noise(),
+                       scheduling=policy)
+        assert res.tasks_total == 20
+        per_node: dict = {}
+        for r in res.records:
+            assert r.node >= 0, (policy, r)
+            per_node.setdefault((r.pool, r.node), []).append(r)
+        for (pool_name, _node), rs in per_node.items():
+            events = []
+            for r in rs:
+                events.append((r.start, r.gpus))
+                events.append((r.end, -r.gpus))
+            events.sort()
+            in_use = 0
+            for _, d in events:
+                in_use += d
+                assert in_use <= caps[pool_name], (policy, pool_name)
+
+
+# ---------------------------------------------------------------------------
+# nodepack: single-node / single-NVLink-group packing
+# ---------------------------------------------------------------------------
+
+def test_nodepack_keeps_multi_gpu_task_in_one_nvlink_group():
+    g = DAG()
+    g.add(TaskSet("t", 4, 1, 3, tx_mean=5.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 2, NodeSpec(cpus=16, gpus=6, nvlink_groups=2),
+                    node_level=True)
+    eng = SchedEngine(g, pool, policy="nodepack")
+    started = eng.startable()
+    assert len(started) == 4
+    for name, i, _k in started:
+        node, takes = eng._node_alloc[(name, i)]
+        assert len(takes) == 1 and takes[0][1] == 3, (i, node, takes)
+
+
+def test_nodepack_packs_narrow_tasks_default_spreads():
+    """One 1-GPU task is already running on node 0.  The next 1-GPU task:
+    nodepack packs it next to the first (tightest group), the default
+    spread policy sends it to the empty node."""
+    def build():
+        g = DAG()
+        g.add(TaskSet("s", 2, 1, 1, tx_mean=5.0, tx_sigma=0.0))
+        return g
+    pool = PoolSpec("p", 2, NodeSpec(cpus=8, gpus=2), node_level=True)
+
+    packed = SchedEngine(build(), pool, policy="nodepack")
+    nodes = [packed.node_placement(n, i) for n, i, _ in packed.startable()]
+    assert nodes == [0, 0]
+
+    spread = SchedEngine(build(), pool, policy="fifo")
+    nodes = [spread.node_placement(n, i) for n, i, _ in spread.startable()]
+    assert sorted(nodes) == [0, 1]
+
+
+def test_nodepack_preserves_contiguous_blocks_for_wide_tasks():
+    """Fillers first, then a wide task: packing keeps a whole node free so
+    the wide task starts immediately; spreading fragments and the wide
+    task must wait for a completion."""
+    def build():
+        g = DAG()
+        g.add(TaskSet("fill", 2, 1, 1, tx_mean=50.0, tx_sigma=0.0))
+        g.add(TaskSet("wide", 1, 1, 4, tx_mean=50.0, tx_sigma=0.0))
+        return g
+    pool = PoolSpec("p", 2, NodeSpec(cpus=8, gpus=4), node_level=True)
+    res_pack = simulate(build(), pool, "async", options=_no_noise(),
+                        scheduling="nodepack")
+    res_fifo = simulate(build(), pool, "async", options=_no_noise(),
+                        scheduling="fifo")
+    assert res_pack.makespan < res_fifo.makespan
+    start_wide = {r.set_name: r.start for r in res_pack.records}["wide"]
+    assert start_wide == 0.0
+
+
+def test_largest_free_block_and_occupancy():
+    g = DAG()
+    g.add(TaskSet("t", 1, 1, 4, tx_mean=5.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 2, NodeSpec(cpus=8, gpus=6, nvlink_groups=2),
+                    node_level=True)
+    eng = SchedEngine(g, pool, policy="nodepack")
+    assert eng.largest_free_block(0) == 3
+    eng.startable()  # the 4-GPU task spans both groups of one node
+    assert eng.largest_free_block(0) == 3
+    occ = eng.node_occupancy()["p"]
+    assert occ is not None and len(occ) == 2
+    used = [o for o in occ if o["free_gpus"] == 2]
+    assert len(used) == 1 and sorted(used[0]["group_free"]) == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# topology-derived transfer distances
+# ---------------------------------------------------------------------------
+
+def test_transfer_distance_ordering():
+    alloc = Allocation("t", (
+        PoolSpec("a", 2, NodeSpec(8, 2), node_level=True),
+        PoolSpec("b", 2, NodeSpec(8, 2), node_level=True),
+    ), transfer_cost=((0.0, 9.0), (9.0, 0.0)),
+        same_group_cost=0.5, same_node_cost=1.0, intra_pool_cost=4.0)
+    same_group = alloc.transfer(0, 0, 0, 0, 0, 0)
+    same_node = alloc.transfer(0, 0, 0, 0, 0, 1)
+    intra_pool = alloc.transfer(0, 0, 0, 1)
+    cross_pool = alloc.transfer(0, 1)
+    assert same_group <= same_node <= intra_pool < cross_pool
+    assert (same_group, same_node, intra_pool, cross_pool) == \
+        (0.5, 1.0, 4.0, 9.0)
+    # aggregate (node-less) calls keep the legacy semantics
+    assert alloc.transfer(0, 0) == 0.0
+    with pytest.raises(ValueError, match="topology costs"):
+        Allocation("bad", (PoolSpec("a", 1, NodeSpec(8, 2)),),
+                   same_node_cost=1.0, intra_pool_cost=0.5)
+
+
+# ---------------------------------------------------------------------------
+# migration / speculation land on concrete nodes
+# ---------------------------------------------------------------------------
+
+def _fed_engine(alloc, num_tasks=1, **fb_kw):
+    g = DAG()
+    g.add(TaskSet("s", num_tasks, 2, 1, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, feedback=FeedbackOptions(min_samples=1,
+                                                         **fb_kw))
+    for _ in range(3):
+        eng.observe("s", 10.0)
+    return eng
+
+
+def test_migration_lands_on_concrete_node_cross_pool():
+    alloc = Allocation("two", (
+        PoolSpec("a", 1, NodeSpec(8, 2), node_level=True),
+        PoolSpec("b", 2, NodeSpec(8, 2), node_level=True),
+    ), transfer_cost=((0.0, 1.0), (1.0, 0.0)))
+    eng = _fed_engine(alloc)
+    (name, i, src), = eng.startable()
+    assert src == 0 and eng.node_placement(name, i) == 0
+    out = eng.try_migrate(name, i)
+    assert out is not None
+    dst, cost = out
+    assert dst == 1 and cost == 1.0
+    assert eng.node_placement(name, i) in (0, 1)
+    # source node's GPU is back, target node's is taken
+    assert eng.node_states[0][0].free_gpus == 2
+    landed = eng.node_placement(name, i)
+    assert eng.node_states[1][landed].free_gpus == 1
+    eng.complete(name, i)
+    assert all(ns.free_gpus == 2 for ns in eng.node_states[1])
+
+
+def test_same_pool_cross_node_migration_charges_intra_pool_cost():
+    """Node-level pools unlock migration WITHIN a pool: the straggler
+    moves to a different node, charged the topology's intra-pool hop."""
+    alloc = Allocation("one", (
+        PoolSpec("a", 2, NodeSpec(8, 2), node_level=True),),
+        intra_pool_cost=2.0, same_node_cost=1.0, same_group_cost=0.0)
+    eng = _fed_engine(alloc)
+    (name, i, src), = eng.startable()
+    src_node = eng.node_placement(name, i)
+    out = eng.try_migrate(name, i)
+    assert out is not None
+    dst, cost = out
+    assert dst == 0 and cost == 2.0
+    assert eng.node_placement(name, i) != src_node
+    # aggregate single pool can never migrate (no second pool, no nodes)
+    agg = _fed_engine(Allocation("agg", (PoolSpec("a", 2, NodeSpec(8, 2)),)))
+    (n2, i2, _), = agg.startable()
+    assert agg.try_migrate(n2, i2) is None
+
+
+def test_speculation_lands_on_concrete_node_and_frees_it():
+    alloc = Allocation("one", (
+        PoolSpec("a", 2, NodeSpec(8, 2), node_level=True),),
+        intra_pool_cost=2.0, same_node_cost=1.0)
+    eng = _fed_engine(alloc, speculate=True, migrate=False)
+    (name, i, _src), = eng.startable()
+    src_node = eng.node_placement(name, i)
+    out = eng.try_speculate(name, i)
+    assert out is not None
+    dst, cost = out
+    assert dst == 0
+    dup_node = eng.spec_node(name, i)
+    assert dup_node >= 0
+    # spread default picks the other node -> intra-pool hop priced
+    assert dup_node != src_node and cost == 2.0
+    assert eng.node_states[0][dup_node].free_gpus == 1
+    eng.complete(name, i)  # winner frees BOTH node slots
+    assert all(ns.free_gpus == 2 for ns in eng.node_states[0])
+    assert eng.spec_node(name, i) == -1
+
+
+def test_node_level_migration_end_to_end_sim():
+    """Injected stragglers on a node-level split allocation: the full
+    simulate() loop migrates onto concrete nodes and every record carries
+    one."""
+    g = DAG()
+    g.add(TaskSet("s", 16, 2, 1, tx_mean=20.0, tx_sigma=0.5))
+    alloc = Allocation("two", (
+        PoolSpec("a", 2, NodeSpec(8, 4), node_level=True),
+        PoolSpec("b", 2, NodeSpec(8, 4), node_level=True),
+    ), transfer_cost=((0.0, 1.0), (1.0, 0.0)))
+    res = simulate(g, alloc, "async",
+                   options=SimOptions(seed=5, launch_latency=0.0,
+                                      straggler_prob=0.2,
+                                      straggler_factor=20.0),
+                   feedback=FeedbackOptions(straggler_k=2.0))
+    assert res.tasks_total == 16
+    assert res.migrations > 0
+    assert all(r.node >= 0 for r in res.records)
+
+
+# ---------------------------------------------------------------------------
+# sim-vs-executor equivalence at node granularity
+# ---------------------------------------------------------------------------
+
+def test_simulator_matches_executor_node_placements():
+    """Deterministic single-pass workload: both substrates must place
+    every task on the SAME (pool, node) through the shared engine."""
+    g = DAG()
+    g.add(TaskSet("s", 6, 1, 2, tx_mean=30.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 3, NodeSpec(cpus=8, gpus=4), node_level=True)
+    sim = simulate(g, pool, "async", options=_no_noise(),
+                   scheduling="nodepack")
+    real = RealExecutor(pool, tx_scale=1e-3).run(g, "async",
+                                                 scheduling="nodepack")
+    sim_nodes = {(r.set_name, r.index): (r.pool, r.node)
+                 for r in sim.records}
+    real_nodes = {(r.set_name, r.index): (r.pool, r.node)
+                  for r in real.records}
+    assert sim_nodes == real_nodes
+    assert sorted(n for _p, n in sim_nodes.values()) == [0, 0, 1, 1, 2, 2]
+
+
+def test_node_level_strict_summit_matches_aggregate_makespan():
+    """1-GPU workloads can never fragment a 6-GPU node, so the node-level
+    strict Summit schedule must reproduce the aggregate one exactly."""
+    opts = SimOptions(seed=3, tx_distribution="lognormal")
+    agg = simulate(cdg_dag("c-DG2"), summit_pool(), "async", options=opts)
+    node = simulate(cdg_dag("c-DG2"), summit_pool(node_level=True), "async",
+                    options=opts)
+    assert agg.makespan == node.makespan
+    assert {r.node for r in agg.records} == {-1}
+    assert all(r.node >= 0 for r in node.records)
+
+
+# ---------------------------------------------------------------------------
+# satellite: DOA_res / WLA over multi-pool Allocations
+# ---------------------------------------------------------------------------
+
+def test_doa_res_accepts_allocation():
+    dag = cdg_dag("c-DG2")
+    # hybrid GPU+CPU allocation computes instead of raising
+    alloc = hybrid_pool()
+    assert doa_res(dag, alloc) >= 1
+    assert wla(dag, alloc) == min(dag.doa_dep(), doa_res(dag, alloc))
+    # full_set strategy honours the combined aggregate footprint
+    assert doa_res(dag, alloc, strategy="full_set") >= 0
+
+
+def test_wla_allocation_matches_equivalent_single_pool():
+    """An Allocation wrapping one pool must give the single-pool answer."""
+    from repro.core import Allocation as Alloc, deepdrivemd_dag
+    dag = deepdrivemd_dag(3)
+    pool = summit_pool()
+    assert doa_res(dag, Alloc("w", (pool,))) == doa_res(dag, pool)
+    assert wla(dag, Alloc("w", (pool,))) == wla(dag, pool)
+
+
+# ---------------------------------------------------------------------------
+# satellite: online tail-ratio calibration
+# ---------------------------------------------------------------------------
+
+def test_estimator_tail_ratio_tracks_observed_quantile():
+    est = TxEstimator(alpha=0.5)
+    assert est.tail_ratio("s") is None
+    for _ in range(19):
+        est.observe("s", 10.0)
+    # winsorized-for-the-EWMA straggler, raw tail recorded unclipped
+    est.observe("s", 10.0, raw=80.0)
+    r = est.tail_ratio("s", q=0.95, min_count=3)
+    assert r is not None and r > 4.0  # the 80 s outlier IS the tail
+    # raw (un-winsorized) durations feed the quantile even when the EWMA
+    # input was clipped
+    est2 = TxEstimator(alpha=0.5)
+    for _ in range(19):
+        est2.observe("s", 10.0)
+    est2.observe("s", 10.0, raw=200.0)   # clipped to 10 for the EWMA
+    assert est2.tail_ratio("s") > 10.0
+    assert est2.mean("s") == pytest.approx(10.0)
+
+
+def test_engine_tail_ratio_calibration_flag():
+    g = DAG()
+    g.add(TaskSet("s", 4, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=16, gpus=0))
+    static = SchedEngine(g, pool, feedback=FeedbackOptions(min_samples=2))
+    calib = SchedEngine(g, pool,
+                        feedback=FeedbackOptions(min_samples=2,
+                                                 calibrate_tail=True))
+    for eng in (static, calib):
+        for d in (10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0,
+                  10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0,
+                  10.0, 90.0):
+            eng.observe("s", d)
+    # fixed default vs the observed ~9x tail
+    assert static.tail_ratio("s") == 4.0
+    assert calib.tail_ratio("s") == pytest.approx(90.0 / static.estimator
+                                                  .mean("s"), rel=0.3)
+    assert calib.tail_ratio("s") > 4.0
+
+
+def test_calibrated_tail_changes_arbiter_baseline():
+    """A workload whose observed tail is MILD (2x): the calibrated
+    arbiter declines a costly migration the 4x default would have taken,
+    because the expected remainder no longer justifies the move."""
+    g = DAG()
+    g.add(TaskSet("s", 1, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    alloc = Allocation("two", (
+        PoolSpec("p0", 1, NodeSpec(cpus=4, gpus=0)),
+        PoolSpec("p1", 1, NodeSpec(cpus=4, gpus=0)),
+    ), transfer_cost=((0.0, 8.0), (8.0, 0.0)))
+
+    def build(calibrate):
+        eng = SchedEngine(g, alloc, feedback=FeedbackOptions(
+            min_samples=1, speculate=True, max_speculations_per_task=0,
+            calibrate_tail=calibrate, max_cost_ratio=2.0))
+        for _ in range(10):
+            eng.observe("s", 10.0)
+        eng.observe("s", 20.0)   # observed tail ratio ~2x
+        return eng
+
+    default = build(False)
+    (n, i, _), = default.startable()
+    # 4x default: baseline at elapsed=12 is max(10, 40-12)=28 > cost 8 +
+    # rerun ~10 -> migrate
+    assert default.arbitrate(n, i, elapsed=12.0) is not None
+
+    calib = build(True)
+    (n2, i2, _), = calib.startable()
+    # calibrated ~2x: baseline max(10, ~22-12) ~= 10.9 < 8 + rerun -> no-op
+    assert calib.arbitrate(n2, i2, elapsed=12.0) is None

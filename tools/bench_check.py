@@ -21,7 +21,12 @@ Failure conditions:
      (``predictor.json``: final mean re-prediction error < 0.10);
    - the arbiter still beats both pure mitigation arms
      (``predictor.json``: arbitrated mean <= min(always-migrate,
-     always-speculate)).
+     always-speculate));
+   - node-level packing still wins the fragmented multi-GPU mix
+     (``topology.json``: nodepack mean <= gpu_bestfit mean), the
+     cross-set contention term still lowers strict-GPU c-DG2 mid-run
+     re-prediction error, and the aggregate (``node_level=False``)
+     resource model stays bit-identical to the committed baselines.
 
 Exits non-zero with a list of problems; wired into CI after the bench
 targets.  To accept an intentional change, regenerate the baseline:
@@ -97,6 +102,33 @@ def check_headlines(name, fresh, problems):
                     f"best pure arm ({pure})")
         except KeyError as e:
             problems.append(f"{name}: arbitrage arm missing: {e}")
+    if name == "topology.json":
+        arms = fresh.get("fragmented", {}).get("arms", {})
+        try:
+            np_m = arms["nodepack"]["makespan_mean"]
+            bf_m = arms["gpu_bestfit"]["makespan_mean"]
+            if np_m > bf_m * 1.0001:
+                problems.append(
+                    f"{name}: nodepack ({np_m}) lost the fragmented "
+                    f"multi-GPU mix to gpu_bestfit ({bf_m})")
+        except KeyError as e:
+            problems.append(f"{name}: fragmented arm missing: {e}")
+        cont = fresh.get("contention", {})
+        e_with, e_without = cont.get("err_with"), cont.get("err_without")
+        if e_with is None or e_without is None or e_with >= e_without:
+            problems.append(
+                f"{name}: contention term no longer lowers strict-GPU "
+                f"c-DG2 mid-run error (with={e_with!r}, "
+                f"without={e_without!r})")
+        ident = fresh.get("baseline_identity", {})
+        for which, r in ident.items():
+            if not r.get("identical"):
+                problems.append(
+                    f"{name}: {which}: node_level=False no longer "
+                    f"bit-identical to the committed baseline "
+                    f"({r.get('fresh')!r} vs {r.get('committed')!r})")
+        if not ident:
+            problems.append(f"{name}: baseline_identity section missing")
 
 
 def main() -> int:

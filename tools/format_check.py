@@ -1,0 +1,186 @@
+"""Formatting gate: `make format-check` (BLOCKING in CI).
+
+A pure-Python checker for the formatter rules this repo enforces, so the
+gate runs everywhere — including the dev container, where ruff is not
+installable (the historical `ruff format --check` step could only ever
+run on GitHub and stayed advisory for that reason).  The one-time
+cleanup pass this gate enforces landed together with it.
+
+Checked, per file under ``src/``, ``tools/``, ``benchmarks/`` and
+``tests/``:
+
+1. no tab characters in indentation;
+2. no trailing whitespace;
+3. LF line endings (no CRLF);
+4. file ends with exactly one newline;
+5. lines <= 88 columns (the ``[tool.ruff] line-length``), with a
+   ``# noqa: E501`` escape hatch for the rare unsplittable literal;
+6. double-quoted strings (tokenize-based; strings whose *content*
+   contains a double quote may stay single-quoted, matching the ruff
+   formatter's ``quote-style = "double"`` behaviour).
+
+Exits non-zero with a list of problems.  Run `python
+tools/format_check.py --fix` to apply the mechanical fixes (1-4, 6;
+long lines must be split by hand).
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import sys
+import tokenize
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DIRS = ("src", "tools", "benchmarks", "tests")
+MAX_COLS = 88
+
+
+def python_files() -> list[str]:
+    out = []
+    for d in DIRS:
+        for dirpath, _dirnames, filenames in os.walk(os.path.join(ROOT, d)):
+            if "__pycache__" in dirpath:
+                continue
+            out += [os.path.join(dirpath, f) for f in filenames
+                    if f.endswith(".py")]
+    return sorted(out)
+
+
+def requote(tok: str) -> "str | None":
+    """The double-quoted form of a single-quoted string token, or None
+    when it should be left alone (content contains a double quote)."""
+    body = tok
+    prefix = ""
+    while body and body[0] not in "'\"":
+        prefix += body[0]
+        body = body[1:]
+    if not body.startswith("'") or body.startswith("'''"):
+        return None
+    if "r" not in prefix.lower():
+        # only plain/escape-processed strings are safe to requote
+        inner = body[1:-1]
+        if '"' in inner or "\\" in inner:
+            return None
+        return f'{prefix}"{inner}"'
+    inner = body[1:-1]
+    if '"' in inner:
+        return None
+    return f'{prefix}"{inner}"'
+
+
+def single_quoted_strings(text: str) -> list[tuple[int, str]]:
+    """(line, token) for every offending single-quoted string literal."""
+    out = []
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in toks:
+            if tok.type == tokenize.STRING and requote(tok.string):
+                out.append((tok.start[0], tok.string))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        pass  # the test suite / lint job owns syntax validity
+    return out
+
+
+def apply_requotes(text: str) -> str:
+    """Rewrite offending single-quoted strings in place, by token
+    position — a global text replace would corrupt identical substrings
+    inside OTHER string literals."""
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return text
+    lines = text.split("\n")
+    repl = []
+    for tok in toks:
+        if tok.type == tokenize.STRING and tok.start[0] == tok.end[0]:
+            new = requote(tok.string)
+            if new:
+                repl.append((tok.start[0], tok.start[1], tok.end[1], new))
+    for row, c0, c1, new in sorted(repl, reverse=True):
+        line = lines[row - 1]
+        lines[row - 1] = line[:c0] + new + line[c1:]
+    return "\n".join(lines)
+
+
+def multiline_string_lines(text: str) -> set[int]:
+    """Line numbers lying INSIDE multi-line string literals: their
+    content is data, not code — formatters never reflow it, so the
+    column limit does not apply there."""
+    out: set[int] = set()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in toks:
+            if tok.type == tokenize.STRING and tok.end[0] > tok.start[0]:
+                out.update(range(tok.start[0], tok.end[0] + 1))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        pass
+    return out
+
+
+def check_file(path: str, fix: bool = False) -> list[str]:
+    rel = os.path.relpath(path, ROOT)
+    with open(path, newline="") as f:
+        raw = f.read()
+    problems = []
+    text = raw
+    if "\r" in text:
+        problems.append(f"{rel}: CRLF line endings")
+        text = text.replace("\r\n", "\n").replace("\r", "\n")
+    lines = text.split("\n")
+    in_string = multiline_string_lines(text)
+    for k, line in enumerate(lines, 1):
+        indent = line[:len(line) - len(line.lstrip())]
+        if "\t" in indent:
+            problems.append(f"{rel}:{k}: tab in indentation")
+        if line != line.rstrip() and k not in in_string:
+            problems.append(f"{rel}:{k}: trailing whitespace")
+        if (len(line) > MAX_COLS and k not in in_string
+                and "noqa: E501" not in line):
+            problems.append(f"{rel}:{k}: line is {len(line)} cols "
+                            f"(> {MAX_COLS})")
+    if text and not text.endswith("\n"):
+        problems.append(f"{rel}: missing trailing newline")
+    while text.endswith("\n\n"):
+        problems.append(f"{rel}: extra blank lines at EOF")
+        text = text[:-1]
+    for k, tok in single_quoted_strings(text):
+        problems.append(f"{rel}:{k}: single-quoted string {tok!r}")
+    if fix and problems:
+        out_lines = []
+        for k, line in enumerate(lines, 1):
+            if k in in_string:
+                out_lines.append(line)  # string contents are data
+                continue
+            stripped = line.lstrip()
+            indent = line[:len(line) - len(stripped)].expandtabs(4)
+            out_lines.append((indent + stripped).rstrip())
+        fixed = "\n".join(out_lines)
+        if fixed and not fixed.endswith("\n"):
+            fixed += "\n"
+        while fixed.endswith("\n\n"):
+            fixed = fixed[:-1]
+        fixed = apply_requotes(fixed)
+        with open(path, "w", newline="") as f:
+            f.write(fixed)
+    return problems
+
+
+def main() -> int:
+    fix = "--fix" in sys.argv[1:]
+    files = python_files()
+    problems: list[str] = []
+    for path in files:
+        problems += check_file(path, fix=fix)
+    if problems:
+        verb = "fixed where mechanical" if fix else "FAILED"
+        print(f"format-check: {verb}")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"format-check: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
