@@ -1,12 +1,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench-policies bench-feedback bench-predictor \
-        bench-topology bench-check bench-paper docs-check lint format-check
+.PHONY: test-fast test-all test-cov bench-policies bench-feedback \
+        bench-predictor bench-topology bench-admission bench-check \
+        bench-paper docs-check lint format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
+
+## tier-1 with line coverage (CI; needs pytest-cov installed)
+test-cov:
+	$(PY) -m pytest -q -m "not slow" --cov=repro --cov-report=term-missing \
+	    --cov-report=xml:coverage.xml
 
 ## the full suite, slow distributed subprocess tests included
 test-all:
@@ -30,6 +36,12 @@ bench-predictor:
 ## node_level=False bit-identity check against committed baselines
 bench-topology:
 	$(PY) benchmarks/bench_topology.py
+
+## multi-workflow tenancy: admission-controlled weighted-slowdown win on
+## the 3-workflow Summit campaign, the deferral arm, and one-workflow
+## campaign bit-identity against committed baselines
+bench-admission:
+	$(PY) benchmarks/bench_admission.py
 
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost

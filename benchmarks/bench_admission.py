@@ -1,0 +1,253 @@
+"""Multi-workflow tenancy + prediction-driven admission
+(``core/workflow.Campaign``, ``core/sched_engine.AdmissionOptions``).
+
+Three claims, all asserted (CI gates on them via
+``benchmarks/baseline/admission.json`` + ``make bench-check``):
+
+(a) **Tenancy headline** — on a 3-workflow Summit campaign (DeepDriveMD
+    at priority 2 next to c-DG1 / c-DG2 arriving 400 s / 800 s later),
+    admission-controlled scheduling (the ``priority`` policy + the
+    engine's admission controller) beats BOTH FIFO-admit-all and a
+    static 6/5/5-node partition on fairness-weighted slowdown, per seed
+    — while every workflow's slowdown against its dedicated single-
+    tenant async run stays bounded (the tenancy never destroys a
+    workflow's own async win).
+
+(b) **Deferral** — on a latency-sensitive inference stream (8 staggered
+    96-task 1-GPU waves) sharing the allocation with a wide, long
+    low-priority training job (16 x 6-GPU x 600 s, arriving mid-stream),
+    the admission controller defers the training set: its tasks would
+    pin devices across ~10 of the stream's scheduling rounds
+    (``hold_ratio``) with no predicted overlap win (``i_floor`` — both
+    are GPU-bound, so the marginal Eqn.-5 improvement collapses).  With
+    admission ON the stream preserves its single-tenant makespan
+    (slowdown ~1.0) and weighted slowdown beats admission OFF on every
+    seed; the conservation guard still completes the training job
+    (deferred != lost).
+
+(c) **Single-workflow bit-identity** — a one-workflow ``Campaign`` with
+    admission off reproduces the committed single-workflow baselines
+    exactly: ``predictor.json``'s convergence seed 3 (shared-GPU c-DG2 +
+    lognormal + arbitrated feedback) and ``topology.json``'s fragmented
+    nodepack seed 1 (node-level pool).  The tenancy plumbing may not
+    disturb a single tenant's schedule by a single event.
+
+Writes ``benchmarks/out/admission.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import (DAG, AdmissionOptions, Campaign, FeedbackOptions,
+                        SimOptions, TaskSet, cdg_dag, deepdrivemd_dag,
+                        simulate, summit_pool)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baseline")
+
+SEEDS = (1, 2, 3, 4, 5)
+LOGNORMAL = dict(tx_distribution="lognormal", lognormal_sigma=0.5)
+#: campaign (a): fairness weights and arrivals of the three workflows
+CAMPAIGN_WF = dict(
+    ddmd=dict(priority=2, arrival=0.0, weight=3.0, nodes=6),
+    cdg1=dict(priority=1, arrival=400.0, weight=1.0, nodes=5),
+    cdg2=dict(priority=0, arrival=800.0, weight=1.0, nodes=5),
+)
+#: per-workflow slowdown bound: tenancy must not destroy a workflow's
+#: dedicated-async performance
+SLOWDOWN_BOUND = 1.8
+
+
+def campaign_dags() -> dict[str, DAG]:
+    return {"ddmd": deepdrivemd_dag(3), "cdg1": cdg_dag("c-DG1"),
+            "cdg2": cdg_dag("c-DG2")}
+
+
+def references(seed: int) -> dict[str, float]:
+    """Dedicated single-tenant async makespans (slowdown denominators)."""
+    return {name: simulate(dag, summit_pool(), "async",
+                           options=SimOptions(seed=seed, **LOGNORMAL)
+                           ).makespan
+            for name, dag in campaign_dags().items()}
+
+
+def build_campaign(refs: dict[str, float]) -> Campaign:
+    c = Campaign(name="summit-3wf")
+    for name, dag in campaign_dags().items():
+        p = CAMPAIGN_WF[name]
+        c.add(name, dag, priority=p["priority"], arrival=p["arrival"],
+              weight=p["weight"], reference_makespan=refs[name])
+    return c
+
+
+def run_tenancy() -> dict:
+    per_seed = {}
+    for seed in SEEDS:
+        refs = references(seed)
+        opts = SimOptions(seed=seed, **LOGNORMAL)
+        fifo = simulate(build_campaign(refs), summit_pool(), "async",
+                        options=opts, scheduling="fifo")
+        adm = simulate(build_campaign(refs), summit_pool(), "async",
+                       options=opts, scheduling="priority",
+                       admission=AdmissionOptions())
+        # static partitioning: each workflow alone on its fixed node slice
+        num = den = 0.0
+        for name, dag in campaign_dags().items():
+            p = CAMPAIGN_WF[name]
+            m = simulate(dag, summit_pool(p["nodes"]), "async",
+                         options=opts).makespan
+            num += p["weight"] * (m / refs[name])
+            den += p["weight"]
+        per_seed[seed] = dict(
+            fifo_ws=round(fifo.weighted_slowdown(), 4),
+            admission_ws=round(adm.weighted_slowdown(), 4),
+            static_ws=round(num / den, 4),
+            admission_slowdowns={k: round(v.slowdown, 4)
+                                 for k, v in adm.workflows.items()},
+            makespan_admission=round(adm.makespan, 1))
+    mean = lambda key: round(  # noqa: E731 - tiny reduction helper
+        sum(r[key] for r in per_seed.values()) / len(per_seed), 4)
+    return dict(seeds=list(SEEDS), per_seed=per_seed,
+                fifo_ws_mean=mean("fifo_ws"),
+                admission_ws_mean=mean("admission_ws"),
+                static_ws_mean=mean("static_ws"))
+
+
+def serve_dag(n_waves: int = 8) -> DAG:
+    """A latency-sensitive inference stream: staggered 96-task 1-GPU
+    waves (each wave paces the next, as DDMD's simulations do)."""
+    g = DAG()
+    prev = None
+    for i in range(n_waves):
+        g.add(TaskSet(f"S{i}", 96, 4, 1, tx_mean=60.0, kind="inference"))
+        if prev is not None:
+            g.add_edge(prev, f"S{i}")
+        prev = f"S{i}"
+    return g
+
+
+def train_dag() -> DAG:
+    """The wide, long background job: 16 x 6-GPU x 600 s training tasks
+    (each pins a whole Summit node for ~10 serve waves once started)."""
+    g = DAG()
+    g.add(TaskSet("T", 16, 4, 6, tx_mean=600.0, kind="training"))
+    return g
+
+
+def run_deferral() -> dict:
+    per_seed = {}
+    for seed in SEEDS:
+        opts = SimOptions(seed=seed, **LOGNORMAL)
+        ref_serve = simulate(serve_dag(), summit_pool(), "async",
+                             options=opts).makespan
+        ref_train = simulate(train_dag(), summit_pool(), "async",
+                             options=opts).makespan
+
+        def build() -> Campaign:
+            c = Campaign(name="serve-train")
+            c.add("serve", serve_dag(), priority=1, weight=4.0,
+                  reference_makespan=ref_serve)
+            c.add("train", train_dag(), priority=0, arrival=100.0,
+                  weight=0.25, reference_makespan=ref_train)
+            return c
+
+        off = simulate(build(), summit_pool(), "async", options=opts,
+                       scheduling="priority")
+        on = simulate(build(), summit_pool(), "async", options=opts,
+                      scheduling="priority", admission=AdmissionOptions())
+        total = sum(ts.num_tasks for d in (serve_dag(), train_dag())
+                    for ts in d.nodes.values())
+        assert on.tasks_total == off.tasks_total == total  # deferred != lost
+        per_seed[seed] = dict(
+            off_ws=round(off.weighted_slowdown(), 4),
+            on_ws=round(on.weighted_slowdown(), 4),
+            deferrals=on.admission_deferrals,
+            serve_slowdown_off=round(off.workflows["serve"].slowdown, 4),
+            serve_slowdown_on=round(on.workflows["serve"].slowdown, 4))
+    return dict(seeds=list(SEEDS), per_seed=per_seed)
+
+
+def run_baseline_identity() -> dict:
+    """One-workflow campaigns (admission off) must reproduce the
+    committed single-workflow baselines bit-exactly."""
+    out: dict = {}
+
+    # predictor.json convergence seed 3: shared-GPU c-DG2, lognormal,
+    # arbitrated feedback
+    shared = dataclasses.replace(summit_pool(), oversubscribe_gpus=True)
+    c = Campaign()
+    c.add("solo", cdg_dag("c-DG2"))
+    res = simulate(c, shared, "async",
+                   options=SimOptions(seed=3, **LOGNORMAL),
+                   feedback=FeedbackOptions(straggler_k=2.0, speculate=True))
+    with open(os.path.join(BASELINE_DIR, "predictor.json")) as f:
+        committed = json.load(f)["convergence"]["per_seed"]["3"]["makespan"]
+    out["predictor_seed3"] = dict(fresh=round(res.makespan, 1),
+                                  committed=committed,
+                                  identical=round(res.makespan, 1)
+                                  == committed)
+
+    # topology.json fragmented nodepack seed 1: node-level pool
+    from bench_topology import frag_dag, frag_pool
+    c2 = Campaign()
+    c2.add("solo", frag_dag())
+    res2 = simulate(c2, frag_pool(), "async", options=SimOptions(seed=1),
+                    scheduling="nodepack")
+    with open(os.path.join(BASELINE_DIR, "topology.json")) as f:
+        committed2 = json.load(f)["fragmented"]["arms"]["nodepack"][
+            "makespans"][0]
+    out["topology_nodepack_seed1"] = dict(fresh=round(res2.makespan, 1),
+                                          committed=committed2,
+                                          identical=round(res2.makespan, 1)
+                                          == committed2)
+    return out
+
+
+def main() -> dict:
+    print("== (a) 3-workflow Summit campaign: weighted slowdown ==")
+    ten = run_tenancy()
+    for seed, r in ten["per_seed"].items():
+        print(f"  seed {seed}: fifo={r['fifo_ws']:.3f}  "
+              f"admission={r['admission_ws']:.3f}  "
+              f"static={r['static_ws']:.3f}")
+        assert r["admission_ws"] <= r["fifo_ws"], (seed, ten)
+        assert r["admission_ws"] <= r["static_ws"], (seed, ten)
+        for wf, sd in r["admission_slowdowns"].items():
+            assert sd <= SLOWDOWN_BOUND, (seed, wf, sd)
+    print(f"  means: fifo={ten['fifo_ws_mean']:.3f}  "
+          f"admission={ten['admission_ws_mean']:.3f}  "
+          f"static={ten['static_ws_mean']:.3f}")
+
+    print("== (b) deferral: inference stream + wide long training job ==")
+    de = run_deferral()
+    for seed, r in de["per_seed"].items():
+        print(f"  seed {seed}: off={r['off_ws']:.3f}  on={r['on_ws']:.3f}  "
+              f"deferrals={r['deferrals']}  serve "
+              f"{r['serve_slowdown_off']:.3f} -> "
+              f"{r['serve_slowdown_on']:.3f}")
+        assert r["on_ws"] <= r["off_ws"], (seed, de)
+        assert r["deferrals"] > 0, (seed, de)
+        assert r["serve_slowdown_on"] <= 1.05, (seed, de)
+
+    print("== (c) one-workflow campaign stays bit-identical to committed "
+          "baselines ==")
+    ident = run_baseline_identity()
+    for which, r in ident.items():
+        print(f"  {which:24s} fresh={r['fresh']} "
+              f"committed={r['committed']} identical={r['identical']}")
+        assert r["identical"], (which, ident)
+
+    out = {"tenancy": ten, "deferral": de, "baseline_identity": ident}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "admission.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  admission: OK (wrote {os.path.relpath(path)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,8 @@ from .estimator import FeedbackOptions, SetEstimate, TxEstimator
 from .resources import (Allocation, NodeSpec, NodeState, PoolSpec, Resources,
                         as_allocation, doa_res, hybrid_pool, node_states,
                         summit_pool, tpu_pod_pool, wla)
-from .sched_engine import (SCHEDULING_POLICIES, FifoBackfill, GpuAwareBestFit,
+from .sched_engine import (SCHEDULING_POLICIES, AdmissionOptions,
+                           CampaignPriority, FifoBackfill, GpuAwareBestFit,
                            LargestTxFirst, LocalityAware, NodePackTopology,
                            SchedEngine, SchedulingPolicy, SetInfo,
                            get_scheduling_policy)
@@ -21,13 +22,14 @@ from .executor import ExecResult, RealExecutor
 from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
                         adaptive_policy, arbitrated_policy, async_policy,
                         gpu_bestfit_policy, locality_policy, lpt_policy,
-                        nodepack_policy, sequential_policy)
+                        nodepack_policy, priority_policy, sequential_policy)
 from .adaptive import PolicyComparison, compare_policies
 from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
-                       Pipeline, Stage, cdg_dag, cdg_sequential_stage_tx,
-                       ddmd_sequential_stage_groups, ddmd_stage_tx,
-                       deepdrivemd_dag, fig2a_chain, fig2b_fork,
-                       fig2b_with_paper_tx, fig2d_independent,
-                       pipelines_to_dag)
+                       Campaign, CampaignView, Pipeline, Stage, WorkflowEntry,
+                       WorkflowStats, campaign_stats, cdg_dag,
+                       cdg_sequential_stage_tx, ddmd_sequential_stage_groups,
+                       ddmd_stage_tx, deepdrivemd_dag, fig2a_chain,
+                       fig2b_fork, fig2b_with_paper_tx, fig2d_independent,
+                       pipelines_to_dag, weighted_slowdown)
 
 __all__ = [s for s in dir() if not s.startswith("_")]

@@ -30,6 +30,13 @@ the simulator's migration events) or race a speculative duplicate
 (first finisher wins; the loser is cancelled via the engine's finished
 set) — and every scheduling pass re-predicts the makespan
 (``ExecResult.predictions``, see ``core/predictor.py``).
+
+Multi-workflow tenancy works here too: ``run()`` accepts a
+:class:`~repro.core.workflow.Campaign` (arrivals gate dispatch on the
+MODELLED clock — wall / ``tx_scale`` — so campaigns behave identically
+to the simulator's), reports per-workflow metrics in
+``ExecResult.workflows``, and honours ``admission=AdmissionOptions(...)``
+through the shared engine.
 """
 
 from __future__ import annotations
@@ -44,8 +51,10 @@ from typing import Sequence
 from .dag import DAG
 from .estimator import FeedbackOptions
 from .resources import Allocation, PoolSpec
-from .sched_engine import SchedEngine, SchedulingPolicy
+from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
 from .simulator import Mode, TaskRecord, per_pool_task_counts
+from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
+                       weighted_slowdown)
 
 
 @dataclasses.dataclass
@@ -62,12 +71,29 @@ class ExecResult:
     #: mid-run makespan re-predictions (``SchedEngine.repredict`` trace,
     #: feedback enabled; see ``core/predictor.py``)
     predictions: list = dataclasses.field(default_factory=list)
+    #: per-workflow metrics of a campaign run (None otherwise); see
+    #: ``core/workflow.WorkflowStats``.  Times are in MODELLED seconds
+    #: (wall / tx_scale), commensurate with the simulator's.
+    workflows: "dict[str, WorkflowStats] | None" = None
+    #: task sets the admission controller deferred at least once
+    admission_deferrals: int = 0
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
 
     def per_pool_task_counts(self) -> dict[str, int]:
         return per_pool_task_counts(self.records)
+
+    def weighted_slowdown(self) -> "float | None":
+        """Fairness-weighted mean slowdown of a campaign run (None for
+        single-workflow runs or when no reference makespans are set)."""
+        if not self.workflows:
+            return None
+        return weighted_slowdown(self.workflows)
+
+    def workflow_records(self, name: str) -> "list[TaskRecord]":
+        """The trace of one campaign workflow's tasks."""
+        return [r for r in self.records if r.workflow == name]
 
 
 class RealExecutor:
@@ -90,16 +116,31 @@ class RealExecutor:
         self.straggler_prob = straggler_prob
         self.straggler_factor = straggler_factor
 
-    def run(self, dag: DAG, mode: Mode = "async", *, task_level: bool = False,
+    def run(self, dag: "DAG | Campaign", mode: Mode = "async", *,
+            task_level: bool = False,
             sequential_stage_groups: Sequence[Sequence[str]] | None = None,
             scheduling: "str | SchedulingPolicy" = "fifo",
             feedback: "FeedbackOptions | None" = None,
+            admission: "AdmissionOptions | None" = None,
             ) -> ExecResult:
-        g = dag if mode == "async" else dag.with_sequential_barriers(
-            sequential_stage_groups)
+        view: "CampaignView | None" = None
+        if isinstance(dag, Campaign):
+            if mode != "async":
+                raise ValueError("campaigns execute asynchronously "
+                                 "(mode='async')")
+            view = dag.view()
+            g = view.dag
+        else:
+            g = dag if mode == "async" else dag.with_sequential_barriers(
+                sequential_stage_groups)
+        wf_of = view.workflow_of if view is not None else {}
+        #: distinct workflow arrivals (modelled s), for dispatcher wakeups
+        arrivals = (sorted({w.arrival for w in view.entries})
+                    if view is not None else [])
         rng = random.Random(self.seed)
         engine = SchedEngine(g, self.pool, policy=scheduling,
-                             task_level=task_level, feedback=feedback)
+                             task_level=task_level, feedback=feedback,
+                             campaign=view, admission=admission)
 
         durations: dict[tuple[str, int], float] = {}
         for name in engine.order:
@@ -215,7 +256,8 @@ class RealExecutor:
                                           duplicate=spec,
                                           pool=engine.pool_name(pool_idx),
                                           migrated=(name, i) in gen,
-                                          node=node))
+                                          node=node,
+                                          workflow=wf_of.get(name, "")))
                 cv.notify_all()
 
         # the watchdog needs a mitigation that can actually fire: migration
@@ -227,14 +269,25 @@ class RealExecutor:
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
                 while not engine.done():
-                    # backfill: start everything ready that fits
-                    batch = engine.startable()
+                    # backfill: start everything ready that fits.  The
+                    # pass runs on the modelled clock (see observe) so
+                    # campaign arrivals gate on the same time base as the
+                    # simulator's
+                    now = (time.perf_counter() - t0) / self.tx_scale
+                    batch = engine.startable(now)
                     for name, i, pool_idx in batch:
                         ex.submit(body, name, i, pool_idx, 0)
                     if not engine.done() and not batch:
                         # with mitigation on, the wait doubles as the
-                        # straggler watchdog cadence
-                        cv.wait(timeout=0.05 if watchdog else 5.0)
+                        # straggler watchdog cadence; a pending campaign
+                        # arrival bounds the sleep so its dispatch pass
+                        # is not missed
+                        timeout = 0.05 if watchdog else 5.0
+                        nxt = next((a for a in arrivals if a > now), None)
+                        if nxt is not None:
+                            timeout = min(timeout, max(
+                                0.0, (nxt - now) * self.tx_scale) + 1e-3)
+                        cv.wait(timeout=timeout)
                     # scheduling pass on the modelled clock (see observe)
                     now = (time.perf_counter() - t0) / self.tx_scale
                     modelled = {k: v / self.tx_scale
@@ -266,10 +319,21 @@ class RealExecutor:
                     engine.repredict(now, modelled)
 
         makespan = max((r.end for r in records), default=0.0)
+        workflows = None
+        if view is not None:
+            # per-workflow stats on the MODELLED clock, commensurate with
+            # the entries' arrival times and the simulator's metrics
+            scale = self.tx_scale or 1.0
+            scaled = [dataclasses.replace(r, start=r.start / scale,
+                                          end=r.end / scale)
+                      for r in records]
+            workflows = campaign_stats(view, scaled)
         return ExecResult(makespan=makespan, records=records,
                           mode=mode if not task_level else f"{mode}+task_level",
                           tasks_total=len(records),
                           policy=engine.policy.name,
                           migrations=engine.migrations,
                           speculations=engine.speculations,
-                          predictions=engine.predictions)
+                          predictions=engine.predictions,
+                          workflows=workflows,
+                          admission_deferrals=engine.admission_deferrals)

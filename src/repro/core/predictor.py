@@ -87,6 +87,21 @@ class MakespanPrediction:
     remaining: float
     #: predicted total makespan: ``now + remaining``
     total: float
+    #: sum of the per-set residual spans — the remaining work executed
+    #: back to back with no cross-set overlap (the Eqn.-2-shaped serial
+    #: counterpart of ``remaining``, for prediction-trace consumers).
+    residual_seq: float = 0.0
+
+    @property
+    def residual_improvement(self) -> float:
+        """Eqn. 5 over the *remaining* work: how much asynchronicity the
+        rest of the run is still predicted to extract (0 = fully
+        serialized).  Observability only — the admission controller's
+        ``i_adm`` is the cross-snapshot analogue, computed in
+        ``SchedEngine._admit_decision`` from three predictions."""
+        if self.residual_seq <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.remaining / self.residual_seq)
 
 
 class MakespanPredictor:
@@ -98,7 +113,8 @@ class MakespanPredictor:
     """
 
     def __init__(self, dag: DAG, pool: "PoolSpec | Allocation",
-                 tail_factor: float = 1.0, contention: bool = False):
+                 tail_factor: float = 1.0, contention: bool = False,
+                 workflow_of: "Mapping[str, str] | None" = None):
         self.g = dag
         self.tail_factor = tail_factor
         self.alloc = as_allocation(pool)
@@ -107,6 +123,14 @@ class MakespanPredictor:
         #: occupancy (``PoolSpec.node_level``), whose honest accounting is
         #: what makes the live ``gpu_held`` signal trustworthy.
         self.contention = contention
+        #: set -> workflow map of a multi-tenant campaign.  Sets of
+        #: *different* workflows always contend for strict GPUs (there is
+        #: no dependency path between them by construction), so the
+        #: demand-share slot scaling applies to cross-workflow contenders
+        #: even on aggregate pools; same-workflow contention keeps
+        #: requiring node-level occupancy (``contention=True``), which is
+        #: what keeps single-workflow aggregate runs bit-identical.
+        self.workflow_of = dict(workflow_of or {})
         self._order = dag.topological_order()
         self._slots = {n: self._set_slots(dag.node(n)) for n in self._order}
         # resource classes the work bound may use: skip a class as soon as
@@ -214,6 +238,8 @@ class MakespanPredictor:
         if sigma <= 0.0 or t <= 0.0 or self.tail_factor <= 0.0:
             return max(0.0, t - elapsed)
         s2 = math.log(1.0 + (sigma / t) ** 2)     # sigma_log^2
+        if s2 <= 0.0:   # dispersion below float resolution: as if exact
+            return max(0.0, t - elapsed)
         s = math.sqrt(s2)
         mu = math.log(t) - 0.5 * s2
         d = (math.log(elapsed) - mu) / s
@@ -239,7 +265,7 @@ class MakespanPredictor:
         set ``name``'s slots scale by its demand share whenever the total
         exceeds capacity."""
         slots = self._slots[name]
-        if not (self.contention and self._bound_gpus):
+        if not ((self.contention or self.workflow_of) and self._bound_gpus):
             return slots
         g_n = self.g.node(name).gpus_per_task
         if g_n <= 0:
@@ -254,13 +280,29 @@ class MakespanPredictor:
         mine = demand(name)
         if mine <= 0:
             return slots
+        capacity = self.alloc.total.gpus
+        wf = self.workflow_of.get(name)
         total = mine
+        #: per-contending-workflow demand, capped at capacity below — a
+        #: workflow's sets cannot hold more GPUs than exist no matter how
+        #: much rank-unexpanded pending demand they stack up
+        per_wf: dict[str, int] = {}
         for m in self._order:
             if m in self._related[name]:
                 continue
-            if pending.get(m, 0) or run_count.get(m, 0):
-                total += demand(m)
-        capacity = self.alloc.total.gpus
+            if not (pending.get(m, 0) or run_count.get(m, 0)):
+                continue
+            # same-workflow contenders need the node-level occupancy
+            # signal; cross-workflow contenders always count (tenancy)
+            wf_m = self.workflow_of.get(m)
+            if wf_m is not None and wf_m != wf:
+                per_wf[wf_m] = per_wf.get(wf_m, 0) + demand(m)
+                continue
+            if not self.contention:
+                continue
+            total += demand(m)
+        for d in per_wf.values():
+            total += min(d, capacity)
         if total <= capacity:
             return slots  # no contention: everyone fits side by side
         eff = int(capacity * (mine / total)) // g_n
@@ -334,7 +376,8 @@ class MakespanPredictor:
         return MakespanPrediction(
             now=now, done_fraction=done_fraction, t_seq=t_seq,
             t_async=t_async, improvement=improvement,
-            remaining=remaining, total=now + remaining)
+            remaining=remaining, total=now + remaining,
+            residual_seq=sum(residual.values()))
 
     # -- straggler-mitigation pricing (the arbiter's cost model) -----------
     @staticmethod

@@ -45,6 +45,43 @@ Policies (registry: ``SCHEDULING_POLICIES``; table mirrored in DESIGN.md)
                  block) — preserving whole nodes/groups for wide tasks.
                  Other policies on node-level pools keep the RM-default
                  *spread* node choice, which fragments under mixed widths.
+``priority``     workflow-priority-first ordering for multi-tenant
+                 campaigns: higher-priority workflows' sets are offered
+                 resources first, ties broken by arrival time then
+                 rank/topo (fifo within one workflow).  Degenerates to
+                 ``fifo`` outside a campaign (every set has priority 0).
+
+Multi-workflow tenancy + prediction-driven admission
+----------------------------------------------------
+Constructed with a :class:`~repro.core.workflow.CampaignView` the engine
+schedules several concurrent workflows over one allocation: a set may not
+start before its workflow's *arrival* time (both substrates pass their
+clock into :meth:`SchedEngine.startable`), and with
+``admission=AdmissionOptions(...)`` an admission controller decides, per
+scheduling pass, which newly-ready task sets join the dispatch frontier:
+
+- sets of the highest-priority workflow still in flight always admit;
+- *narrow* sets backfill into fragmentation holes (one task fits the
+  current ``largest_free_block`` and the set's remaining strict demand is
+  a small fraction of the free capacity);
+- wide lower-priority sets are *priced* with the online predictor
+  (``core/predictor.py``): three snapshots bound the admitted
+  workflows' remaining work alone, the candidate's alone, and both
+  combined under cross-workflow contention; ``i_adm = 1 - combined /
+  (admitted + alone)`` is Eqn. 5 at admission granularity.  When it
+  collapses below ``i_floor`` AND the candidate's task TX exceeds
+  ``hold_ratio`` x the admitted work's largest task TX (non-preemptible
+  head-of-line blocking), the set is deferred and re-priced on every
+  later pass;
+- deferred work is never lost: when nothing is running and no admitted
+  set can start, the best deferred set is admitted unconditionally, and
+  ``max_defer_time`` optionally ages any deferral into an admission.
+
+Admission-deferred sets are also *preempted ahead of running-task
+migration* in the arbiter's cost model: their queued tasks do not count
+as slot pressure (deferral already absorbed them), so the arbiter
+prefers the free speculative duplicate over paying migration costs when
+the only queued work is deferred.
 
 Node-level topology (``core/resources.py``)
 -------------------------------------------
@@ -103,6 +140,7 @@ workloads unchanged.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Sequence
 
@@ -111,6 +149,32 @@ from .estimator import FeedbackOptions, TxEstimator
 from .predictor import MakespanPrediction, MakespanPredictor
 from .resources import (Allocation, NodeState, PoolSpec, as_allocation,
                         node_states)
+from .workflow import CampaignView
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionOptions:
+    """Knobs of the prediction-driven admission controller (campaign runs
+    only; see the module docstring for the decision order)."""
+
+    #: defer a wide lower-priority set when admitting it would leave the
+    #: predicted degree of asynchronicity of the combined work (Eqn. 5
+    #: over the candidate-next-to-admitted vs candidate-after-admitted
+    #: residuals) below this floor...
+    i_floor: float = 0.05
+    #: ... and the set's tasks, once started, would pin their devices
+    #: across many of the admitted work's scheduling rounds: estimated
+    #: candidate TX > ``hold_ratio`` x the admitted work's largest task
+    #: TX (tasks are not preemptible — a long wide task admitted into a
+    #: ragged wave tail blocks the next waves of everything above it).
+    hold_ratio: float = 3.0
+    #: a set is narrow (backfills unconditionally) when its remaining
+    #: strict demand fits in this fraction of the free capacity and one
+    #: task fits the current largest free GPU block.
+    backfill_fraction: float = 0.5
+    #: age any deferral into an admission after this long (``inf`` = only
+    #: the idle-admission conservation guard ends a deferral).
+    max_defer_time: float = math.inf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +189,10 @@ class SetInfo:
     gpus: int
     tx_mean: float
     kind: str
+    #: workflow admission priority (campaign runs; 0 otherwise)
+    priority: int = 0
+    #: workflow arrival time (campaign runs; 0.0 otherwise)
+    arrival: float = 0.0
 
 
 class SchedulingPolicy:
@@ -223,7 +291,13 @@ class LocalityAware(SchedulingPolicy):
     running-task count``, where ``data_cost`` is the mean cost of pulling
     the task's parent outputs to that pool (the allocation's
     ``transfer_cost`` matrix weighted by where the parent tasks actually
-    ran — see :meth:`SchedEngine.data_cost`).  If the cheapest pool has
+    ran — see :meth:`SchedEngine.data_cost`).  On a ``node_level`` pool
+    the score is node-granular: the best-achievable
+    :meth:`~repro.core.resources.Allocation.transfer` topology distance
+    over the pool's nodes (same NVLink group <= same node <= intra-pool),
+    and the node choice itself minimises the same distance — instead of
+    reading only the pool-level ``transfer_cost`` matrix, which prices
+    every same-pool placement at zero.  If the cheapest pool has
     free capacity the task is placed there; otherwise an *idling* pool
     (free capacity, higher data cost) may steal it, but only
     ``steal_budget`` times per dispatch pass — beyond that the task waits
@@ -244,8 +318,19 @@ class LocalityAware(SchedulingPolicy):
         return [s.name for s in sorted(sets, key=lambda s: (s.rank, s.topo))]
 
     def _score(self, ts: TaskSet, k: int, engine: "SchedEngine") -> float:
-        return (engine.data_cost(ts.name, k)
+        return (engine.best_data_cost(ts.name, k)
                 + self.queue_weight * engine.running_per_pool[k])
+
+    def choose_node(self, ts: TaskSet, pool_idx: int,
+                    nodes: Sequence[int],
+                    engine: "SchedEngine") -> int:
+        """Data-local node choice: the fitting node with the cheapest
+        node-granular parent-output pull, spread tie-break."""
+        states = engine.node_states[pool_idx]
+        return min(nodes, key=lambda n: (engine.data_cost(ts.name, pool_idx,
+                                                          node=n),
+                                         -states[n].free_gpus,
+                                         -states[n].free_cpus, n))
 
     def choose_pool(self, ts: TaskSet, candidates: Sequence[int],
                     engine: "SchedEngine") -> "int | None":
@@ -319,12 +404,28 @@ class NodePackTopology(SchedulingPolicy):
         return min(candidates, key=key)
 
 
+class CampaignPriority(SchedulingPolicy):
+    """Workflow-priority-first ordering for campaigns (``priority``):
+    higher-priority workflows' sets are offered resources first, ties
+    broken by arrival time then rank/topo — fifo within one workflow.
+    Outside a campaign every set carries priority 0 / arrival 0, so the
+    order degenerates to ``fifo``."""
+
+    name = "priority"
+
+    def order_sets(self, sets: Sequence[SetInfo]) -> list[str]:
+        return [s.name for s in
+                sorted(sets, key=lambda s: (-s.priority, s.arrival,
+                                            s.rank, s.topo))]
+
+
 SCHEDULING_POLICIES: dict[str, type[SchedulingPolicy]] = {
     FifoBackfill.name: FifoBackfill,
     LargestTxFirst.name: LargestTxFirst,
     GpuAwareBestFit.name: GpuAwareBestFit,
     LocalityAware.name: LocalityAware,
     NodePackTopology.name: NodePackTopology,
+    CampaignPriority.name: CampaignPriority,
 }
 
 
@@ -362,9 +463,34 @@ class SchedEngine:
                  policy: "str | SchedulingPolicy" = "fifo",
                  task_level: bool = False,
                  feedback: "FeedbackOptions | None" = None,
-                 estimator: "TxEstimator | None" = None):
+                 estimator: "TxEstimator | None" = None,
+                 campaign: "CampaignView | None" = None,
+                 admission: "AdmissionOptions | None" = None):
         self.g = g
         self.alloc = as_allocation(pool)
+        # -- multi-workflow tenancy (core/workflow.py) ---------------------
+        if admission is not None and campaign is None:
+            raise ValueError("admission control requires a campaign "
+                             "(single workflows are always admitted)")
+        self.campaign = campaign
+        self.workflow_of: dict[str, str] = (
+            dict(campaign.workflow_of) if campaign else {})
+        self.arrival_of: dict[str, float] = (
+            dict(campaign.arrival_of) if campaign else {})
+        self.wf_priority: dict[str, int] = (
+            dict(campaign.priority_of) if campaign else {})
+        self.admission = admission
+        #: sets the admission controller let onto the dispatch frontier
+        #: (sticky); with admission off every set is implicitly admitted
+        self.admitted: set[str] = set()
+        #: deferred set -> time of its first deferral (re-priced per pass)
+        self.deferred: dict[str, float] = {}
+        #: sets ever deferred at least once
+        self.admission_deferrals = 0
+        #: admission trace: (now, set, decision) tuples
+        self.admission_log: list[tuple[float, str, str]] = []
+        #: last scheduling-pass clock (supplied by the substrates)
+        self._now = 0.0
         self.pools: tuple[PoolSpec, ...] = self.alloc.pools
         self.free_cpus = [p.total.cpus for p in self.pools]
         self.free_gpus = [p.total.gpus for p in self.pools]
@@ -396,17 +522,20 @@ class SchedEngine:
         self.running_per_pool = [0] * len(self.pools)
         self.migrations = 0
         self._migrations_of: dict[tuple[str, int], int] = {}
-        self._data_cost_cache: dict[tuple[str, int], float] = {}
+        self._data_cost_cache: dict[tuple[str, int, int], float] = {}
         #: speculative duplicates: (set, index) -> pool holding the
         #: duplicate's slot while both attempts race
         self._spec_pool: dict[tuple[str, int], int] = {}
         self._speculations_of: dict[tuple[str, int], int] = {}
         self.speculations = 0
         #: online makespan re-prediction (core/predictor.py); node-level
-        #: occupancy unlocks the cross-set GPU contention term
-        self.predictor = (MakespanPredictor(g, self.alloc,
-                                            contention=self._node_level_any)
-                          if feedback is not None else None)
+        #: occupancy unlocks the cross-set GPU contention term, a campaign
+        #: the cross-workflow one — and the admission controller needs the
+        #: predictor even without runtime feedback
+        self.predictor = (MakespanPredictor(
+            g, self.alloc, contention=self._node_level_any,
+            workflow_of=self.workflow_of or None)
+            if feedback is not None or admission is not None else None)
         self.predictions: list[MakespanPrediction] = []
 
         order = g.topological_order()
@@ -414,7 +543,9 @@ class SchedEngine:
         self.order = order
         self._infos = [SetInfo(n, ranks[n], k, g.node(n).num_tasks,
                                g.node(n).cpus_per_task, g.node(n).gpus_per_task,
-                               g.node(n).tx_mean, g.node(n).kind)
+                               g.node(n).tx_mean, g.node(n).kind,
+                               self.wf_priority.get(n, 0),
+                               self.arrival_of.get(n, 0.0))
                        for k, n in enumerate(order)]
         self.priority = list(self.policy.order_sets(self._infos))
         if sorted(self.priority) != sorted(order):
@@ -460,6 +591,10 @@ class SchedEngine:
         self.launched: set[tuple[str, int]] = set()
         self.finished: set[tuple[str, int]] = set()
         self.pool_of: dict[tuple[str, int], int] = {}
+        #: node the task's primary attempt was placed on (-1 on aggregate
+        #: pools); unlike ``_node_alloc`` this survives completion, so
+        #: node-granular data costs can price finished parents' outputs
+        self.node_of: dict[tuple[str, int], int] = {}
         self._n_total = sum(g.node(n).num_tasks for n in order)
         self._n_done = 0
         for n in order:
@@ -695,6 +830,8 @@ class SchedEngine:
         node_alloc = self._acquire(dst, ts, node)
         if node_alloc is not None:
             self._node_alloc[(name, i)] = node_alloc
+        self.node_of[(name, i)] = (node_alloc[0]
+                                   if node_alloc is not None else -1)
         self.pool_of[(name, i)] = dst
         self._migrations_of[(name, i)] = (
             self._migrations_of.get((name, i), 0) + 1)
@@ -819,9 +956,12 @@ class SchedEngine:
         src = self.pool_of[(name, i)]
         base = pred.straggler_baseline(self.tx_estimate(name, pool=src),
                                        elapsed, self.tail_ratio(name))
-        # queued work turns the duplicate's slot into displaced work;
-        # at the tail (nothing queued) speculation races for free
-        pressure = any(self.ready[n] for n in self.order)
+        # queued work turns the duplicate's slot into displaced work; at
+        # the tail (nothing queued) speculation races for free.  Only
+        # *dispatchable* work counts: admission-deferred sets are held
+        # back ahead of migrating running tasks, so their queues are free
+        pressure = any(self.ready[n] and self._dispatchable(n)
+                       for n in self.order)
         d_mig = (pred.mitigation_delta(self.tx_estimate(name, pool=mig[0]),
                                        mig[1], base)
                  if mig is not None else None)
@@ -918,12 +1058,16 @@ class SchedEngine:
                 return max(r, fb.straggler_min_ratio)
         return fb.straggler_tail_ratio
 
-    def data_cost(self, name: str, k: int) -> float:
+    def data_cost(self, name: str, k: int, node: int = -1) -> float:
         """Mean data-movement cost of pulling set ``name``'s parent outputs
         to pool ``k``: the allocation's ``transfer_cost`` weighted by where
-        the parent tasks actually ran.  Cached once every parent set has
-        finished (placements are final from then on)."""
-        key = (name, k)
+        the parent tasks actually ran.  With ``node`` given (node-level
+        pools) same-pool pulls are priced at the node-granular topology
+        distances of :meth:`~repro.core.resources.Allocation.transfer`
+        (same NVLink group <= same node <= intra-pool) instead of the flat
+        pool-level zero.  Cached once every parent set has finished
+        (placements are final from then on)."""
+        key = (name, k, node)
         cached = self._data_cost_cache.get(key)
         if cached is not None:
             return cached
@@ -934,12 +1078,26 @@ class SchedEngine:
                 j = self.pool_of.get((p, i))
                 if j is None:
                     continue
-                total += self.alloc.transfer(j, k)
+                total += self.alloc.transfer(j, k,
+                                             self.node_of.get((p, i), -1),
+                                             node)
                 n += 1
         cost = total / n if n else 0.0
         if not parents or all(self._set_remaining[p] == 0 for p in parents):
             self._data_cost_cache[key] = cost
         return cost
+
+    def best_data_cost(self, name: str, k: int) -> float:
+        """Best-achievable data cost of placing one task of ``name`` on
+        pool ``k``: for a ``node_level`` pool the minimum node-granular
+        cost over its nodes (the pool's score must not pretend every
+        same-pool pull is free), for an aggregate pool the pool-level
+        matrix cost."""
+        states = self.node_states[k]
+        if states is None:
+            return self.data_cost(name, k)
+        return min(self.data_cost(name, k, node=n)
+                   for n in range(len(states)))
 
     def _needs(self, k: int, ts: TaskSet) -> tuple[int, int]:
         p = self.pools[k]
@@ -962,25 +1120,198 @@ class SchedEngine:
             out.append(k)
         return out
 
+    # -- admission control (campaign runs) ----------------------------------
+    def _dispatchable(self, name: str) -> bool:
+        """Ready work that could actually use a free slot right now:
+        arrived, and (with admission on) admitted.  Admission-deferred
+        sets are held back in preference to disturbing running tasks, so
+        their queued work is *not* slot pressure for the arbiter."""
+        if self.arrival_of.get(name, 0.0) > self._now:
+            return False
+        return self.admission is None or name in self.admitted
+
+    def _active_priority(self) -> "int | None":
+        """Highest workflow priority among admitted sets with remaining
+        work (``None`` when nothing admitted is still in flight)."""
+        out = None
+        for m in self.admitted:
+            if self._set_remaining[m] <= 0:
+                continue
+            p = self.wf_priority.get(m, 0)
+            out = p if out is None or p > out else out
+        return out
+
+    def _is_narrow(self, name: str) -> bool:
+        """Backfill test: one task fits the current largest free GPU
+        block (:meth:`largest_free_block`) and the set's remaining strict
+        demand stays within ``backfill_fraction`` of the free capacity
+        LEFT ONCE the admitted frontier claims its share — such a set
+        fills fragmentation holes without displacing the admitted work's
+        waves (the admission pass runs before dispatch, so raw free
+        counters would overstate what is genuinely spare)."""
+        opts = self.admission
+        ts = self.g.node(name)
+        remaining = self._set_remaining[name]
+        free_c = free_g = block = 0
+        strict_c = strict_g = False
+        for k, p in enumerate(self.pools):
+            if not p.accepts(ts):
+                continue
+            need_c, need_g = self._needs(k, ts)
+            if need_g:
+                strict_g = True
+                free_g += self.free_gpus[k]
+                block = max(block, self.largest_free_block(k))
+            if need_c:
+                strict_c = True
+                free_c += self.free_cpus[k]
+        # the admitted sets' ready tasks will claim their strict
+        # footprints this very pass — only what remains is backfillable
+        for m in self.admitted:
+            if not self.ready[m]:
+                continue
+            mts = self.g.node(m)
+            needs = [self._needs(k, mts) for k, p in enumerate(self.pools)
+                     if p.accepts(mts)]
+            claim_c = max((c for c, _g in needs), default=0)
+            claim_g = max((g for _c, g in needs), default=0)
+            free_c -= len(self.ready[m]) * claim_c
+            free_g -= len(self.ready[m]) * claim_g
+        free_c, free_g = max(0, free_c), max(0, free_g)
+        if strict_g:
+            return (ts.gpus_per_task <= min(block, free_g)
+                    and remaining * ts.gpus_per_task
+                    <= opts.backfill_fraction * free_g)
+        if strict_c:
+            return (remaining * ts.cpus_per_task
+                    <= opts.backfill_fraction * free_c)
+        return True  # fully oversubscribed: consumes no bounded resource
+
+    def _admission_price(self, name: str, now: float
+                         ) -> tuple[MakespanPrediction, MakespanPrediction,
+                                    MakespanPrediction]:
+        """Price admitting ``name``'s workflow next to the admitted work:
+        predictor snapshots of (a) the admitted workflows' remaining work
+        alone, (b) combined with the candidate workflow's (the cross-
+        workflow contention term shrinks everyone's slots by demand
+        share), and (c) the candidate workflow's alone (its dedicated
+        residual, i.e. what deferring until the admitted work drains
+        would cost it).  Running tasks are priced as pending (the engine
+        has no per-task clocks; the bound is conservative by at most one
+        in-flight wave)."""
+        wf = self.workflow_of.get(name)
+        active = {self.workflow_of.get(m) for m in self.admitted
+                  if self._set_remaining[m] > 0}
+        base_pending = {m: self._set_remaining[m] for m in self.order
+                        if self._set_remaining[m] > 0
+                        and self.workflow_of.get(m) in active}
+        cand_pending = {m: self._set_remaining[m] for m in self.order
+                        if self._set_remaining[m] > 0
+                        and self.workflow_of.get(m) == wf}
+        with_pending = dict(base_pending)
+        with_pending.update(cand_pending)
+        predict = self.predictor.predict
+        base = predict(self.tx_estimate, now, base_pending, {},
+                       tx_std=self.tx_std_estimate)
+        with_ = predict(self.tx_estimate, now, with_pending, {},
+                        tx_std=self.tx_std_estimate)
+        alone = predict(self.tx_estimate, now, cand_pending, {},
+                        tx_std=self.tx_std_estimate)
+        return base, with_, alone
+
+    def _admit_decision(self, name: str, now: float) -> tuple[bool, str]:
+        opts = self.admission
+        pri = self.wf_priority.get(name, 0)
+        active = self._active_priority()
+        if active is None or pri >= active:
+            return True, "priority"  # nothing more important in flight
+        since = self.deferred.get(name)
+        if since is not None and now - since >= opts.max_defer_time:
+            return True, "aged"
+        if self._is_narrow(name):
+            return True, "backfill"
+        base, with_, alone = self._admission_price(name, now)
+        # Eqn. 5 at admission granularity: t_seq = run the candidate's
+        # workflow AFTER the admitted work drains, t_async = run them
+        # combined (contention-priced).  When the predicted improvement
+        # collapses below the floor, admitting now buys ~no overlap (the
+        # workflows fight for the same devices) — AND the candidate's
+        # tasks would pin those devices across many of the admitted
+        # work's scheduling rounds (tasks are not preemptible): that is
+        # head-of-line blocking with no masking upside, so the set
+        # defers.  A candidate of comparable task granularity interleaves
+        # harmlessly under priority ordering and is admitted even when
+        # the predicted overlap is poor.
+        serial = base.remaining + alone.remaining
+        i_adm = (1.0 - with_.remaining / serial) if serial > 0 else 1.0
+        active_tx = max((self.tx_estimate(m) for m in self.admitted
+                         if self._set_remaining[m] > 0), default=0.0)
+        if (i_adm < opts.i_floor and active_tx > 0
+                and self.tx_estimate(name) > opts.hold_ratio * active_tx):
+            return False, "defer"
+        return True, "priced"
+
+    def _admit(self, name: str, now: float, why: str) -> None:
+        self.admitted.add(name)
+        self.deferred.pop(name, None)
+        self.admission_log.append((now, name, why))
+
+    def _admission_pass(self, now: float) -> None:
+        cand = [n for n in self.priority
+                if n not in self.admitted and self.ready[n]
+                and self.arrival_of.get(n, 0.0) <= now]
+        if cand:
+            # most-important first; Python's stable sort keeps the
+            # policy's own set order within (priority, arrival) ties
+            cand.sort(key=lambda n: (-self.wf_priority.get(n, 0),
+                                     self.arrival_of.get(n, 0.0)))
+            for n in cand:
+                ok, why = self._admit_decision(n, now)
+                if ok:
+                    self._admit(n, now, why)
+                elif n not in self.deferred:
+                    self.deferred[n] = now
+                    self.admission_deferrals += 1
+                    self.admission_log.append((now, n, "defer"))
+        # conservation guard: deferred != lost.  When nothing runs and no
+        # admitted set can start, admit the best deferred set outright.
+        if (self.deferred and not any(self.running_per_pool)
+                and not any(self.ready[m] for m in self.admitted)):
+            n = min(self.deferred, key=lambda m: (
+                -self.wf_priority.get(m, 0), self.deferred[m], m))
+            self._admit(n, now, "idle")
+
     # -- scheduling ---------------------------------------------------------
-    def startable(self) -> list[tuple[str, int, int]]:
+    def startable(self, now: float = 0.0) -> list[tuple[str, int, int]]:
         """Backfill pass: pop every ready task that fits somewhere *now*,
         acquire its resources and return ``(set, index, pool_idx)`` triples
         in launch order.  Walks sets in policy priority order (re-ranked by
         observed TX first when feedback marked it dirty).  A policy may
         defer a task (``choose_pool`` -> ``None``) to hold it for a busy
-        pool; deferred tasks stay at the head of their ready queue."""
+        pool; deferred tasks stay at the head of their ready queue.
+
+        ``now`` is the substrate's scheduling clock: campaign sets whose
+        workflow has not arrived yet are skipped, and with admission
+        control on, the admission pass runs first — only admitted sets
+        dispatch."""
+        self._now = now
         if self._priority_dirty:
             infos = [dataclasses.replace(si, tx_mean=self.tx_estimate(si.name))
                      for si in self._infos]
             self.priority = list(self.policy.order_sets(infos))
             self._priority_dirty = False
         self.policy.begin_pass(self)
+        if self.admission is not None:
+            self._admission_pass(now)
         out: list[tuple[str, int, int]] = []
         for name in self.priority:
             q = self.ready[name]
             if not q:
                 continue
+            if self.arrival_of and self.arrival_of.get(name, 0.0) > now:
+                continue  # workflow not arrived yet
+            if self.admission is not None and name not in self.admitted:
+                continue  # admission-deferred (re-priced next pass)
             ts = self.g.node(name)
             while q:
                 cands = self._candidates(ts)
@@ -996,6 +1327,8 @@ class SchedEngine:
                 node_alloc = self._acquire(k, ts)
                 if node_alloc is not None:
                     self._node_alloc[(name, i)] = node_alloc
+                self.node_of[(name, i)] = (node_alloc[0]
+                                           if node_alloc is not None else -1)
                 self.launched.add((name, i))
                 self.pool_of[(name, i)] = k
                 out.append((name, i, k))

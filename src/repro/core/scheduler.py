@@ -109,6 +109,14 @@ def nodepack_policy() -> ExecutionPolicy:
                            scheduling="nodepack")
 
 
+def priority_policy() -> ExecutionPolicy:
+    """Asynchronous mode with workflow-priority-first ordering — the
+    natural dispatch order for multi-tenant campaigns (higher-priority
+    workflows' sets offered resources first; fifo within one workflow)."""
+    return ExecutionPolicy("async", False, None, "priority",
+                           scheduling="priority")
+
+
 def adaptive_observed_policy(
         feedback: FeedbackOptions = FeedbackOptions()) -> ExecutionPolicy:
     """Task-level asynchronicity driven by OBSERVED runtime TX instead of

@@ -26,6 +26,12 @@ Modes:
   ``async``       dependency-driven dispatch (the paper's asynchronous mode)
   ``sequential``  PST stage barriers (the paper's sequential/BSP mode)
 
+Multi-workflow tenancy: pass a :class:`~repro.core.workflow.Campaign`
+instead of a DAG to multiplex several prioritized, staggered workflows
+over the allocation (arrival-gated dispatch, per-workflow metrics in
+``SimResult.workflows``), with ``admission=AdmissionOptions(...)``
+enabling the engine's prediction-driven admission controller.
+
 Task-level asynchronicity (the paper's future work, our ``adaptive``
 scheduler) is enabled with ``task_level=True``: a task becomes eligible as
 soon as its *matching* parent tasks complete instead of waiting for whole
@@ -44,13 +50,17 @@ from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions
 from .predictor import MakespanPrediction
 from .resources import Allocation, PoolSpec, as_allocation
-from .sched_engine import SchedEngine, SchedulingPolicy
+from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
+from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
+                       weighted_slowdown)
 
 Mode = Literal["async", "sequential"]
 
 #: sentinel event name for the simulator's periodic straggler watchdog
 #: (never collides with a task-set name: "\x00" is not valid in one)
 _WATCHDOG = "\x00watchdog"
+#: sentinel event name for a campaign workflow's arrival (dispatch pass)
+_ARRIVAL = "\x00arrival"
 
 
 def per_pool_task_counts(records: "Sequence[TaskRecord]") -> dict[str, int]:
@@ -78,6 +88,8 @@ class TaskRecord:
     #: node index within the pool the winning attempt ran on (-1 on
     #: aggregate pools — see ``PoolSpec.node_level``)
     node: int = -1
+    #: owning workflow of a campaign run ("" for single-workflow runs)
+    workflow: str = ""
 
     @property
     def duration(self) -> float:
@@ -106,9 +118,25 @@ class SimResult:
     #: feedback enabled; see ``core/predictor.py``)
     predictions: "list[MakespanPrediction]" = (
         dataclasses.field(default_factory=list))
+    #: per-workflow metrics of a campaign run (None otherwise); see
+    #: ``core/workflow.WorkflowStats``
+    workflows: "dict[str, WorkflowStats] | None" = None
+    #: task sets the admission controller deferred at least once
+    admission_deferrals: int = 0
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
+
+    def weighted_slowdown(self) -> "float | None":
+        """Fairness-weighted mean slowdown of a campaign run (None for
+        single-workflow runs or when no reference makespans are set)."""
+        if not self.workflows:
+            return None
+        return weighted_slowdown(self.workflows)
+
+    def workflow_records(self, name: str) -> "list[TaskRecord]":
+        """The trace of one campaign workflow's tasks."""
+        return [r for r in self.records if r.workflow == name]
 
     def utilization_trace(self, resolution: int = 256
                           ) -> tuple[list[float], list[int], list[int]]:
@@ -153,12 +181,14 @@ class SimOptions:
     mitigation_threshold: float = 2.0
 
 
-def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
+def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
+             mode: Mode = "async", *,
              options: SimOptions = SimOptions(),
              task_level: bool = False,
              sequential_stage_groups: Sequence[Sequence[str]] | None = None,
              scheduling: "str | SchedulingPolicy" = "fifo",
              feedback: "FeedbackOptions | None" = None,
+             admission: "AdmissionOptions | None" = None,
              ) -> SimResult:
     """Run one workflow execution and return its schedule.
 
@@ -169,10 +199,25 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
     preemptive migration and/or speculative duplicates — arbitrated per
     straggler by predicted marginal makespan when both are enabled — and
     the analytic model is re-evaluated mid-run on the live estimates
-    (``SimResult.predictions``)."""
+    (``SimResult.predictions``).
+
+    ``dag`` may be a :class:`~repro.core.workflow.Campaign`: the member
+    workflows are multiplexed over the allocation (tasks gated on each
+    workflow's arrival time), ``SimResult.workflows`` carries per-workflow
+    makespan/wait/slowdown metrics, and ``admission=AdmissionOptions()``
+    enables the engine's prediction-driven admission controller
+    (campaigns run asynchronously — ``mode`` must be ``"async"``)."""
     rng = random.Random(options.seed)
-    g = dag if mode == "async" else dag.with_sequential_barriers(
-        sequential_stage_groups)
+    view: "CampaignView | None" = None
+    if isinstance(dag, Campaign):
+        if mode != "async":
+            raise ValueError("campaigns execute asynchronously "
+                             "(mode='async')")
+        view = dag.view()
+        g = view.dag
+    else:
+        g = dag if mode == "async" else dag.with_sequential_barriers(
+            sequential_stage_groups)
     alloc = as_allocation(pool)
     total = alloc.total
 
@@ -192,8 +237,10 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
 
     # ---- expand task sets into tasks -------------------------------------
     engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
-                         feedback=feedback)
+                         feedback=feedback, campaign=view,
+                         admission=admission)
     order = engine.order
+    wf_of = view.workflow_of if view is not None else {}
     durations: dict[tuple[str, int], float] = {}
     for name in order:
         ts = g.node(name)
@@ -227,7 +274,7 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
 
     def try_start() -> None:
         nonlocal seq
-        for name, i, _pool in engine.startable():
+        for name, i, _pool in engine.startable(now):
             end = now + options.launch_latency + durations[(name, i)]
             # straggler/estimator clock starts when the WORK starts:
             # launch latency must not read as task duration
@@ -262,7 +309,8 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
                                   duplicate=won_by_dup,
                                   pool=engine.pool_name(k),
                                   migrated=(name, i) in gen,
-                                  node=node))
+                                  node=node,
+                                  workflow=wf_of.get(name, "")))
         set_durations.setdefault(name, []).append(now - attempt_start)
         engine.observe(name, now - attempt_start, pool=k)
 
@@ -312,6 +360,13 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
             seq += 1
             watchdog_pending = True
 
+    # campaign arrivals: a dispatch pass must run when a workflow arrives
+    # (its sets become eligible), even with nothing completing right then
+    if view is not None:
+        for t in sorted({w.arrival for w in view.entries if w.arrival > 0}):
+            heapq.heappush(events, (t, seq, _ARRIVAL, -1, False, 0))
+            seq += 1
+
     try_start()
     schedule_scan()
     engine.repredict(now, running)   # prior-based prediction at t = 0
@@ -323,6 +378,11 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
             watchdog_pending = False
             mitigate_scan()
             engine.repredict(now, running)
+            try_start()
+            schedule_scan()
+            continue
+        if name is _ARRIVAL:
+            engine.repredict(now, running)  # the new workflow is visible
             try_start()
             schedule_scan()
             continue
@@ -390,4 +450,7 @@ def simulate(dag: DAG, pool: "PoolSpec | Allocation", mode: Mode = "async", *,
         migrations=engine.migrations,
         speculations=engine.speculations,
         predictions=engine.predictions,
+        workflows=(campaign_stats(view, records)
+                   if view is not None else None),
+        admission_deferrals=engine.admission_deferrals,
     )

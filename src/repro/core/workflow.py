@@ -5,12 +5,26 @@ analogue, Ref. [3] of the paper) and builders for every DG the paper uses:
 - the DeepDriveMD workflow (Table 1 task sets, Fig. 3a staggered DG);
 - the abstract DG of Fig. 3b with the c-DG1 / c-DG2 concrete assignments
   (Table 2).
+
+Multi-workflow tenancy (:class:`Campaign`): the paper's model assumes one
+workflow owns the allocation, but the middleware it motivates
+(RADICAL-Pilot / RHAPSODY hybrid AI-HPC campaigns) multiplexes many
+concurrent workflows over one pilot.  A :class:`Campaign` names a list of
+workflows with per-workflow priorities, arrival times, deadlines and
+fairness weights; :meth:`Campaign.view` merges them into one namespaced DG
+(set ``T0`` of workflow ``ddmd`` becomes ``ddmd/T0``) plus the
+set -> workflow maps the scheduling engine's admission controller and the
+substrates' per-workflow accounting read.  ``simulate()`` and
+``RealExecutor.run()`` both accept a ``Campaign`` in place of a DAG and
+then report per-workflow traces and makespan / wait / weighted-slowdown
+metrics (:class:`WorkflowStats`, :func:`campaign_stats`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import math
+from typing import Callable, Iterable, Sequence
 
 from .dag import DAG, TaskSet
 
@@ -242,3 +256,198 @@ def cdg_sequential_stage_tx(which: str, total_ttx: float = 2000.0) -> list[float
     table = CDG_TABLE2[which]
     return [table[g]["frac"] * total_ttx
             for g in ("T0", "T12", "T36", "T45", "T7")]
+
+
+# ---------------------------------------------------------------------------
+# Multi-workflow tenancy: Campaign
+# ---------------------------------------------------------------------------
+
+#: separator between workflow name and set name in a merged campaign DG
+WORKFLOW_SEP = "/"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowEntry:
+    """One named workflow of a :class:`Campaign`.
+
+    ``priority`` orders workflows for admission (higher = admitted ahead
+    of lower); ``arrival`` is the modelled time the workflow's tasks
+    become eligible to start; ``weight`` is the fairness weight used by
+    weighted-slowdown reporting; ``reference_makespan`` is the workflow's
+    dedicated single-tenant makespan (when known), the denominator of its
+    slowdown — ``None`` leaves slowdown unreported."""
+
+    name: str
+    dag: DAG
+    priority: int = 0
+    arrival: float = 0.0
+    deadline: "float | None" = None
+    weight: float = 1.0
+    reference_makespan: "float | None" = None
+
+    def __post_init__(self):
+        if WORKFLOW_SEP in self.name:
+            raise ValueError(
+                f"workflow name {self.name!r} may not contain "
+                f"{WORKFLOW_SEP!r} (reserved for set namespacing)")
+        if self.arrival < 0:
+            raise ValueError(f"{self.name}: negative arrival time")
+        if self.weight <= 0:
+            raise ValueError(f"{self.name}: weight must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignView:
+    """The merged, engine-facing form of a :class:`Campaign`: one DG with
+    namespaced set names plus the per-set workflow / arrival / priority
+    maps the scheduling engine and the substrates consume."""
+
+    name: str
+    dag: DAG
+    #: merged set name -> workflow name
+    workflow_of: "dict[str, str]"
+    #: merged set name -> the workflow's arrival time
+    arrival_of: "dict[str, float]"
+    #: merged set name -> the workflow's admission priority
+    priority_of: "dict[str, int]"
+    #: merged set name -> the workflow's fairness weight
+    weight_of: "dict[str, float]"
+    entries: "tuple[WorkflowEntry, ...]"
+
+
+class Campaign:
+    """A set of concurrent workflows multiplexed over one allocation."""
+
+    def __init__(self, entries: "Iterable[WorkflowEntry]" = (),
+                 name: str = "campaign"):
+        self.name = name
+        self.workflows: list[WorkflowEntry] = []
+        for e in entries:
+            self._append(e)
+
+    def _append(self, e: WorkflowEntry) -> WorkflowEntry:
+        if any(w.name == e.name for w in self.workflows):
+            raise ValueError(f"duplicate workflow name {e.name!r}")
+        self.workflows.append(e)
+        return e
+
+    def add(self, name: str, dag: DAG, *, priority: int = 0,
+            arrival: float = 0.0, deadline: "float | None" = None,
+            weight: float = 1.0,
+            reference_makespan: "float | None" = None) -> WorkflowEntry:
+        return self._append(WorkflowEntry(
+            name, dag, priority=priority, arrival=arrival, deadline=deadline,
+            weight=weight, reference_makespan=reference_makespan))
+
+    def __len__(self) -> int:
+        return len(self.workflows)
+
+    def entry(self, name: str) -> WorkflowEntry:
+        for w in self.workflows:
+            if w.name == name:
+                return w
+        raise KeyError(name)
+
+    def view(self) -> CampaignView:
+        """Merge the workflows into one namespaced DG (``wf/set``) + maps."""
+        if not self.workflows:
+            raise ValueError("campaign has no workflows")
+        g = DAG()
+        workflow_of: dict[str, str] = {}
+        arrival_of: dict[str, float] = {}
+        priority_of: dict[str, int] = {}
+        weight_of: dict[str, float] = {}
+        for w in self.workflows:
+            for ts in w.dag.nodes.values():
+                merged = f"{w.name}{WORKFLOW_SEP}{ts.name}"
+                g.add(ts.with_(name=merged))
+                workflow_of[merged] = w.name
+                arrival_of[merged] = w.arrival
+                priority_of[merged] = w.priority
+                weight_of[merged] = w.weight
+            for u, v in w.dag.edges():
+                g.add_edge(f"{w.name}{WORKFLOW_SEP}{u}",
+                           f"{w.name}{WORKFLOW_SEP}{v}")
+        return CampaignView(self.name, g, workflow_of, arrival_of,
+                            priority_of, weight_of, tuple(self.workflows))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowStats:
+    """Per-workflow metrics of one campaign execution."""
+
+    name: str
+    arrival: float
+    #: first task start / last task end on the execution clock
+    start: float
+    finish: float
+    tasks: int
+    priority: int = 0
+    weight: float = 1.0
+    deadline: "float | None" = None
+    reference_makespan: "float | None" = None
+
+    @property
+    def makespan(self) -> float:
+        """Span from the workflow's first task start to its last end."""
+        return self.finish - self.start
+
+    @property
+    def wait(self) -> float:
+        """Admission + queueing delay: arrival -> first task start."""
+        return self.start - self.arrival
+
+    @property
+    def turnaround(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def slowdown(self) -> "float | None":
+        """Turnaround over the dedicated single-tenant makespan (``None``
+        when no ``reference_makespan`` was supplied)."""
+        if not self.reference_makespan:
+            return None
+        return self.turnaround / self.reference_makespan
+
+    @property
+    def met_deadline(self) -> "bool | None":
+        if self.deadline is None:
+            return None
+        return self.finish <= self.deadline
+
+
+def campaign_stats(view: CampaignView,
+                   records: "Sequence") -> "dict[str, WorkflowStats]":
+    """Fold an execution trace (``TaskRecord``-like objects) into
+    per-workflow :class:`WorkflowStats`, keyed by workflow name."""
+    start: dict[str, float] = {}
+    finish: dict[str, float] = {}
+    tasks: dict[str, int] = {}
+    for r in records:
+        wf = view.workflow_of[r.set_name]
+        start[wf] = min(start.get(wf, math.inf), r.start)
+        finish[wf] = max(finish.get(wf, 0.0), r.end)
+        tasks[wf] = tasks.get(wf, 0) + 1
+    out = {}
+    for w in view.entries:
+        out[w.name] = WorkflowStats(
+            name=w.name, arrival=w.arrival,
+            start=start.get(w.name, w.arrival),
+            finish=finish.get(w.name, w.arrival),
+            tasks=tasks.get(w.name, 0), priority=w.priority,
+            weight=w.weight, deadline=w.deadline,
+            reference_makespan=w.reference_makespan)
+    return out
+
+
+def weighted_slowdown(stats: "dict[str, WorkflowStats]") -> "float | None":
+    """Fairness-weighted mean slowdown over the workflows that carry a
+    ``reference_makespan`` (``None`` when none do)."""
+    num = den = 0.0
+    for s in stats.values():
+        sd = s.slowdown
+        if sd is None:
+            continue
+        num += s.weight * sd
+        den += s.weight
+    return num / den if den else None

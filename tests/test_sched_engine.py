@@ -6,11 +6,13 @@ runtime feedback)."""
 
 import pytest
 
-from repro.core import (DAG, Allocation, ExecutionPolicy, FeedbackOptions,
-                        LocalityAware, NodeSpec, PoolSpec, RealExecutor,
-                        SchedEngine, SimOptions, TaskSet, fig2a_chain,
-                        fig2b_fork, fig2d_independent, get_scheduling_policy,
-                        gpu_bestfit_policy, lpt_policy, simulate)
+from repro.core import (DAG, AdmissionOptions, Allocation, Campaign,
+                        ExecutionPolicy, FeedbackOptions, LocalityAware,
+                        NodeSpec, PoolSpec, RealExecutor, SchedEngine,
+                        SimOptions, TaskSet, fig2a_chain, fig2b_fork,
+                        fig2d_independent, get_scheduling_policy,
+                        gpu_bestfit_policy, lpt_policy, priority_policy,
+                        simulate)
 
 ALL_POLICIES = ("fifo", "lpt", "gpu_bestfit", "locality")
 
@@ -535,6 +537,180 @@ def test_real_executor_speculates_stragglers():
     assert res.tasks_total == 12
     assert len({(r.set_name, r.index) for r in res.records}) == 12
     assert res.speculations > 0 and res.migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-workflow campaigns: equivalence, trace disjointness, admission
+# ---------------------------------------------------------------------------
+
+def _two_wf_campaign():
+    """Two small workflows with a staggered arrival; deterministic TXs."""
+    a = DAG()
+    a.add(TaskSet("first", 2, 2, 1, tx_mean=100.0, tx_sigma=0.0))
+    a.add(TaskSet("second", 2, 2, 0, tx_mean=80.0, tx_sigma=0.0))
+    a.add_edge("first", "second")
+    b = DAG()
+    b.add(TaskSet("only", 2, 2, 1, tx_mean=60.0, tx_sigma=0.0))
+    c = Campaign()
+    c.add("alpha", a, priority=1, weight=2.0)
+    c.add("beta", b, priority=0, arrival=50.0)
+    return c
+
+
+def test_campaign_sim_matches_real_executor():
+    """A campaign through both substrates: same task -> pool placement,
+    agreeing makespans (at tx_scale), per-workflow stats in both."""
+    pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))
+    tx_scale = 1.5e-3
+    opts = SimOptions(seed=0, sample_tx=False, entk_overhead=0.0,
+                      async_overhead=0.0, launch_latency=0.0)
+    sim = simulate(_two_wf_campaign(), pool, "async", options=opts,
+                   scheduling="priority")
+    real = RealExecutor(pool, tx_scale=tx_scale).run(
+        _two_wf_campaign(), "async", scheduling="priority")
+    assert real.tasks_total == sim.tasks_total == 6
+    assert {(r.set_name, r.index): r.pool for r in sim.records} == \
+        {(r.set_name, r.index): r.pool for r in real.records}
+    expected = sim.makespan * tx_scale
+    assert expected * 0.9 <= real.makespan <= expected * 1.35 + 0.15
+    assert set(sim.workflows) == set(real.workflows) == {"alpha", "beta"}
+    # the executor's stats are on the modelled clock, commensurate with
+    # the simulator's (beta may not start before its 50 s arrival)
+    for res in (sim, real):
+        assert res.workflows["beta"].start >= 50.0 - 1e-9
+        assert res.workflows["alpha"].tasks == 4
+        assert res.workflows["beta"].tasks == 2
+
+
+def test_campaign_workflow_traces_disjoint():
+    """Per-workflow traces partition the record set, and every record's
+    workflow tag matches its namespaced set name."""
+    res = simulate(_two_wf_campaign(), PoolSpec("p", 1, NodeSpec(8, 2)),
+                   "async", options=_no_noise(), scheduling="priority")
+    alpha = res.workflow_records("alpha")
+    beta = res.workflow_records("beta")
+    assert len(alpha) + len(beta) == res.tasks_total == len(res.records)
+    assert not ({(r.set_name, r.index) for r in alpha}
+                & {(r.set_name, r.index) for r in beta})
+    for r in res.records:
+        assert r.set_name.startswith(f"{r.workflow}/")
+
+
+def test_campaign_admission_off_bit_identical_to_recorded_trace():
+    """A one-workflow campaign with admission off replays the plain
+    single-workflow run event for event (names modulo the namespace
+    prefix) — the tenancy plumbing may not disturb a single tenant."""
+    g = _equiv_dag()
+    pool = PoolSpec("local", 1, NodeSpec(cpus=8, gpus=2))
+    opts = SimOptions(seed=5)  # sampled TXs: any drift would show
+    plain = simulate(g, pool, "async", options=opts)
+    c = Campaign()
+    c.add("solo", g)
+    camp = simulate(c, pool, "async", options=opts)
+    assert camp.makespan == plain.makespan
+    recorded = [(r.set_name, r.index, r.start, r.end, r.pool, r.node)
+                for r in plain.records]
+    replayed = [(r.set_name.split("/", 1)[1], r.index, r.start, r.end,
+                 r.pool, r.node) for r in camp.records]
+    assert replayed == recorded
+
+
+def test_campaign_rejects_invalid_configurations():
+    c = _two_wf_campaign()
+    pool = PoolSpec("p", 1, NodeSpec(8, 2))
+    with pytest.raises(ValueError, match="asynchronously"):
+        simulate(c, pool, "sequential")
+    with pytest.raises(ValueError, match="requires a campaign"):
+        SchedEngine(_equiv_dag(), pool, admission=AdmissionOptions())
+    with pytest.raises(ValueError, match="duplicate workflow"):
+        c.add("alpha", _equiv_dag())
+    with pytest.raises(ValueError, match="may not contain"):
+        Campaign().add("bad/name", _equiv_dag())
+
+
+def test_engine_gates_dispatch_on_arrival():
+    view = _two_wf_campaign().view()
+    eng = SchedEngine(view.dag, PoolSpec("p", 1, NodeSpec(16, 4)),
+                      policy="priority", campaign=view)
+    started = {n for n, _i, _k in eng.startable(now=0.0)}
+    assert started == {"alpha/first"}           # beta arrives at t = 50
+    assert not eng.startable(now=49.9)
+    started2 = {n for n, _i, _k in eng.startable(now=50.0)}
+    assert started2 == {"beta/only"}
+
+
+def test_priority_policy_execution_bundle():
+    pol = priority_policy()
+    assert pol.scheduling == "priority"
+    res = pol.simulate(_two_wf_campaign(), PoolSpec("p", 1, NodeSpec(8, 2)),
+                       options=_no_noise())
+    assert res.policy == "priority"
+
+
+def _deferral_campaign(hot_tasks=3):
+    """A high-priority set next to a wide, long low-priority one that the
+    admission controller must defer (no predicted overlap, hold_ratio)."""
+    a = DAG()
+    a.add(TaskSet("s", hot_tasks, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    b = DAG()
+    b.add(TaskSet("w", 1, 2, 0, tx_mean=1000.0, tx_sigma=0.0))
+    c = Campaign()
+    c.add("hot", a, priority=1)
+    c.add("cold", b, priority=0)
+    return c
+
+
+def test_admission_deferred_sets_are_not_slot_pressure():
+    """The arbiter's tie-break: queued work normally makes migration win
+    (the duplicate's slot displaces it), but admission-DEFERRED queued
+    work is held back ahead of disturbing running tasks — with only a
+    deferred set queued, the pressure-free duplicate races instead."""
+    def build(admission):
+        view = _deferral_campaign(hot_tasks=2).view()
+        alloc = Allocation("two", (
+            PoolSpec("p0", 1, NodeSpec(cpus=2, gpus=0)),
+            PoolSpec("p1", 1, NodeSpec(cpus=2, gpus=0)),
+        ), transfer_cost=((0.0, 0.0), (0.0, 0.0)))
+        eng = SchedEngine(view.dag, alloc, policy="priority",
+                          feedback=FeedbackOptions(min_samples=1,
+                                                   speculate=True),
+                          campaign=view, admission=admission)
+        for _ in range(3):
+            eng.observe("hot/s", 10.0)
+        started = eng.startable(now=0.0)
+        assert [n for n, _i, _k in started] == ["hot/s", "hot/s"]
+        return eng, started
+
+    # admission on: the wide set is deferred -> its queued task is NOT
+    # pressure; complete one hot task to free a slot, then arbitrate
+    eng, started = build(AdmissionOptions())
+    assert eng.admission_deferrals == 1 and "cold/w" in eng.deferred
+    name, i, _k = started[0]
+    eng.complete(name, i)
+    act = eng.arbitrate(*started[1][:2], elapsed=50.0)
+    assert act is not None and act[0] == "speculate"
+
+    # admission off: the same queued wide set IS pressure -> migrate
+    eng2, started2 = build(None)
+    assert eng2.admission_deferrals == 0
+    name, i, _k = started2[0]
+    eng2.complete(name, i)
+    act2 = eng2.arbitrate(*started2[1][:2], elapsed=50.0)
+    assert act2 is not None and act2[0] == "migrate"
+
+
+def test_admission_conservation_guard_admits_deferred_work():
+    """When the admitted work drains, the idle guard admits the deferred
+    set: deferred != lost, and the trace shows it ran last."""
+    res = simulate(_deferral_campaign(), PoolSpec("p", 1, NodeSpec(4, 0)),
+                   "async", options=_no_noise(), scheduling="priority",
+                   admission=AdmissionOptions())
+    assert res.tasks_total == 4
+    assert res.admission_deferrals == 1
+    cold = res.workflow_records("cold")
+    hot = res.workflow_records("hot")
+    assert len(cold) == 1 and len(hot) == 3
+    assert cold[0].start >= max(r.end for r in hot) - 1e-9
 
 
 def test_execution_policy_carries_scheduling_to_both_substrates():

@@ -459,3 +459,82 @@ def test_calibrated_tail_changes_arbiter_baseline():
     (n2, i2, _), = calib.startable()
     # calibrated ~2x: baseline max(10, ~22-12) ~= 10.9 < 8 + rerun -> no-op
     assert calib.arbitrate(n2, i2, elapsed=12.0) is None
+
+
+# ---------------------------------------------------------------------------
+# locality: node-granular data-movement scoring (ROADMAP PR-4 follow-up)
+# ---------------------------------------------------------------------------
+
+def _locality_node_pool(same_node=1.0, intra=5.0):
+    return Allocation("loc", (
+        PoolSpec("p", 2, NodeSpec(cpus=8, gpus=0), node_level=True),
+    ), same_node_cost=same_node, intra_pool_cost=intra)
+
+
+def _blocker_parent_child():
+    """blocker + parent fill the two nodes; the child's data then lives
+    on the parent's node only."""
+    g = DAG()
+    g.add(TaskSet("blocker", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("parent", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("child", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add_edge("parent", "child")
+    return g
+
+
+def test_data_cost_is_node_granular_on_node_level_pools():
+    """``SchedEngine.data_cost`` prices same-pool pulls at the topology
+    distances (same node < intra-pool fabric) when given a destination
+    node, while the legacy pool-level call still reads zero — and the
+    parent's placement survives its completion (``node_of``)."""
+    eng = SchedEngine(_blocker_parent_child(), _locality_node_pool(),
+                      policy="locality")
+    started = eng.startable()
+    placed = {n: eng.node_placement(n, 0) for n, _i, _k in started}
+    assert placed["blocker"] == 0 and placed["parent"] == 1  # spread
+    for n, i, _k in started:
+        eng.complete(n, i)
+    assert eng.node_of[("parent", 0)] == 1    # persists past completion
+    assert eng.data_cost("child", 0, node=1) == 1.0   # same node
+    assert eng.data_cost("child", 0, node=0) == 5.0   # intra-pool hop
+    assert eng.best_data_cost("child", 0) == 1.0
+    assert eng.data_cost("child", 0) == 0.0   # legacy pool-level view
+
+
+def test_locality_places_child_on_parents_node():
+    """Regression: the ``locality`` node choice must follow the data.
+    Both nodes are free and the RM-default spread tie-break would pick
+    node 0; the parent's outputs live on node 1, so locality lands the
+    child there."""
+    eng = SchedEngine(_blocker_parent_child(), _locality_node_pool(),
+                      policy="locality")
+    for n, i, _k in eng.startable():
+        eng.complete(n, i)
+    (name, i, k), = eng.startable()
+    assert name == "child"
+    assert eng.node_placement(name, i) == 1
+
+    # control: fifo keeps the spread default and lands on node 0
+    eng2 = SchedEngine(_blocker_parent_child(), _locality_node_pool(),
+                       policy="fifo")
+    for n, i, _k in eng2.startable():
+        eng2.complete(n, i)
+    (name2, i2, _k2), = eng2.startable()
+    assert eng2.node_placement(name2, i2) == 0
+
+
+def test_locality_node_granular_end_to_end_sim():
+    """Full simulate(): every child task follows its parents' node under
+    ``locality`` on a node-level pool (aggregate pools unchanged)."""
+    g = DAG()
+    g.add(TaskSet("blocker", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("parent", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add(TaskSet("child", 2, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add_edge("parent", "child")
+    res = simulate(g, _locality_node_pool(), "async", options=_no_noise(),
+                   scheduling="locality")
+    nodes = {(r.set_name, r.index): r.node for r in res.records}
+    parent_node = nodes[("parent", 0)]
+    # the first child task lands with the data; the second finds the
+    # parent's node full (its sibling) only if capacities force it
+    assert nodes[("child", 0)] == parent_node

@@ -26,7 +26,12 @@ Failure conditions:
      (``topology.json``: nodepack mean <= gpu_bestfit mean), the
      cross-set contention term still lowers strict-GPU c-DG2 mid-run
      re-prediction error, and the aggregate (``node_level=False``)
-     resource model stays bit-identical to the committed baselines.
+     resource model stays bit-identical to the committed baselines;
+   - admission-controlled tenancy still beats FIFO-admit-all and static
+     partitioning on weighted slowdown (``admission.json``: per-seed
+     dominance on the 3-workflow Summit campaign), the deferral arm
+     still engages and wins, and one-workflow campaigns stay
+     bit-identical to the committed single-workflow baselines.
 
 Exits non-zero with a list of problems; wired into CI after the bench
 targets.  To accept an intentional change, regenerate the baseline:
@@ -77,6 +82,20 @@ def walk_makespans(baseline, fresh, path, problems):
                 f"{100 * THRESHOLD:.0f}%)")
 
 
+def check_identity(name, fresh, problems, what):
+    """Shared bit-identity headline: every ``baseline_identity`` entry
+    of ``fresh`` must report ``identical`` (topology + admission)."""
+    ident = fresh.get("baseline_identity", {})
+    for which, r in ident.items():
+        if not r.get("identical"):
+            problems.append(
+                f"{name}: {which}: {what} no longer bit-identical to the "
+                f"committed baseline ({r.get('fresh')!r} vs "
+                f"{r.get('committed')!r})")
+    if not ident:
+        problems.append(f"{name}: baseline_identity section missing")
+
+
 def check_headlines(name, fresh, problems):
     if name == "runtime_feedback.json":
         i = fresh.get("locality_cdg2_shared", {}).get("i")
@@ -120,15 +139,34 @@ def check_headlines(name, fresh, problems):
                 f"{name}: contention term no longer lowers strict-GPU "
                 f"c-DG2 mid-run error (with={e_with!r}, "
                 f"without={e_without!r})")
-        ident = fresh.get("baseline_identity", {})
-        for which, r in ident.items():
-            if not r.get("identical"):
+        check_identity(name, fresh, problems, "node_level=False")
+    if name == "admission.json":
+        per_seed = fresh.get("tenancy", {}).get("per_seed", {})
+        if not per_seed:
+            problems.append(f"{name}: tenancy section missing")
+        for seed, r in per_seed.items():
+            adm, fifo = r.get("admission_ws"), r.get("fifo_ws")
+            static = r.get("static_ws")
+            if adm is None or fifo is None or static is None \
+                    or adm > fifo * 1.0001 or adm > static * 1.0001:
                 problems.append(
-                    f"{name}: {which}: node_level=False no longer "
-                    f"bit-identical to the committed baseline "
-                    f"({r.get('fresh')!r} vs {r.get('committed')!r})")
-        if not ident:
-            problems.append(f"{name}: baseline_identity section missing")
+                    f"{name}: tenancy seed {seed}: admission weighted "
+                    f"slowdown ({adm!r}) no longer beats fifo ({fifo!r}) "
+                    f"and static ({static!r})")
+        de = fresh.get("deferral", {}).get("per_seed", {})
+        if not de:
+            problems.append(f"{name}: deferral section missing")
+        for seed, r in de.items():
+            if not r.get("deferrals"):
+                problems.append(
+                    f"{name}: deferral seed {seed}: admission controller "
+                    f"no longer defers the wide training set")
+            on, off = r.get("on_ws"), r.get("off_ws")
+            if on is None or off is None or on > off * 1.0001:
+                problems.append(
+                    f"{name}: deferral seed {seed}: admission-on weighted "
+                    f"slowdown ({on!r}) lost to admission-off ({off!r})")
+        check_identity(name, fresh, problems, "one-workflow campaign")
 
 
 def main() -> int:
