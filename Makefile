@@ -2,8 +2,9 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all test-cov bench-policies bench-feedback \
-        bench-predictor bench-topology bench-admission bench-check \
-        bench-paper docs-check lint format-check
+        bench-predictor bench-topology bench-admission \
+        bench-engine-scale bench-check bench-paper docs-check lint \
+        format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -42,6 +43,13 @@ bench-topology:
 ## campaign bit-identity against committed baselines
 bench-admission:
 	$(PY) benchmarks/bench_admission.py
+
+## engine scaling: indexed (incremental) vs brute-force-scan dispatch —
+## decisions/sec, per-decision pass latency vs node count, and the
+## two arms' dispatch-sequence identity (10^4-10^5 tasks, 10^2-10^3
+## nodes)
+bench-engine-scale:
+	$(PY) benchmarks/bench_engine_scale.py
 
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost

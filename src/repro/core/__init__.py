@@ -16,6 +16,8 @@ from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     maskable_stages, predict, relative_improvement,
                     sequential_ttx, sequential_ttx_grouped,
                     staggered_async_ttx, tx_lookup_fn)
+from .model_batch import (BatchEqns, jax_available,
+                          staggered_async_ttx_batch)
 from .predictor import MakespanPrediction, MakespanPredictor
 from .simulator import SimOptions, SimResult, TaskRecord, simulate
 from .executor import ExecResult, RealExecutor

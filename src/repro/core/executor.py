@@ -245,7 +245,9 @@ class RealExecutor:
                 # node id must be read before complete() frees the slot
                 node = (engine.spec_node(name, i) if spec
                         else engine.node_placement(name, i))
-                engine.complete(name, i)
+                # a winning duplicate's placement becomes the task's final
+                # one (children's data costs price the actual output node)
+                engine.complete(name, i, spec_won=spec)
                 # observe in MODELLED seconds (wall / tx_scale) so the
                 # estimates stay commensurate with the tx_mean priors and
                 # the allocation's transfer costs

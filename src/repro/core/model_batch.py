@@ -1,0 +1,261 @@
+"""Vectorized batch evaluation of the analytic model (Eqns. 2-6).
+
+``core/model.py`` prices ONE workflow from one TX vector per call — fine
+for a single offline prediction, linear-in-batch for everything else.
+The prediction-driven subsystems want the same equations over *arrays*
+of TX vectors at once:
+
+- the admission controller's what-if probes (price K candidate
+  workflows against the live estimator snapshot),
+- bootstrap/sensitivity sweeps (price thousands of perturbed TX draws
+  to put error bars on I = 1 - t_async / t_seq),
+- the scaling benchmark's model-evaluation arm.
+
+``BatchEqns`` compiles a DG's *structure* once — stage segments, the
+sequential trunk prefix, (stage, branch) pair segments, the pair ->
+branch incidence — into index arrays, then evaluates Eqns. 2-5 for a
+whole ``(batch, n_sets)`` TX matrix with a handful of segment reductions
+and no per-row Python.  This is a jax_pallas codebase: the NumPy path is
+the deterministic default, and ``backend="jax"`` runs the identical
+index program under ``jax.jit`` so the analytic model executes on the
+substrate it schedules (CPU/GPU/TPU alike — the arrays are tiny, the
+win is batching and fusion, not kernels).
+
+Semantics are bit-identical to the scalar evaluators by construction:
+the column order interleaves nothing — each stage (and each non-trunk
+(stage, branch) pair) occupies one contiguous column segment, so
+``np.maximum.reduceat`` computes exactly the ``max`` the scalar loop
+takes, and the trunk/branch split is the same static prefix rule
+``async_ttx`` applies (branch structure does not depend on TX values).
+``tests/test_model_batch.py`` cross-checks every workflow in the repo's
+zoo against the scalar implementations.  The NumPy backend is exact
+(same float64 ops in the same order); the jax backend runs at jax's
+configured precision (float32 unless ``jax_enable_x64``), so compare it
+with a float32-scale tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .dag import DAG
+from .model import tx_lookup_fn
+
+__all__ = ["BatchEqns", "staggered_async_ttx_batch", "jax_available"]
+
+
+def jax_available() -> bool:
+    """True when ``import jax`` succeeds (the container may gate it)."""
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def _segment_starts(seg_sizes: Sequence[int]) -> np.ndarray:
+    """``reduceat`` start offsets for contiguous segments of given sizes."""
+    return np.concatenate(([0], np.cumsum(seg_sizes)[:-1])).astype(np.int64)
+
+
+class BatchEqns:
+    """Eqns. 2-5 for one DG, batched over TX vectors.
+
+    Column order (``self.names``) is rank-group order with non-trunk
+    groups sub-sorted by branch id, so both stage maxima and (stage,
+    branch) pair maxima are contiguous segment reductions.  ``pack``
+    builds the ``(batch, n_sets)`` TX matrix from per-row lookups.
+
+    ``backend``: ``"numpy"`` (default; deterministic reference),
+    ``"jax"`` (jit-compiled; requires jax), or ``"auto"`` (jax when
+    importable, else numpy).
+    """
+
+    def __init__(self, dag: DAG, backend: str = "numpy"):
+        if backend == "auto":
+            backend = "jax" if jax_available() else "numpy"
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.g = dag
+
+        groups = dag.rank_groups()
+        branch_of = dag.branch_ids()
+        self.n_branches = len(set(branch_of.values()))
+
+        # -- trunk prefix: same static rule as model.async_ttx ------------
+        first_branch = (branch_of[groups[0][0]] if groups else 0)
+        trunk_groups: list[list[str]] = []
+        fork_groups: list[list[str]] = []
+        forked = False
+        for group in groups:
+            ids = {branch_of[n] for n in group}
+            if not forked and ids == {first_branch}:
+                trunk_groups.append(group)
+            else:
+                forked = True
+                fork_groups.append(sorted(group, key=lambda n: branch_of[n]))
+
+        # -- column order: trunk stages, then branch-sorted fork stages ---
+        self.names: list[str] = [n for g in trunk_groups for n in g]
+        self.names += [n for g in fork_groups for n in g]
+        self._col = {n: j for j, n in enumerate(self.names)}
+
+        # -- Eqn. 2: per-stage contiguous segments -------------------------
+        stage_sizes = [len(g) for g in trunk_groups + fork_groups]
+        self._stage_starts = _segment_starts(stage_sizes)
+        self._n_stages = len(stage_sizes)
+        self._n_trunk_stages = len(trunk_groups)
+        self._n_trunk_cols = sum(len(g) for g in trunk_groups)
+
+        # -- Eqn. 3/4: (stage, branch) pair segments + pair->branch sums ---
+        pair_sizes: list[int] = []
+        pair_branch: list[int] = []
+        for group in fork_groups:
+            j = 0
+            while j < len(group):
+                b = branch_of[group[j]]
+                k = j
+                while k < len(group) and branch_of[group[k]] == b:
+                    k += 1
+                pair_sizes.append(k - j)
+                pair_branch.append(b)
+                j = k
+        branch_ids = sorted(set(pair_branch))
+        b_idx = {b: i for i, b in enumerate(branch_ids)}
+        self._n_pairs = len(pair_sizes)
+        self._n_tail_branches = len(branch_ids)
+        self._pair_starts = (
+            self._n_trunk_cols + _segment_starts(pair_sizes)
+            if pair_sizes else np.zeros(0, dtype=np.int64))
+        #: 0/1 incidence (n_pairs, n_tail_branches): branch_tail = pairs @ M
+        self._pair2branch = np.zeros(
+            (self._n_pairs, self._n_tail_branches))
+        for p, b in enumerate(pair_branch):
+            self._pair2branch[p, b_idx[b]] = 1.0
+
+        self._jit_eval = None
+        if backend == "jax":
+            self._jit_eval = self._compile_jax()
+
+    # -- input marshalling -------------------------------------------------
+    def pack(
+        self,
+        txs: "Sequence[Mapping[str, float] | Callable[[str], float] | None]",
+    ) -> np.ndarray:
+        """Stack per-row TX lookups (mapping / callable / ``None`` for the
+        DG's static ``tx_mean`` priors) into a ``(batch, n_sets)`` matrix
+        in :attr:`names` column order."""
+        rows = []
+        for tx in txs:
+            fn = tx_lookup_fn(self.g, tx)
+            rows.append([fn(n) for n in self.names])
+        return np.asarray(rows, dtype=np.float64)
+
+    # -- numpy reference path ----------------------------------------------
+    def _eval_numpy(self, txs: np.ndarray,
+                    overhead_c: float) -> tuple[np.ndarray, np.ndarray]:
+        stage_max = np.maximum.reduceat(txs, self._stage_starts, axis=1)
+        t_seq = stage_max.sum(axis=1) + overhead_c
+        if self.n_branches <= 1 or self._n_pairs == 0:
+            return t_seq, t_seq.copy()
+        trunk = stage_max[:, :self._n_trunk_stages].sum(axis=1)
+        pair_max = np.maximum.reduceat(txs, self._pair_starts, axis=1)
+        branch_tail = pair_max @ self._pair2branch
+        t_async = trunk + branch_tail.max(axis=1) + overhead_c
+        return t_seq, t_async
+
+    # -- jax path: identical index program, jitted -------------------------
+    def _compile_jax(self):
+        import jax
+        import jax.numpy as jnp
+
+        # segment ids replace reduceat (which jax lacks): column -> stage,
+        # fork-suffix column -> (stage, branch) pair
+        stage_sizes = np.diff(np.concatenate(
+            (self._stage_starts, [len(self.names)]))).astype(np.int64)
+        stage_ids = jnp.asarray(np.repeat(
+            np.arange(self._n_stages), stage_sizes))
+        pair2branch = jnp.asarray(self._pair2branch)
+        n_trunk_cols = self._n_trunk_cols
+        n_trunk_stages = self._n_trunk_stages
+        n_stages, n_pairs = self._n_stages, self._n_pairs
+        single = self.n_branches <= 1 or n_pairs == 0
+        if not single:
+            pair_sizes = np.diff(np.concatenate(
+                (self._pair_starts, [len(self.names)]))).astype(np.int64)
+            pair_ids = jnp.asarray(np.repeat(
+                np.arange(n_pairs), pair_sizes))
+
+        @jax.jit
+        def run(txs, overhead_c):
+            stage_max = jax.ops.segment_max(
+                txs.T, stage_ids, num_segments=n_stages).T
+            t_seq = stage_max.sum(axis=1) + overhead_c
+            if single:
+                return t_seq, t_seq
+            trunk = stage_max[:, :n_trunk_stages].sum(axis=1)
+            pair_max = jax.ops.segment_max(
+                txs[:, n_trunk_cols:].T, pair_ids,
+                num_segments=n_pairs).T
+            branch_tail = pair_max @ pair2branch
+            t_async = trunk + branch_tail.max(axis=1) + overhead_c
+            return t_seq, t_async
+
+        return run
+
+    # -- public evaluators --------------------------------------------------
+    def sequential_ttx(self, txs: np.ndarray, overhead_c: float = 0.0,
+                       n_iterations: int = 1) -> np.ndarray:
+        """Eqn. 2 per batch row: ``n_iterations * sum_stage max + C``."""
+        txs = np.asarray(txs, dtype=np.float64)
+        if self.backend == "jax":
+            t_seq, _ = self._jit_eval(txs, 0.0)
+            t_seq = np.asarray(t_seq)
+        else:
+            stage_max = np.maximum.reduceat(txs, self._stage_starts, axis=1)
+            t_seq = stage_max.sum(axis=1)
+        return n_iterations * t_seq + overhead_c
+
+    def async_ttx(self, txs: np.ndarray,
+                  overhead_c: float = 0.0) -> np.ndarray:
+        """Eqn. 3 per batch row (single-branch DGs fall back to Eqn. 2,
+        matching the scalar evaluator)."""
+        return self.evaluate(txs, overhead_c)[1]
+
+    def evaluate(self, txs: np.ndarray, overhead_c: float = 0.0,
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(t_seq, t_async, improvement)`` arrays for a TX matrix —
+        one fused pass over the compiled structure (Eqns. 2-5)."""
+        txs = np.asarray(txs, dtype=np.float64)
+        if txs.ndim != 2 or txs.shape[1] != len(self.names):
+            raise ValueError(
+                f"expected (batch, {len(self.names)}) TX matrix, "
+                f"got {txs.shape}")
+        if self.backend == "jax":
+            t_seq, t_async = self._jit_eval(txs, overhead_c)
+            t_seq, t_async = np.asarray(t_seq), np.asarray(t_async)
+        else:
+            t_seq, t_async = self._eval_numpy(txs, overhead_c)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            improvement = 1.0 - t_async / t_seq
+        return t_seq, t_async, improvement
+
+
+def staggered_async_ttx_batch(stage_tx: np.ndarray, n: int,
+                              maskable: Sequence[bool],
+                              overhead_c: float = 0.0) -> np.ndarray:
+    """Eqns. 6/7 batched: ``stage_tx`` is ``(batch, n_stages)``; per row,
+    ``n * t_seq_one - sum_{maskable k >= 1} max(0, n - k) * t_k`` — the
+    closed form ``model.staggered_async_ttx`` computes per call, as one
+    matrix-vector product."""
+    stage_tx = np.asarray(stage_tx, dtype=np.float64)
+    mask = np.asarray(maskable, dtype=bool)
+    if stage_tx.ndim != 2 or mask.shape[0] != stage_tx.shape[1]:
+        raise ValueError("maskable mask must match stage axis")
+    k = np.arange(stage_tx.shape[1])
+    coef = np.where(mask & (k >= 1), np.maximum(0, n - k), 0).astype(
+        np.float64)
+    return n * stage_tx.sum(axis=1) - stage_tx @ coef + overhead_c

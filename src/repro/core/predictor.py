@@ -114,10 +114,25 @@ class MakespanPredictor:
 
     def __init__(self, dag: DAG, pool: "PoolSpec | Allocation",
                  tail_factor: float = 1.0, contention: bool = False,
-                 workflow_of: "Mapping[str, str] | None" = None):
+                 workflow_of: "Mapping[str, str] | None" = None,
+                 cache: bool = False):
         self.g = dag
         self.tail_factor = tail_factor
         self.alloc = as_allocation(pool)
+        #: opt-in whole-workflow (Eqn. 2-5) snapshot caching, keyed by the
+        #: invalidation epoch.  Only safe when ONE tx source ever calls
+        #: :meth:`predict` and every TX move goes through
+        #: :meth:`invalidate` — exactly the engine's contract
+        #: (``SchedEngine.observe``), so the engine constructs with
+        #: ``cache=True`` and standalone users keep uncached semantics.
+        self.cache = cache
+        #: bumped by :meth:`invalidate`; stamps the Eqn. 2-5 cache
+        self._tx_epoch = 0
+        #: set -> ((t, sigma, pending, slots), residual): self-invalidating
+        #: memo of the idle-set residual terms — ``repredict`` re-prices
+        #: only the sets whose inputs moved (dirty sets)
+        self._residual_memo: dict[str, tuple[tuple, float]] = {}
+        self._model_cache: "tuple | None" = None
         #: cross-set GPU contention term (see :meth:`_effective_slots`):
         #: enabled by the engine when the allocation carries node-level
         #: occupancy (``PoolSpec.node_level``), whose honest accounting is
@@ -195,13 +210,36 @@ class MakespanPredictor:
             total += min(lims) if lims else ts.num_tasks
         return max(1, min(ts.num_tasks, total))
 
+    # -- explicit cache invalidation (engine-driven) ------------------------
+    def invalidate(self, name: "str | None" = None) -> None:
+        """Drop the cached terms that depend on set ``name``'s TX (all
+        sets when ``None``): its memoized residual and the whole-workflow
+        Eqn. 2-5 snapshot.  The engine calls this from ``observe`` —
+        completions/observations are the only events that move a live TX,
+        so between them ``predict`` re-prices only dirty sets."""
+        self._tx_epoch += 1
+        self._model_cache = None
+        if name is None:
+            self._residual_memo.clear()
+        else:
+            self._residual_memo.pop(name, None)
+
     # -- Eqns. 2-6 on live TXs ---------------------------------------------
     def live_model(self, tx: TxFn) -> tuple[float, float, float]:
         """Whole-workflow Eqns. 2-5 with live TXs:
-        ``(t_seq, t_async, improvement)``."""
+        ``(t_seq, t_async, improvement)``.  With ``cache`` on, the
+        snapshot is reused until :meth:`invalidate` bumps the TX epoch
+        (no TX moved => bit-identical recomputation, skipped)."""
+        if self.cache:
+            c = self._model_cache
+            if c is not None and c[0] == self._tx_epoch:
+                return c[1], c[2], c[3]
         t_seq = sequential_ttx(self.g, tx=tx)
         t_async, _ = async_ttx(self.g, tx=tx)
-        return t_seq, t_async, relative_improvement(t_seq, t_async)
+        out = (t_seq, t_async, relative_improvement(t_seq, t_async))
+        if self.cache:
+            self._model_cache = (self._tx_epoch,) + out
+        return out
 
     def live_staggered(self, stage_names: Sequence[str], n: int,
                        maskable: Sequence[bool], tx: TxFn) -> float:
@@ -345,14 +383,25 @@ class MakespanPredictor:
             s = std(n)
             m = pending.get(n, 0)
             slots = self._effective_slots(n, pending, run_count, held)
-            full, last = divmod(m, slots)
-            r = full * self._wave_span(t, s, slots)
-            if last:
-                r += self._wave_span(t, s, last)
             k_run = run_count.get(n, 0)
-            if k_run:
-                r += (run_rem.get(n, 0.0)
-                      + self._wave_span(0.0, s, k_run))
+            key = (t, s, m, slots)
+            memo = self._residual_memo.get(n) if not k_run else None
+            if memo is not None and memo[0] == key:
+                # idle set with unchanged inputs: the pure wave-span terms
+                # recompute bit-identically, so serve the memo (dirty sets
+                # miss on the key — TX/pending/slots moved — or carry
+                # running tasks, whose elapsed changes every pass)
+                r = memo[1]
+            else:
+                full, last = divmod(m, slots)
+                r = full * self._wave_span(t, s, slots)
+                if last:
+                    r += self._wave_span(t, s, last)
+                if k_run:
+                    r += (run_rem.get(n, 0.0)
+                          + self._wave_span(0.0, s, k_run))
+                else:
+                    self._residual_memo[n] = (key, r)
             residual[n] = r
             work = m * t + run_work.get(n, 0.0)
             cpu_work += work * ts.cpus_per_task

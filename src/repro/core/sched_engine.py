@@ -132,14 +132,38 @@ live estimates at every scheduling pass and appends to
 ``SchedEngine.predictions`` (surfaced as ``SimResult.predictions`` /
 ``ExecResult.predictions``).
 
-Scheduling stays O(#ready sets x #pools) per dispatch round — all tasks of
-a set share one footprint — so the engine sustains the simulator's 10^5-task
-workloads unchanged.
+Incremental pass structures (default; ``incremental=False`` restores the
+brute-force scans)
+-------------------
+Pass cost is proportional to *what changed*, not to cluster size:
+
+- every (pool, footprint-class) pair — a footprint class is one distinct
+  strict ``(need_cpus, need_gpus)`` demand — keeps the set of nodes that
+  currently fit it, updated in O(#classes) whenever a node's occupancy
+  changes (``_acquire``/``_release``/``complete``), so ``_candidates`` is
+  O(#eligible pools) per task instead of O(#nodes);
+- ``largest_free_block`` reads a bucket-counted maximum over per-node
+  free-block sizes (O(1) query, O(block width) update);
+- the default *spread* node choice pops a lazy per-pool max-heap keyed by
+  ``(-free_gpus, -free_cpus, node)`` instead of scanning every node
+  (policies overriding ``choose_node`` still receive the indexed —
+  sorted, hence bit-identical — fitting-node list);
+- sets whose last offer found no candidate pool are *blocked* and skipped
+  by ``startable`` until an occupancy release flips one of their
+  footprint classes back to fitting (event-driven dirty tracking).
+
+Every structure agrees with a brute-force recount at all times
+(:meth:`SchedEngine.check_index_integrity`; property-tested in
+``tests/test_invariants.py``), and the dispatch sequence is bit-identical
+to the ``incremental=False`` scans — ``benchmarks/bench_engine_scale.py``
+asserts both, and gates decisions/sec at 10^4-10^5 tasks on 10^2-10^3
+nodes.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from collections import deque
 from typing import Sequence
@@ -441,6 +465,27 @@ def get_scheduling_policy(
             f"known: {sorted(SCHEDULING_POLICIES)}") from None
 
 
+@dataclasses.dataclass
+class _FitClass:
+    """Incremental fit state of one (pool, footprint-class) pair.
+
+    A footprint class is one distinct strict ``(need_cpus, need_gpus)``
+    demand on the pool (after oversubscription zeroing), shared by every
+    task set with that demand.  ``nodes`` is the live set of node indexes
+    that fit the class (``None`` on aggregate pools, where an O(1)
+    counter check replaces it); ``fits`` tracks the aggregate-counter fit
+    so a release can detect the unfit -> fit transition that unblocks the
+    class's waiting sets."""
+
+    need_c: int
+    need_g: int
+    fits: bool = True
+    #: node indexes currently fitting (node-level pools; None = aggregate)
+    nodes: "set[int] | None" = None
+    #: names of the task sets with this footprint on this pool
+    sets: list = dataclasses.field(default_factory=list)
+
+
 class SchedEngine:
     """Ready-queue, dependency and multi-pool resource bookkeeping.
 
@@ -465,7 +510,8 @@ class SchedEngine:
                  feedback: "FeedbackOptions | None" = None,
                  estimator: "TxEstimator | None" = None,
                  campaign: "CampaignView | None" = None,
-                 admission: "AdmissionOptions | None" = None):
+                 admission: "AdmissionOptions | None" = None,
+                 incremental: bool = True):
         self.g = g
         self.alloc = as_allocation(pool)
         # -- multi-workflow tenancy (core/workflow.py) ---------------------
@@ -507,6 +553,11 @@ class SchedEngine:
         self._spec_node_alloc: dict[tuple[str, int],
                                     tuple[int, list[tuple[int, int]]]] = {}
         self.policy = get_scheduling_policy(policy)
+        #: True while the policy keeps the base-class *spread* node choice
+        #: — only then may the engine serve it from the spread heap
+        #: (overriding policies get the indexed fitting-node list instead)
+        self._policy_spreads = (type(self.policy).choose_node
+                                is SchedulingPolicy.choose_node)
         self.task_level = task_level
 
         # -- runtime feedback (core/estimator.py) --------------------------
@@ -534,7 +585,7 @@ class SchedEngine:
         #: predictor even without runtime feedback
         self.predictor = (MakespanPredictor(
             g, self.alloc, contention=self._node_level_any,
-            workflow_of=self.workflow_of or None)
+            workflow_of=self.workflow_of or None, cache=True)
             if feedback is not None or admission is not None else None)
         self.predictions: list[MakespanPrediction] = []
 
@@ -602,6 +653,230 @@ class SchedEngine:
                 for i in range(g.node(n).num_tasks):
                     self.ready[n].append(i)
 
+        # -- incremental pass structures (module docstring section) --------
+        #: False restores the brute-force scans (the pre-index engine) —
+        #: kept for the scale benchmark's comparison arm and for the
+        #: index-vs-recount invariant suite
+        self.incremental = incremental
+        #: ready sets whose last offer found no candidate pool; skipped by
+        #: ``startable`` until a release unblocks one of their classes
+        self._blocked: set[str] = set()
+        if incremental:
+            self._build_indexes()
+
+    # -- incremental indexes (dirty tracking; module docstring section) -----
+    def _build_indexes(self) -> None:
+        """Build the per-(pool, footprint-class) fit indexes, the per-pool
+        free-block bucket counters and the lazy spread heaps from the
+        current occupancy (all free at construction)."""
+        n_pools = len(self.pools)
+        #: per pool: footprint class -> :class:`_FitClass`
+        self._classes: list[dict[tuple[int, int], _FitClass]] = [
+            {} for _ in range(n_pools)]
+        #: set name -> [(pool, class key, class entry)] over the pools the
+        #: set may be placed on (kind-eligible), ascending pool index —
+        #: the iteration order ``_candidates`` must reproduce
+        self._set_pools: dict[str, list] = {}
+        for n in self.order:
+            ts = self.g.node(n)
+            entries = []
+            for k, p in enumerate(self.pools):
+                if p.only_kinds is not None and ts.kind not in p.only_kinds:
+                    continue
+                cls = self._needs(k, ts)
+                ent = self._classes[k].get(cls)
+                if ent is None:
+                    ent = self._classes[k][cls] = _FitClass(*cls)
+                ent.sets.append(n)
+                entries.append((k, ent))
+            self._set_pools[n] = entries
+        #: per (node-level) pool: cached per-node largest_block values,
+        #: their bucket counts, and the running maximum
+        self._node_block: list["list[int] | None"] = [None] * n_pools
+        self._block_buckets: list["list[int] | None"] = [None] * n_pools
+        self._block_max: list[int] = [0] * n_pools
+        #: per (node-level) pool: lazy min-heap of (-free_gpus, -free_cpus,
+        #: node, version) — the default spread key; stale entries (version
+        #: mismatch) are dropped at query time
+        self._spread_heap: list["list | None"] = [None] * n_pools
+        self._node_ver: list["list[int] | None"] = [None] * n_pools
+        for k, states in enumerate(self.node_states):
+            if states is None:
+                for ent in self._classes[k].values():
+                    ent.fits = (ent.need_c <= self.free_cpus[k]
+                                and ent.need_g <= self.free_gpus[k])
+                continue
+            blocks = [ns.largest_block() for ns in states]
+            self._node_block[k] = blocks
+            buckets = [0] * (max(blocks, default=0) + 1)
+            for b in blocks:
+                buckets[b] += 1
+            self._block_buckets[k] = buckets
+            self._block_max[k] = max(blocks, default=0)
+            self._node_ver[k] = [0] * len(states)
+            heap = [(-ns.free_gpus, -ns.free_cpus, n, 0)
+                    for n, ns in enumerate(states)]
+            heapq.heapify(heap)
+            self._spread_heap[k] = heap
+            for ent in self._classes[k].values():
+                ent.nodes = {n for n, ns in enumerate(states)
+                             if ns.fits(ent.need_c, ent.need_g)}
+                ent.fits = bool(ent.nodes)
+
+    def _node_changed(self, k: int, node: int) -> None:
+        """One node of pool ``k`` changed occupancy: refresh its free-block
+        bucket, push its new spread-heap key, and move it in/out of every
+        footprint class's fit set — unblocking the class's waiting sets on
+        an empty -> non-empty transition."""
+        ns = self.node_states[k][node]
+        blocks = self._node_block[k]
+        b_new = ns.largest_block()
+        b_old = blocks[node]
+        if b_new != b_old:
+            buckets = self._block_buckets[k]
+            buckets[b_old] -= 1
+            buckets[b_new] += 1
+            blocks[node] = b_new
+            if b_new > self._block_max[k]:
+                self._block_max[k] = b_new
+            elif b_old == self._block_max[k] and not buckets[b_old]:
+                m = b_old
+                while m > 0 and not buckets[m]:
+                    m -= 1
+                self._block_max[k] = m
+        ver = self._node_ver[k]
+        ver[node] += 1
+        heapq.heappush(self._spread_heap[k],
+                       (-ns.free_gpus, -ns.free_cpus, node, ver[node]))
+        for ent in self._classes[k].values():
+            if ns.fits(ent.need_c, ent.need_g):
+                if node not in ent.nodes:
+                    if not ent.nodes and self._blocked:
+                        self._blocked.difference_update(ent.sets)
+                    ent.nodes.add(node)
+                    ent.fits = True
+            elif node in ent.nodes:
+                ent.nodes.discard(node)
+                ent.fits = bool(ent.nodes)
+
+    def _agg_freed(self, k: int) -> None:
+        """Aggregate pool ``k``'s free counters grew: flip any footprint
+        class that fits again and unblock its waiting sets.  (Node-level
+        pools are handled by :meth:`_node_changed` — a node fit implies
+        the aggregate fit there.)"""
+        fc, fg = self.free_cpus[k], self.free_gpus[k]
+        for ent in self._classes[k].values():
+            if not ent.fits and ent.need_c <= fc and ent.need_g <= fg:
+                ent.fits = True
+                if self._blocked:
+                    self._blocked.difference_update(ent.sets)
+
+    def _mark_blocked(self, name: str) -> None:
+        """Record that set ``name`` found no candidate pool: sync its
+        aggregate classes' ``fits`` flags to the current (necessarily
+        unfitting) counters so the next release detects the unfit -> fit
+        transition, then skip the set until one fires."""
+        for k, ent in self._set_pools[name]:
+            if ent.nodes is None:
+                ent.fits = (ent.need_c <= self.free_cpus[k]
+                            and ent.need_g <= self.free_gpus[k])
+        self._blocked.add(name)
+
+    def _spread_choose(self, k: int, need_c: int, need_g: int,
+                       exclude: int = -1) -> int:
+        """The default *spread* node choice served from the lazy per-pool
+        heap: the first live entry (in ``(-free_gpus, -free_cpus, node)``
+        order) whose node fits — identical to ``min`` over the fitting
+        nodes without scanning them all.  Returns -1 when nothing fits."""
+        states = self.node_states[k]
+        heap = self._spread_heap[k]
+        ver = self._node_ver[k]
+        popped = []
+        chosen = -1
+        while heap:
+            entry = heap[0]
+            n = entry[2]
+            if entry[3] != ver[n]:
+                heapq.heappop(heap)  # superseded by a newer occupancy key
+                continue
+            if n != exclude and states[n].fits(need_c, need_g):
+                chosen = n
+                break
+            popped.append(heapq.heappop(heap))  # live, but not eligible
+        for entry in popped:
+            heapq.heappush(heap, entry)
+        if len(heap) > 64 and len(heap) > 4 * len(states):
+            # compact away accumulated stale entries
+            heap[:] = [(-ns.free_gpus, -ns.free_cpus, n, ver[n])
+                       for n, ns in enumerate(states)]
+            heapq.heapify(heap)
+        return chosen
+
+    def check_index_integrity(self) -> None:
+        """Assert every incremental structure equals a brute-force recount
+        of the live occupancy (the invariant the property suite drives
+        random engine operation against).  Raises ``AssertionError`` with
+        the first divergence; no-op side-effect-wise."""
+        if not self.incremental:
+            raise AssertionError("index integrity needs incremental=True")
+        for k, states in enumerate(self.node_states):
+            if states is None:
+                fc, fg = self.free_cpus[k], self.free_gpus[k]
+                for cls, ent in self._classes[k].items():
+                    want = ent.need_c <= fc and ent.need_g <= fg
+                    if ent.fits and not want:
+                        # stale True is only legal while no blocked set
+                        # relies on the transition (synced at block time)
+                        if any(n in self._blocked for n in ent.sets):
+                            raise AssertionError(
+                                f"pool {k} class {cls}: fits=True with "
+                                f"blocked waiters but counters disagree")
+                    elif not ent.fits and want:
+                        raise AssertionError(
+                            f"pool {k} class {cls}: fits=False but "
+                            f"counters fit (missed unblock)")
+                continue
+            blocks = [ns.largest_block() for ns in states]
+            if self._node_block[k] != blocks:
+                raise AssertionError(
+                    f"pool {k}: cached node blocks {self._node_block[k]} "
+                    f"!= recount {blocks}")
+            if self._block_max[k] != max(blocks, default=0):
+                raise AssertionError(
+                    f"pool {k}: block max {self._block_max[k]} != "
+                    f"{max(blocks, default=0)}")
+            buckets = [0] * len(self._block_buckets[k])
+            for b in blocks:
+                buckets[b] += 1
+            if self._block_buckets[k] != buckets:
+                raise AssertionError(
+                    f"pool {k}: block buckets {self._block_buckets[k]} "
+                    f"!= recount {buckets}")
+            for cls, ent in self._classes[k].items():
+                fit = {n for n, ns in enumerate(states)
+                       if ns.fits(ent.need_c, ent.need_g)}
+                if ent.nodes != fit:
+                    raise AssertionError(
+                        f"pool {k} class {cls}: fit index {ent.nodes} "
+                        f"!= recount {fit}")
+                if ent.fits != bool(fit):
+                    raise AssertionError(
+                        f"pool {k} class {cls}: fits={ent.fits} but "
+                        f"recount says {bool(fit)}")
+                want = (min(fit, key=lambda n: (-states[n].free_gpus,
+                                                -states[n].free_cpus, n))
+                        if fit else -1)
+                got = self._spread_choose(k, ent.need_c, ent.need_g)
+                if got != want:
+                    raise AssertionError(
+                        f"pool {k} class {cls}: spread heap chose {got}, "
+                        f"brute force {want}")
+        for name in self._blocked:
+            cands = self._candidates_scan(self.g.node(name))
+            if cands:
+                raise AssertionError(
+                    f"set {name!r} is blocked but pools {cands} fit it")
+
     # -- state queries ------------------------------------------------------
     def done(self) -> bool:
         return self._n_done >= self._n_total
@@ -616,21 +891,30 @@ class SchedEngine:
     # -- node-level topology ------------------------------------------------
     def fitting_nodes(self, k: int, ts: TaskSet) -> list[int]:
         """Nodes of pool ``k`` that can start one task of ``ts`` now
-        (empty for aggregate pools)."""
+        (empty for aggregate pools).  Served from the footprint-class fit
+        index (sorted, so the order matches the brute-force scan) when
+        ``incremental``."""
         states = self.node_states[k]
         if states is None:
             return []
         need_c, need_g = self._needs(k, ts)
+        if self.incremental:
+            ent = self._classes[k].get((need_c, need_g))
+            if ent is not None:
+                return sorted(ent.nodes)
         return [n for n, ns in enumerate(states) if ns.fits(need_c, need_g)]
 
     def largest_free_block(self, k: int) -> int:
         """Largest contiguous free GPU block of pool ``k`` — for a
         node-level pool the widest free NVLink group across its nodes
         (``nodepack``'s fragmentation score); for an aggregate pool the
-        free GPU count (one conceptual block)."""
+        free GPU count (one conceptual block).  O(1) off the bucket
+        counters when ``incremental``."""
         states = self.node_states[k]
         if states is None:
             return self.free_gpus[k]
+        if self.incremental:
+            return self._block_max[k]
         return max((ns.largest_block() for ns in states), default=0)
 
     def node_placement(self, name: str, i: int) -> int:
@@ -663,10 +947,21 @@ class SchedEngine:
     def _choose_node(self, k: int, ts: TaskSet,
                      exclude: int = -1) -> int:
         """Pick the node of pool ``k`` the task lands on (policy hook;
-        ``exclude`` bars the straggler's own node for migrations)."""
+        ``exclude`` bars the straggler's own node for migrations).
+
+        Returns -1 when no node fits — the policy is never handed an
+        empty candidate list (every ``choose_node`` implementation is a
+        ``min`` over the nodes and would raise on ``[]``, which used to
+        crash straggler migration when ``exclude`` removed the only
+        fitting node); callers treat -1 as "no placement" and no-op."""
+        if self.incremental and self._policy_spreads:
+            need_c, need_g = self._needs(k, ts)
+            return self._spread_choose(k, need_c, need_g, exclude)
         nodes = self.fitting_nodes(k, ts)
         if exclude >= 0:
             nodes = [n for n in nodes if n != exclude]
+        if not nodes:
+            return -1
         return self.policy.choose_node(ts, k, nodes, self)
 
     def _acquire(self, k: int, ts: TaskSet,
@@ -683,7 +978,14 @@ class SchedEngine:
             return None
         if node < 0 or not states[node].fits(need_c, need_g):
             node = self._choose_node(k, ts)
+        if node < 0:
+            raise RuntimeError(
+                f"no node of pool {self.pools[k].name!r} fits "
+                f"({need_c} cpus, {need_g} gpus) — caller skipped the "
+                f"candidate check")
         takes = states[node].acquire(need_c, need_g)
+        if self.incremental:
+            self._node_changed(k, node)
         return node, takes
 
     def _release(self, k: int, ts: TaskSet,
@@ -696,6 +998,10 @@ class SchedEngine:
         if node_alloc is not None:
             node, takes = node_alloc
             self.node_states[k][node].release(need_c, takes)
+            if self.incremental:
+                self._node_changed(k, node)
+        elif self.incremental and self.node_states[k] is None:
+            self._agg_freed(k)
 
     # -- runtime feedback ---------------------------------------------------
     def tx_estimate(self, name: str, pool: "int | None" = None) -> float:
@@ -735,16 +1041,25 @@ class SchedEngine:
             # clip against the pool split's own mean once it is armed — a
             # genuinely slow pool must not have its observations capped at
             # a multiple of the faster cross-pool blend, or its estimate
-            # saturates low and its tasks read as permanent stragglers
+            # saturates low and its tasks read as permanent stragglers.
+            # A non-positive armed mean (all-zero durations) must not
+            # clip, or every later observation is pinned to zero forever
             if (pname is not None and
                     self.estimator.count(name, pool=pname)
                     >= fb.min_samples):
-                duration = min(duration, fb.winsorize_ratio
-                               * self.estimator.mean(name, pool=pname))
+                m = self.estimator.mean(name, pool=pname)
+                if m > 0:
+                    duration = min(duration, fb.winsorize_ratio * m)
             elif self.estimator.count(name) >= fb.min_samples:
-                duration = min(duration,
-                               fb.winsorize_ratio * self.estimator.mean(name))
+                m = self.estimator.mean(name)
+                if m > 0:
+                    duration = min(duration, fb.winsorize_ratio * m)
         self.estimator.observe(name, duration, pool=pname, raw=raw)
+        if self.predictor is not None:
+            # explicit cache invalidation: this set's live TX moved, so
+            # its memoized residual terms and the whole-workflow Eqn. 2-5
+            # snapshot must be re-priced on the next prediction
+            self.predictor.invalidate(name)
         # only TX-ordering policies need the priority rebuilt; fifo/
         # gpu_bestfit/locality orderings cannot change with estimates
         if self.policy.uses_tx:
@@ -799,14 +1114,14 @@ class SchedEngine:
         for k in self._candidates(ts):
             if k == src:
                 # same-pool migration: only onto a DIFFERENT node of a
-                # node-level pool (moving within one node is a no-op)
+                # node-level pool (moving within one node is a no-op).
+                # ``exclude`` may leave no fitting node at all — then the
+                # migration is a priced no-op, not a policy crash
                 if self.node_states[k] is None:
                     continue
-                nodes = [n for n in self.fitting_nodes(k, ts)
-                         if n != src_node]
-                if not nodes:
+                node = self._choose_node(k, ts, exclude=src_node)
+                if node < 0:
                     continue
-                node = self.policy.choose_node(ts, k, nodes, self)
                 cost = self.alloc.transfer(src, k, src_node, node)
             else:
                 node = (self._choose_node(k, ts)
@@ -1105,6 +1420,26 @@ class SchedEngine:
                 0 if p.oversubscribe_gpus else ts.gpus_per_task)
 
     def _candidates(self, ts: TaskSet) -> list[int]:
+        """Pools that can start one task of ``ts`` right now.  The
+        incremental path reads the footprint-class indexes — O(#eligible
+        pools) with no node scan; the node fit implies the aggregate fit
+        (a node's free counters are bounded by the pool's)."""
+        if not self.incremental:
+            return self._candidates_scan(ts)
+        out = []
+        for k, ent in self._set_pools[ts.name]:
+            if ent.nodes is not None:
+                if not ent.nodes:
+                    continue
+            elif (ent.need_c > self.free_cpus[k]
+                    or ent.need_g > self.free_gpus[k]):
+                continue
+            out.append(k)
+        return out
+
+    def _candidates_scan(self, ts: TaskSet) -> list[int]:
+        """Brute-force candidate scan (the pre-index implementation; the
+        integrity checker's and scale benchmark's reference)."""
         out = []
         for k, p in enumerate(self.pools):
             if p.only_kinds is not None and ts.kind not in p.only_kinds:
@@ -1114,8 +1449,9 @@ class SchedEngine:
                 continue
             # fragmentation honesty: a node-level pool must have ONE node
             # that fits the task — aggregate co-fit alone is not placement
-            if self.node_states[k] is not None \
-                    and not self.fitting_nodes(k, ts):
+            states = self.node_states[k]
+            if states is not None and not any(
+                    ns.fits(need_c, need_g) for ns in states):
                 continue
             out.append(k)
         return out
@@ -1312,10 +1648,17 @@ class SchedEngine:
                 continue  # workflow not arrived yet
             if self.admission is not None and name not in self.admitted:
                 continue  # admission-deferred (re-priced next pass)
+            if name in self._blocked:
+                # nothing was released towards any of this set's footprint
+                # classes since its last no-candidate offer — re-scanning
+                # would find nothing (event-driven dirty tracking)
+                continue
             ts = self.g.node(name)
             while q:
                 cands = self._candidates(ts)
                 if not cands:
+                    if self.incremental:
+                        self._mark_blocked(name)
                     break
                 i = q.popleft()
                 if (name, i) in self.finished or (name, i) in self.launched:
@@ -1334,12 +1677,17 @@ class SchedEngine:
                 out.append((name, i, k))
         return out
 
-    def complete(self, name: str, i: int) -> int:
+    def complete(self, name: str, i: int, *, spec_won: bool = False) -> int:
         """Mark task ``(name, i)`` finished: release its pool's resources,
         decrement dependency counters, enqueue newly-ready tasks.  Returns
-        the pool index the task ran on (the *original* attempt's pool; a
-        racing speculative duplicate's slot is released too — the caller
-        knows which attempt actually won).  Idempotent per task (duplicate
+        the pool index of the *winning* attempt — the original's, or the
+        speculative duplicate's when the caller passes ``spec_won=True``
+        (both attempts' slots are released either way; the loser is
+        cancelled by the substrate).  With ``spec_won`` the engine also
+        records the duplicate's pool/node as the task's final placement
+        (``pool_of``/``node_of``), so children's node-granular data costs
+        price pulls from where the output actually lives instead of from
+        the cancelled original's node.  Idempotent per task (duplicate
         completions — straggler mitigation — are no-ops)."""
         if (name, i) in self.finished:
             return self.pool_of.get((name, i), 0)
@@ -1354,10 +1702,22 @@ class SchedEngine:
         if node_alloc is not None:
             node, takes = node_alloc
             self.node_states[k][node].release(need_c, takes)
+            if self.incremental:
+                self._node_changed(k, node)
+        elif self.incremental and self.node_states[k] is None:
+            self._agg_freed(k)
         spec = self._spec_pool.pop((name, i), None)
+        spec_node_alloc = self._spec_node_alloc.pop((name, i), None)
         if spec is not None:  # the losing attempt's slot is freed with it
-            self._release(spec, ts, self._spec_node_alloc.pop((name, i),
-                                                              None))
+            self._release(spec, ts, spec_node_alloc)
+            if spec_won:
+                # the duplicate finished first: its placement is where the
+                # task's output lives — without this the cancelled
+                # original's stale entry mispriced the children's pulls
+                self.pool_of[(name, i)] = k = spec
+                self.node_of[(name, i)] = (spec_node_alloc[0]
+                                           if spec_node_alloc is not None
+                                           else -1)
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1

@@ -296,7 +296,10 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
             attempt_start, k = spec
             node = engine.spec_node(name, i)
             running.pop((name, i), None)
-            engine.complete(name, i)
+            # spec_won records the duplicate's pool/node as the task's
+            # final placement (children's data costs must price pulls
+            # from where the output actually lives)
+            engine.complete(name, i, spec_won=True)
             won_by_dup = True
         else:
             attempt_start = running.pop((name, i))

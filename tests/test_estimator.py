@@ -323,3 +323,112 @@ def test_lognormal_durations_have_heavier_tail_same_mean():
     mean = lambda xs: sum(xs) / len(xs)
     assert mean(dl) == pytest.approx(mean(dn), rel=0.15)   # same mean mu
     assert max(dl) > max(dn) * 1.5                         # heavy tail
+
+
+# ---------------------------------------------------------------------------
+# degenerate-history edges: 1-sample windows, identical durations,
+# zero means — tail/winsorize paths must fall back, never divide or pin
+# ---------------------------------------------------------------------------
+
+def test_tail_ratio_single_sample_window_returns_none():
+    """A 1-sample raw window cannot define a tail — even when the caller
+    lowers ``min_count`` to 1 the floor of 2 holds."""
+    est = TxEstimator()
+    est.observe("s", 10.0)
+    assert est.tail_ratio("s") is None
+    assert est.tail_ratio("s", min_count=1) is None
+    assert est.tail_ratio("s", min_count=0) is None
+    assert est.tail_ratio("missing") is None
+
+
+def test_tail_ratio_two_samples_rounds_index_up():
+    """The quantile index rounds UP, so a 2-sample window reads the max —
+    a lone outlier must not be ignored merely because history is short."""
+    est = TxEstimator(alpha=0.5)
+    est.observe("s", 10.0)
+    est.observe("s", 40.0)      # EWMA mean = 25.0
+    assert est.tail_ratio("s", q=0.95, min_count=2) == 40.0 / 25.0
+    # even a mid quantile hits the last slot on 2 samples: ceil(0.5) = 1
+    assert est.tail_ratio("s", q=0.5, min_count=2) == 40.0 / 25.0
+
+
+def test_tail_ratio_identical_durations_clamps_to_one():
+    """All-identical history: the observed tail IS the mean, clamped to
+    1.0 — and the sigma-underflow straggler guard still requires the
+    min-ratio excess before flagging."""
+    est = TxEstimator()
+    for _ in range(5):
+        est.observe("s", 10.0)
+    assert est.tail_ratio("s") == 1.0
+    assert est.std("s") == 0.0
+    fb = FeedbackOptions(min_samples=3, straggler_k=3.0,
+                         straggler_min_ratio=1.5)
+    # sigma collapsed to 0: mean + k*sigma == mean, so ANY runtime above
+    # the mean passes the first test — the ratio guard must hold the line
+    assert not est.is_straggler("s", 10.0 + 1e-9, fb)
+    assert not est.is_straggler("s", 14.9, fb)
+    assert est.is_straggler("s", 15.1, fb)
+
+
+def test_tail_ratio_zero_mean_returns_none():
+    """All-zero durations: mean is 0, the ratio is undefined — None, not
+    a ZeroDivisionError."""
+    est = TxEstimator()
+    for _ in range(4):
+        est.observe("s", 0.0)
+    assert est.mean("s") == 0.0
+    assert est.tail_ratio("s") is None
+
+
+def test_engine_tail_ratio_degenerate_calibration_falls_back():
+    """Engine-level ``tail_ratio`` with online calibration on: before the
+    window arms it returns the static default; with an all-identical
+    window the observed 1.0 is floored at ``straggler_min_ratio``."""
+    g = DAG()
+    g.add(TaskSet("s", 4, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    fb = FeedbackOptions(min_samples=3, calibrate_tail=True,
+                         straggler_tail_ratio=4.0, straggler_min_ratio=1.5)
+    eng = SchedEngine(g, _two_pools(), feedback=fb)
+    eng.observe("s", 10.0)
+    assert eng.tail_ratio("s") == 4.0          # window not armed yet
+    for _ in range(4):
+        eng.observe("s", 10.0)
+    assert eng.tail_ratio("s") == 1.5          # 1.0 floored at min ratio
+
+
+def test_winsorize_zero_mean_does_not_pin_estimates():
+    """An armed all-zero mean must not clip later observations to zero:
+    without the guard every subsequent duration would winsorize to
+    ``ratio * 0 = 0`` and the estimate could never leave the floor."""
+    g = DAG()
+    g.add(TaskSet("s", 8, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    fb = FeedbackOptions(min_samples=1, winsorize_ratio=4.0, per_pool=False)
+    eng = SchedEngine(g, _two_pools(), feedback=fb)
+    eng.observe("s", 0.0)                      # arms the estimate at 0.0
+    eng.observe("s", 100.0)                    # must enter unclipped
+    assert eng.tx_estimate("s") > 0.0
+    # the same guard holds on the per-pool split
+    fb2 = FeedbackOptions(min_samples=1, winsorize_ratio=4.0, per_pool=True)
+    eng2 = SchedEngine(g, _two_pools(), feedback=fb2)
+    eng2.observe("s", 0.0, pool=0)
+    eng2.observe("s", 100.0, pool=0)
+    assert eng2.tx_estimate("s", pool=0) > 0.0
+
+
+def test_expected_remaining_degenerate_inputs():
+    """The PR-5 div-by-zero fix must cover every degenerate input the
+    tail-ratio path can feed: zero mean, zero sigma, zero elapsed."""
+    from repro.core import MakespanPredictor
+    g = DAG()
+    g.add(TaskSet("s", 1, 1, 0, tx_mean=10.0, tx_sigma=0.0))
+    pred = MakespanPredictor(g, PoolSpec("p", 1, NodeSpec(cpus=4, gpus=0)))
+    assert pred.expected_remaining(0.0, 0.0, 5.0) == 0.0
+    assert pred.expected_remaining(0.0, 3.0, 5.0) == 0.0
+    assert pred.expected_remaining(10.0, 0.0, 4.0) == 6.0
+    assert pred.expected_remaining(10.0, 3.0, 0.0) == 10.0
+    # far in the tail: finite, never below the heavy-tail linear floor
+    far = pred.expected_remaining(10.0, 3.0, 1e6)
+    assert far == 3.0
+    # the arbiter's baseline uses tail_ratio * mean: degenerate means
+    # price to zero cleanly rather than raising
+    assert pred.straggler_baseline(0.0, 5.0, 4.0) == 0.0

@@ -471,3 +471,97 @@ def test_admission_deferral_conserves_and_completes(seed, arrival):
     wide_start = min(r.start for r in res.workflow_records("wide"))
     stream_last = max(r.start for r in res.workflow_records("stream"))
     assert wide_start >= stream_last - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# 14-15: incremental engine — indexes equal brute force, and the fast path
+# is bit-identical to the scan path
+# ---------------------------------------------------------------------------
+
+def _drive_random_ops(engines, rng, after_step, max_steps=2000):
+    """Drive engines in lockstep through random startable / migrate /
+    speculate / arbitrate / complete sequences, calling ``after_step``
+    after every mutation.  Returns once every engine is drained."""
+    running = []
+    for _ in range(max_steps):
+        outs = [eng.startable() for eng in engines]
+        assert all(o == outs[0] for o in outs[1:]), outs
+        for name, i, _k in outs[0]:
+            running.append((name, i))
+        after_step()
+        if not running:
+            break
+        idx = rng.randrange(len(running))
+        name, i = running[idx]
+        op = rng.randint(0, 3)
+        rets = []
+        for eng in engines:
+            if op == 1:
+                rets.append(eng.try_migrate(name, i))
+            elif op == 2:
+                rets.append(eng.try_speculate(name, i))
+            elif op == 3:
+                rets.append(eng.arbitrate(name, i, elapsed=13.7))
+            else:
+                rets.append(eng.complete(name, i))
+        if op == 0:
+            running.pop(idx)
+        assert all(r == rets[0] for r in rets[1:]), (op, rets)
+        after_step()
+        if engines[0].done() and not running:
+            break
+    for (name, i) in running:
+        rets = [eng.complete(name, i) for eng in engines]
+        assert all(r == rets[0] for r in rets[1:]), rets
+    after_step()
+    for eng in engines:
+        assert eng.done()
+
+
+def _mitigation_engine(g, mode, policy, incremental=True):
+    from repro.core import SchedEngine
+    eng = SchedEngine(g, make_pool(mode), policy=policy,
+                      feedback=FeedbackOptions(straggler_k=2.0,
+                                               min_samples=1,
+                                               speculate=True),
+                      incremental=incremental)
+    for n in g.nodes:
+        eng.observe(n, g.node(n).tx_mean)
+    return eng
+
+
+@pytest.mark.parametrize("mode", POOL_MODES)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=6, deadline=None)
+@given(g=random_dags(max_nodes=5), seed=st.integers(0, 5))
+def test_incremental_indexes_match_brute_force(policy, mode, g, seed):
+    """The incremental fit classes, free-block buckets, spread heap, and
+    blocked-set tracking must equal a brute-force recount after EVERY
+    mutation of a random acquire/release/migrate/speculate/complete
+    sequence (``SchedEngine.check_index_integrity`` does the recount)."""
+    import random as _random
+    rng = _random.Random(seed)
+    eng = _mitigation_engine(g, mode, policy)
+    eng.check_index_integrity()
+    _drive_random_ops([eng], rng, eng.check_index_integrity)
+
+
+@pytest.mark.parametrize("mode", POOL_MODES)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=6, deadline=None)
+@given(g=random_dags(max_nodes=5), seed=st.integers(0, 5))
+def test_incremental_engine_bit_identical_to_scan(policy, mode, g, seed):
+    """Incremental and brute-force-scan engines driven in lockstep emit
+    the same dispatch decisions, mitigation outcomes, and placements at
+    every step — the indexes change the cost of a pass, never its
+    result."""
+    import random as _random
+    rng = _random.Random(seed)
+    engines = [_mitigation_engine(g, mode, policy, incremental=inc)
+               for inc in (True, False)]
+
+    def same_placements():
+        assert engines[0].node_of == engines[1].node_of
+        assert engines[0].pool_of == engines[1].pool_of
+
+    _drive_random_ops(engines, rng, same_placements)

@@ -1,0 +1,119 @@
+"""Batch Eqn. 2-6 evaluation (``core/model_batch.py``) vs the scalar
+reference implementations in ``core/model.py``.
+
+The NumPy backend must be *bit-identical* to the scalar evaluators (same
+float64 operations in the same order); the jax backend is the same index
+program at jax's configured precision, so it gets a float32-scale
+tolerance.  Both are checked over the repo's whole workflow zoo and over
+randomized TX batches.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchEqns, async_ttx, cdg_dag, deepdrivemd_dag,
+                        fig2a_chain, fig2b_fork, fig2b_with_paper_tx,
+                        fig2d_independent, jax_available, sequential_ttx,
+                        staggered_async_ttx, staggered_async_ttx_batch)
+
+ZOO = {
+    "fig2a": fig2a_chain,
+    "fig2b": fig2b_fork,
+    "fig2b_paper": fig2b_with_paper_tx,
+    "fig2d": fig2d_independent,
+    "cdg1": lambda: cdg_dag("c-DG1"),
+    "cdg2": lambda: cdg_dag("c-DG2"),
+    "ddmd": deepdrivemd_dag,
+}
+
+
+def _tx_batch(g, rows=8, seed=0):
+    """Static priors + ``rows`` random perturbations of them."""
+    rng = np.random.default_rng(seed)
+    return [None] + [
+        {n: g.node(n).tx_mean * float(rng.uniform(0.5, 2.0))
+         for n in g.topological_order()}
+        for _ in range(rows)]
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_numpy_backend_bit_identical(name):
+    g = ZOO[name]()
+    be = BatchEqns(g)
+    assert be.backend == "numpy"
+    txs = _tx_batch(g)
+    t_seq, t_async, imp = be.evaluate(be.pack(txs))
+    ref_seq = np.array([sequential_ttx(g, tx=tx) for tx in txs])
+    ref_async = np.array([async_ttx(g, tx=tx)[0] for tx in txs])
+    assert np.array_equal(t_seq, ref_seq)
+    assert np.array_equal(t_async, ref_async)
+    assert np.array_equal(imp, 1.0 - ref_async / ref_seq)
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_jax_backend_matches(name):
+    if not jax_available():
+        pytest.skip("jax not importable in this environment")
+    g = ZOO[name]()
+    be = BatchEqns(g, backend="jax")
+    txs = _tx_batch(g)
+    t_seq, t_async, _ = be.evaluate(be.pack(txs))
+    ref_seq = np.array([sequential_ttx(g, tx=tx) for tx in txs])
+    ref_async = np.array([async_ttx(g, tx=tx)[0] for tx in txs])
+    assert np.allclose(t_seq, ref_seq, rtol=1e-5)
+    assert np.allclose(t_async, ref_async, rtol=1e-5)
+
+
+def test_auto_backend_resolves():
+    g = fig2b_fork()
+    be = BatchEqns(g, backend="auto")
+    assert be.backend == ("jax" if jax_available() else "numpy")
+    with pytest.raises(ValueError):
+        BatchEqns(g, backend="tpu")
+
+
+def test_single_branch_falls_back_to_sequential():
+    g = fig2a_chain()
+    be = BatchEqns(g)
+    assert be.n_branches == 1
+    txs = be.pack(_tx_batch(g, rows=4, seed=1))
+    t_seq, t_async, imp = be.evaluate(txs)
+    assert np.array_equal(t_seq, t_async)
+    assert np.array_equal(imp, np.zeros_like(imp))
+
+
+def test_overheads_and_iterations():
+    g = fig2b_fork()
+    be = BatchEqns(g)
+    txs = be.pack([None])
+    assert be.sequential_ttx(txs, overhead_c=7.0, n_iterations=3)[0] == (
+        sequential_ttx(g, overhead_c=0.0, n_iterations=3) + 7.0)
+    assert be.async_ttx(txs, overhead_c=5.0)[0] == (
+        async_ttx(g, overhead_c=5.0)[0])
+
+
+def test_pack_column_order_covers_every_set():
+    g = cdg_dag("c-DG2")
+    be = BatchEqns(g)
+    assert sorted(be.names) == sorted(g.topological_order())
+    # pack accepts mappings, callables, and None interchangeably
+    fn_row = be.pack([lambda n: 2.0])[0]
+    assert np.array_equal(fn_row, np.full(len(be.names), 2.0))
+
+
+def test_shape_validation():
+    be = BatchEqns(fig2b_fork())
+    with pytest.raises(ValueError):
+        be.evaluate(np.zeros((2, len(be.names) + 1)))
+
+
+def test_staggered_batch_matches_scalar():
+    rng = np.random.default_rng(3)
+    st = rng.uniform(1, 10, size=(16, 4))
+    mask = [False, True, True, False]
+    got = staggered_async_ttx_batch(st, 3, mask, overhead_c=1.5)
+    ref = np.array([staggered_async_ttx(list(r), 3, mask, overhead_c=1.5)
+                    for r in st])
+    assert np.allclose(got, ref, rtol=0, atol=1e-9)
+    with pytest.raises(ValueError):
+        staggered_async_ttx_batch(st, 3, [True])

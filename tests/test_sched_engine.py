@@ -725,3 +725,247 @@ def test_execution_policy_carries_scheduling_to_both_substrates():
     pol2 = ExecutionPolicy().with_scheduling("gpu_bestfit")
     assert pol2.simulate(g, pool, options=_no_noise()).policy == "gpu_bestfit"
     assert gpu_bestfit_policy().scheduling == "gpu_bestfit"
+
+
+# ---------------------------------------------------------------------------
+# migration with no alternative node: priced no-op, never a policy crash
+# ---------------------------------------------------------------------------
+
+from repro.core import SCHEDULING_POLICIES  # noqa: E402
+
+EVERY_POLICY = tuple(sorted(SCHEDULING_POLICIES))
+
+
+def _single_node_engine(policy):
+    """One node-level pool with ONE node: any same-pool migration must
+    exclude the straggler's own node, leaving zero candidates."""
+    alloc = Allocation("solo", (
+        PoolSpec("p0", 1, NodeSpec(cpus=8, gpus=2), node_level=True),),
+        transfer_cost=((0.0,),))
+    g = DAG()
+    g.add(TaskSet("s", 2, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, policy=policy,
+                      feedback=FeedbackOptions(min_samples=1, migrate=True,
+                                               speculate=False))
+    eng.observe("s", 10.0)
+    return eng
+
+
+@pytest.mark.parametrize("policy", EVERY_POLICY)
+@pytest.mark.parametrize("incremental", (True, False))
+def test_migration_with_no_alternative_node_is_priced_noop(policy,
+                                                           incremental):
+    """``exclude`` removes the only fitting node: ``_choose_node`` must
+    report -1 (not hand ``policy.choose_node`` an empty list) and the
+    migration must decline cleanly for EVERY registered policy."""
+    eng = _single_node_engine(policy)
+    eng.incremental = incremental and eng.incremental
+    started = eng.startable()
+    assert started, policy
+    name, i, k = started[0]
+    ts = eng.g.node(name)
+    src_node = eng.node_placement(name, i)
+    assert src_node == 0
+    # the direct query: the only node excluded -> -1, no policy call
+    assert eng._choose_node(k, ts, exclude=src_node) == -1
+    # the end-to-end path: migration is a priced no-op
+    assert eng.try_migrate(name, i) is None
+    assert eng.migrations == 0
+    eng.complete(name, i)
+
+
+@pytest.mark.parametrize("policy", EVERY_POLICY)
+def test_choose_node_exclude_with_alternative_still_places(policy):
+    """Control arm: with a second fitting node, exclusion reroutes the
+    migration instead of declining it."""
+    alloc = Allocation("duo", (
+        PoolSpec("p0", 2, NodeSpec(cpus=8, gpus=2), node_level=True),),
+        transfer_cost=((1.0,),))
+    g = DAG()
+    g.add(TaskSet("s", 1, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, policy=policy,
+                      feedback=FeedbackOptions(min_samples=1, migrate=True,
+                                               speculate=False))
+    eng.observe("s", 10.0)
+    (name, i, k), = eng.startable()
+    src_node = eng.node_placement(name, i)
+    chosen = eng._choose_node(k, eng.g.node(name), exclude=src_node)
+    assert chosen >= 0 and chosen != src_node
+    mig = eng.try_migrate(name, i)
+    assert mig is not None
+    assert eng.node_placement(name, i) != src_node
+    eng.complete(name, i)
+
+
+# ---------------------------------------------------------------------------
+# speculation losers must not clobber the winner's node placement
+# ---------------------------------------------------------------------------
+
+
+def _two_node_spec_engine():
+    alloc = Allocation("spec2", (
+        PoolSpec("p0", 2, NodeSpec(cpus=4, gpus=0), node_level=True),),
+        transfer_cost=((1.0,),))
+    g = DAG()
+    g.add(TaskSet("s", 1, 2, 0, tx_mean=10.0, tx_sigma=0.0))
+    g.add(TaskSet("c", 1, 2, 0, tx_mean=5.0, tx_sigma=0.0))
+    g.add_edge("s", "c")
+    eng = SchedEngine(g, alloc,
+                      feedback=FeedbackOptions(min_samples=1, migrate=False,
+                                               speculate=True))
+    eng.observe("s", 10.0)
+    return eng
+
+
+def test_spec_winner_on_other_node_updates_node_of():
+    """The duplicate wins on a different node: ``node_of`` must point at
+    the duplicate's node (children price data pulls from where the output
+    actually lives)."""
+    eng = _two_node_spec_engine()
+    (name, i, _k), = eng.startable()
+    orig_node = eng.node_placement(name, i)
+    assert eng.try_speculate(name, i) is not None
+    dup_node = eng.spec_node(name, i)
+    assert dup_node >= 0 and dup_node != orig_node
+    eng.complete(name, i, spec_won=True)
+    assert eng.node_of[(name, i)] == dup_node
+    assert (name, i) not in eng._spec_node_alloc
+
+
+def test_spec_loser_does_not_overwrite_winner_placement():
+    """The duplicate loses (original finishes first): the stale
+    ``_spec_node_alloc`` entry must NOT leak into ``node_of`` — children
+    would otherwise price pulls from a node that never produced the
+    output."""
+    eng = _two_node_spec_engine()
+    (name, i, _k), = eng.startable()
+    orig_node = eng.node_placement(name, i)
+    assert eng.try_speculate(name, i) is not None
+    dup_node = eng.spec_node(name, i)
+    assert dup_node != orig_node
+    eng.complete(name, i)          # original wins; loser cancelled
+    assert eng.node_of[(name, i)] == orig_node
+    assert (name, i) not in eng._spec_node_alloc
+    assert eng.spec_node(name, i) == -1
+    # both slots freed exactly once
+    assert eng.free_cpus == [8]
+    # the late loser completion stays a no-op
+    done = eng._n_done
+    eng.complete(name, i)
+    assert eng._n_done == done and eng.node_of[(name, i)] == orig_node
+
+
+# ---------------------------------------------------------------------------
+# incremental indexes: seeded in-container variants of the hypothesis
+# properties (tests/test_invariants.py runs the full random exploration)
+# ---------------------------------------------------------------------------
+
+
+def _rand_dag(rng):
+    g = DAG()
+    n = rng.randint(2, 6)
+    for j in range(n):
+        g.add(TaskSet(name=f"N{j}", num_tasks=rng.randint(1, 4),
+                      cpus_per_task=rng.randint(1, 8),
+                      gpus_per_task=rng.randint(0, 2),
+                      tx_mean=float(rng.randint(5, 50)), tx_sigma=0.0))
+    for j in range(1, n):
+        for i in range(j):
+            if rng.randint(0, 3) == 0:
+                g.add_edge(f"N{i}", f"N{j}")
+    return g
+
+
+def _inv_alloc(mode):
+    nl = mode == "node_level"
+    return Allocation("inv", (
+        PoolSpec("p0", 2, NodeSpec(cpus=16, gpus=4, nvlink_groups=2),
+                 node_level=nl),
+        PoolSpec("p1", 1, NodeSpec(cpus=32, gpus=2, nvlink_groups=2),
+                 node_level=nl),
+    ), transfer_cost=((0.0, 2.0), (2.0, 0.0)))
+
+
+def _drive(engines, rng, after_step):
+    running = []
+    for _ in range(2000):
+        outs = [eng.startable() for eng in engines]
+        assert all(o == outs[0] for o in outs[1:])
+        running.extend((n, i) for n, i, _k in outs[0])
+        after_step()
+        if not running:
+            break
+        idx = rng.randrange(len(running))
+        name, i = running[idx]
+        op = rng.randint(0, 3)
+        rets = []
+        for eng in engines:
+            if op == 1:
+                rets.append(eng.try_migrate(name, i))
+            elif op == 2:
+                rets.append(eng.try_speculate(name, i))
+            elif op == 3:
+                rets.append(eng.arbitrate(name, i, elapsed=13.7))
+            else:
+                rets.append(eng.complete(name, i))
+        if op == 0:
+            running.pop(idx)
+        assert all(r == rets[0] for r in rets[1:])
+        after_step()
+        if engines[0].done() and not running:
+            break
+    for (name, i) in running:
+        rets = [eng.complete(name, i) for eng in engines]
+        assert all(r == rets[0] for r in rets[1:])
+    after_step()
+    assert all(eng.done() for eng in engines)
+
+
+@pytest.mark.parametrize("mode", ("aggregate", "node_level"))
+@pytest.mark.parametrize("policy", ("gpu_bestfit", "locality", "nodepack"))
+def test_incremental_index_integrity_seeded(mode, policy):
+    """Seeded walk: every incremental structure equals a brute-force
+    recount after every engine mutation."""
+    import random
+    for seed in range(3):
+        rng = random.Random(1000 * seed + 7)
+        eng = SchedEngine(_rand_dag(rng), _inv_alloc(mode), policy=policy,
+                          feedback=FeedbackOptions(straggler_k=2.0,
+                                                   min_samples=1,
+                                                   speculate=True))
+        for n in eng.g.nodes:
+            eng.observe(n, eng.g.node(n).tx_mean)
+        eng.check_index_integrity()
+        _drive([eng], rng, eng.check_index_integrity)
+
+
+@pytest.mark.parametrize("mode", ("aggregate", "node_level"))
+@pytest.mark.parametrize("policy", EVERY_POLICY)
+def test_incremental_bit_identical_to_scan_seeded(mode, policy):
+    """Seeded lockstep: the incremental engine and the brute-force-scan
+    engine emit identical decisions and placements at every step."""
+    import random
+    for seed in range(2):
+        rng = random.Random(1000 * seed + 13)
+        g = _rand_dag(rng)
+        fb = FeedbackOptions(straggler_k=2.0, min_samples=1, speculate=True)
+        engines = [SchedEngine(g, _inv_alloc(mode), policy=policy,
+                               feedback=fb, incremental=inc)
+                   for inc in (True, False)]
+        for eng in engines:
+            for n in g.nodes:
+                eng.observe(n, g.node(n).tx_mean)
+
+        def same():
+            assert engines[0].node_of == engines[1].node_of
+            assert engines[0].pool_of == engines[1].pool_of
+
+        _drive(engines, rng, same)
+
+
+def test_scan_engine_rejects_integrity_check():
+    g = fig2a_chain()
+    eng = SchedEngine(g, PoolSpec("p", 1, NodeSpec(cpus=8, gpus=2)),
+                      incremental=False)
+    with pytest.raises(AssertionError):
+        eng.check_index_integrity()

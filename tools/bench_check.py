@@ -31,7 +31,14 @@ Failure conditions:
      partitioning on weighted slowdown (``admission.json``: per-seed
      dominance on the 3-workflow Summit campaign), the deferral arm
      still engages and wins, and one-workflow campaigns stay
-     bit-identical to the committed single-workflow baselines.
+     bit-identical to the committed single-workflow baselines;
+   - the incremental engine still pays off (``engine_scale.json``:
+     >= 10x decisions/sec over the brute-force-scan arm at the largest
+     scale point, per-decision pass latency sublinear in node count,
+     and the two arms' dispatch sequences identical).  Timing values in
+     that file are machine-dependent and are NOT drift-compared (none
+     of its keys contain ``makespan``); only the fresh headline flags
+     gate.
 
 Exits non-zero with a list of problems; wired into CI after the bench
 targets.  To accept an intentional change, regenerate the baseline:
@@ -167,6 +174,23 @@ def check_headlines(name, fresh, problems):
                     f"{name}: deferral seed {seed}: admission-on weighted "
                     f"slowdown ({on!r}) lost to admission-off ({off!r})")
         check_identity(name, fresh, problems, "one-workflow campaign")
+    if name == "engine_scale.json":
+        hl = fresh.get("headlines", {})
+        speedup = hl.get("speedup_largest")
+        if speedup is None or speedup < 10.0:
+            problems.append(
+                f"{name}: incremental engine speedup at the largest scale "
+                f"point is {speedup!r} decisions/sec over the scan arm "
+                f"(needs >= 10x)")
+        if not hl.get("sublinear"):
+            problems.append(
+                f"{name}: indexed per-decision pass latency no longer "
+                f"sublinear in node count (grew "
+                f"{hl.get('sublinear_ratio')!r}x over 10x nodes)")
+        if not hl.get("dispatch_identity"):
+            problems.append(
+                f"{name}: incremental and brute-force-scan arms no longer "
+                f"emit identical dispatch sequences")
 
 
 def main() -> int:
