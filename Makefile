@@ -3,8 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all test-cov bench-policies bench-feedback \
         bench-predictor bench-topology bench-admission \
-        bench-engine-scale bench-check bench-paper docs-check lint \
-        format-check
+        bench-engine-scale bench-faults bench-check bench-paper \
+        docs-check lint format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -50,6 +50,13 @@ bench-admission:
 ## nodes)
 bench-engine-scale:
 	$(PY) benchmarks/bench_engine_scale.py
+
+## fault tolerance: priced recovery arbitration beating both pure arms
+## on the c-DG2 failure-storm scenario, hazard-aware re-prediction, and
+## the FaultOptions-disabled bit-identity check against committed
+## baselines
+bench-faults:
+	$(PY) benchmarks/bench_faults.py
 
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost

@@ -51,6 +51,27 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def restore_latest(template, directory: str, shardings=None):
+    """Restore the newest *complete* checkpoint, or ``None`` when the
+    directory holds none.  Only ``step_<n>.npz`` files count — a crash
+    mid-write leaves a ``tmp.<step>`` artifact (and possibly a stale
+    ``tmp.<step>.npz`` never renamed), which must never be restored; a
+    finalized-but-unreadable archive falls back to the next-newest step.
+    Returns ``(step, tree)``."""
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted((int(m.group(1)) for f in os.listdir(directory)
+                    if (m := re.match(r"step_(\d+)\.npz$", f))),
+                   reverse=True)
+    for step in steps:
+        try:
+            return step, restore_pytree(template, directory, step,
+                                        shardings=shardings)
+        except (OSError, ValueError, KeyError):
+            continue  # truncated/corrupt archive: try the older snapshot
+    return None
+
+
 def restore_pytree(template, directory: str, step: int, shardings=None):
     """Restore into the structure of ``template``; if ``shardings`` is
     given, place each leaf with it (elastic re-sharding)."""

@@ -8,10 +8,11 @@ from .resources import (Allocation, NodeSpec, NodeState, PoolSpec, Resources,
                         as_allocation, doa_res, hybrid_pool, node_states,
                         summit_pool, tpu_pod_pool, wla)
 from .sched_engine import (SCHEDULING_POLICIES, AdmissionOptions,
-                           CampaignPriority, FifoBackfill, GpuAwareBestFit,
-                           LargestTxFirst, LocalityAware, NodePackTopology,
-                           SchedEngine, SchedulingPolicy, SetInfo,
-                           get_scheduling_policy)
+                           CampaignPriority, FailureEvent, FifoBackfill,
+                           GpuAwareBestFit, LargestTxFirst, LocalityAware,
+                           NodePackTopology, SchedEngine, SchedulingPolicy,
+                           SetInfo, get_scheduling_policy)
+from ..runtime.fault import FailureSchedule, FaultOptions
 from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     maskable_stages, predict, relative_improvement,
                     sequential_ttx, sequential_ttx_grouped,

@@ -152,6 +152,7 @@ class TxEstimator:
         self._est: dict[str, SetEstimate] = {}
         self._pool_est: dict[tuple[str, str], SetEstimate] = {}
         self._raw: dict[str, deque] = {}
+        self._failures: dict[str, int] = {}
 
     # -- updates -----------------------------------------------------------
     def _fold(self, est: "dict", key, duration: float) -> SetEstimate:
@@ -185,6 +186,25 @@ class TxEstimator:
                      pool: "str | None" = None) -> None:
         for d in durations:
             self.observe(name, d, pool=pool)
+
+    def record_failure(self, name: str) -> None:
+        """Count one failed attempt of ``name`` (node loss or software
+        fault).  Failed attempts never reach :meth:`observe` — their
+        truncated durations would bias the EWMA — so failures are tracked
+        separately and surfaced via :meth:`failure_rate`."""
+        self._failures[name] = self._failures.get(name, 0) + 1
+
+    def failures(self, name: str) -> int:
+        return self._failures.get(name, 0)
+
+    def failure_rate(self, name: str) -> float:
+        """Observed per-attempt failure fraction: failures over total
+        attempts (failures + successful completions).  0.0 before any
+        attempt of the set has been seen."""
+        f = self._failures.get(name, 0)
+        e = self._est.get(name)
+        n = f + (e.count if e is not None else 0)
+        return f / n if n > 0 else 0.0
 
     # -- queries -----------------------------------------------------------
     def _lookup(self, name: str,

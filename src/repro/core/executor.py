@@ -42,6 +42,8 @@ through the shared engine.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import math
 import random
 import threading
 import time
@@ -55,6 +57,7 @@ from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
 from .simulator import Mode, TaskRecord, per_pool_task_counts
 from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
                        weighted_slowdown)
+from ..runtime.fault import FailureSchedule, FaultOptions
 
 
 @dataclasses.dataclass
@@ -77,6 +80,16 @@ class ExecResult:
     workflows: "dict[str, WorkflowStats] | None" = None
     #: task sets the admission controller deferred at least once
     admission_deferrals: int = 0
+    #: fault injection (``faults=FaultOptions(...)``): applied node losses,
+    #: software task failures, and the recovery arms taken per failure
+    node_failures: int = 0
+    task_failures: int = 0
+    recoveries_restart: int = 0
+    recoveries_rerun: int = 0
+    #: proactive at-risk replications launched (``FaultOptions.replicate``)
+    replications: int = 0
+    #: the engine's failure trace: (time, kind, detail...) tuples
+    fault_log: list = dataclasses.field(default_factory=list)
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -122,6 +135,7 @@ class RealExecutor:
             scheduling: "str | SchedulingPolicy" = "fifo",
             feedback: "FeedbackOptions | None" = None,
             admission: "AdmissionOptions | None" = None,
+            faults: "FaultOptions | None" = None,
             ) -> ExecResult:
         view: "CampaignView | None" = None
         if isinstance(dag, Campaign):
@@ -140,7 +154,14 @@ class RealExecutor:
         rng = random.Random(self.seed)
         engine = SchedEngine(g, self.pool, policy=scheduling,
                              task_level=task_level, feedback=feedback,
-                             campaign=view, admission=admission)
+                             campaign=view, admission=admission,
+                             faults=faults)
+        faults = engine.faults  # disabled options normalized to None
+        schedule = (FailureSchedule(faults,
+                                    [(k, p.num_nodes)
+                                     for k, p in enumerate(engine.pools)],
+                                    [p.name for p in engine.pools])
+                    if faults is not None else None)
 
         durations: dict[tuple[str, int], float] = {}
         for name in engine.order:
@@ -163,23 +184,34 @@ class RealExecutor:
         #: wall start of the FIRST attempt (task records span the task)
         first_start: dict[tuple[str, int], float] = {}
         #: attempt generation; a migration bumps it, invalidating the
-        #: preempted attempt's completion (same scheme as the simulator)
+        #: preempted attempt's completion (same scheme as the simulator).
+        #: Under faults a failure of the primary attempt bumps it too.
         gen: dict[tuple[str, int], int] = {}
+        #: speculative-attempt generation: bumped to invalidate a racing
+        #: duplicate whose node died (``FailureEvent.cancelled``) without
+        #: touching the primary's ``gen``
+        spec_gen: dict[tuple[str, int], int] = {}
+        #: duplicates promoted to primary (their primary's node died):
+        #: the spec worker completes the task as the primary instead
+        promoted_keys: set[tuple[str, int]] = set()
         t0 = time.perf_counter()
 
         def preemptible_sleep(name: str, i: int, my_gen: int,
-                              seconds: float) -> bool:
+                              seconds: float, spec: bool = False) -> bool:
             """Sleep that wakes early when the attempt is preempted (gen
             bumped) or another attempt already finished the task, so an
             abandoned synthetic attempt does not hold its worker slot for
             the full straggler duration.  True = slept to completion,
             False = superseded.  (Real payloads cannot be interrupted this
             way — they run to completion and their stale result is
-            discarded at the completion check.)"""
+            discarded at the completion check.)  Speculative attempts
+            check their own generation (``spec_gen``): a primary-side
+            failure must not abort the replica racing to replace it."""
             deadline = time.perf_counter() + seconds
+            g_of = spec_gen if spec else gen
             with cv:
                 while True:
-                    if (my_gen != gen.get((name, i), 0)
+                    if (my_gen != g_of.get((name, i), 0)
                             or (name, i) in engine.finished):
                         return False
                     remaining = deadline - time.perf_counter()
@@ -187,15 +219,45 @@ class RealExecutor:
                         return True
                     cv.wait(timeout=remaining)
 
+        def apply_failure_event(ev) -> None:
+            """Invalidate the worker attempts a FailureEvent superseded
+            (caller holds ``cv``).  Failed primaries bump ``gen`` (their
+            synthetic sleeps wake and abort; the engine already re-enqueued
+            the task); a promoted replica's primary dies the same way but
+            the replica keeps racing and will complete as the primary; a
+            cancelled replica bumps ``spec_gen`` only."""
+            for key in ev.failed:
+                gen[key] = gen.get(key, 0) + 1
+                spec_gen[key] = spec_gen.get(key, 0) + 1
+                promoted_keys.discard(key)
+                started.pop(key, None)
+            for key in ev.promoted:
+                gen[key] = gen.get(key, 0) + 1
+                promoted_keys.add(key)
+                started.pop(key, None)
+            for key in ev.cancelled:
+                spec_gen[key] = spec_gen.get(key, 0) + 1
+            cv.notify_all()
+
+        #: tasks that were straggler-migrated (the record flag; under
+        #: faults ``gen`` is also bumped by failures)
+        mig_tasks: set[tuple[str, int]] = set()
+
+        def valid(name: str, i: int, my_gen: int, spec: bool) -> bool:
+            """Is this attempt still the live one? (caller holds ``cv``)"""
+            if (name, i) in engine.finished:
+                return False
+            g_of = spec_gen if spec else gen
+            return my_gen == g_of.get((name, i), 0)
+
         def body(name: str, i: int, pool_idx: int, my_gen: int,
                  migration_cost: float = 0.0,
                  rerun_tx: float = 0.0,
-                 spec: bool = False) -> None:
+                 spec: bool = False,
+                 fail_frac: "float | None" = None) -> None:
             ts = g.node(name)
             with cv:
-                if (name, i) in engine.finished:
-                    return  # another attempt already finished the task
-                if not spec and my_gen != gen.get((name, i), 0):
+                if not valid(name, i, my_gen, spec):
                     return  # superseded while still queued
                 first_start.setdefault((name, i),
                                        time.perf_counter() - t0)
@@ -205,9 +267,7 @@ class RealExecutor:
                 # data movement for a migrated or speculative re-run
                 time.sleep(migration_cost * self.tx_scale)
             with cv:
-                if (name, i) in engine.finished:
-                    return
-                if not spec and my_gen != gen.get((name, i), 0):
+                if not valid(name, i, my_gen, spec):
                     return
                 # straggler/estimator clock starts when the WORK starts:
                 # raw launch latency and migration/data cost must not read
@@ -219,12 +279,29 @@ class RealExecutor:
                     started[(name, i)] = work_start
             if ts.payload is not None:
                 ts.payload(i)
-            elif spec or my_gen:
+            elif not spec and fail_frac is not None:
+                # seeded software failure: the attempt dies at fail_frac
+                # of its run and the engine re-enqueues (or promotes)
+                if not preemptible_sleep(name, i, my_gen,
+                                         fail_frac * rerun_tx
+                                         * self.tx_scale):
+                    return
+                with cv:
+                    if not valid(name, i, my_gen, spec=False):
+                        return
+                    nowm = (time.perf_counter() - t0) / self.tx_scale
+                    ev = engine.fail_task(name, i, now=nowm,
+                                          elapsed=fail_frac * rerun_tx)
+                    if ev is not None:
+                        apply_failure_event(ev)
+                return
+            elif spec or my_gen or faults is not None:
                 # migrated or speculative re-run (regardless of the
                 # fabric's cost): a fresh attempt at the TX estimate read
-                # at mitigation time
+                # at mitigation time.  Under faults every dispatch passes
+                # its recovery/checkpoint-adjusted duration this way.
                 if not preemptible_sleep(name, i, my_gen,
-                                         rerun_tx * self.tx_scale):
+                                         rerun_tx * self.tx_scale, spec):
                     return
             else:
                 if not preemptible_sleep(name, i, my_gen,
@@ -233,21 +310,28 @@ class RealExecutor:
                     return
             end = time.perf_counter() - t0
             with cv:
-                if (name, i) in engine.finished:
-                    return  # lost the race against the other attempt
-                if not spec and my_gen != gen.get((name, i), 0):
-                    return  # preempted + migrated; a newer attempt owns it
+                if not valid(name, i, my_gen, spec):
+                    return  # lost the race / preempted; not ours anymore
+                won_promoted = spec and (name, i) in promoted_keys
                 attempt_start = (work_start if spec
                                  else started.pop((name, i), end))
                 if spec:
                     started.pop((name, i), None)
                 start = first_start.pop((name, i), attempt_start)
                 # node id must be read before complete() frees the slot
-                node = (engine.spec_node(name, i) if spec
-                        else engine.node_placement(name, i))
-                # a winning duplicate's placement becomes the task's final
-                # one (children's data costs price the actual output node)
-                engine.complete(name, i, spec_won=spec)
+                if won_promoted:
+                    # the replica became the primary when the original's
+                    # node died: finish the task as the primary attempt
+                    promoted_keys.discard((name, i))
+                    node = engine.node_placement(name, i)
+                    engine.complete(name, i)
+                else:
+                    node = (engine.spec_node(name, i) if spec
+                            else engine.node_placement(name, i))
+                    # a winning duplicate's placement becomes the task's
+                    # final one (children's data costs price the actual
+                    # output node)
+                    engine.complete(name, i, spec_won=spec)
                 # observe in MODELLED seconds (wall / tx_scale) so the
                 # estimates stay commensurate with the tx_mean priors and
                 # the allocation's transfer costs
@@ -255,37 +339,77 @@ class RealExecutor:
                                pool=pool_idx)
                 records.append(TaskRecord(name, i, start, end,
                                           ts.cpus_per_task, ts.gpus_per_task,
-                                          duplicate=spec,
+                                          duplicate=spec and not won_promoted,
                                           pool=engine.pool_name(pool_idx),
-                                          migrated=(name, i) in gen,
+                                          migrated=(name, i) in mig_tasks,
                                           node=node,
                                           workflow=wf_of.get(name, "")))
                 cv.notify_all()
 
         # the watchdog needs a mitigation that can actually fire: migration
         # needs a second pool; speculation only needs a free slot, so it
-        # keeps the watchdog alive even on single-pool allocations
+        # keeps the watchdog alive even on single-pool allocations.
+        # Proactive replication rides the same cadence.
         watchdog = (feedback is not None
                     and (feedback.speculate
                          or (feedback.migrate and len(engine.pools) > 1)))
+        replicating = faults is not None and faults.replicate
+        #: next node-failure event from the shared schedule (modelled s)
+        next_fail = (schedule.next_node_failure()
+                     if schedule is not None else None)
+        #: pending node recoveries: (modelled time, pool, node) heap
+        recoveries: list[tuple[float, int, int]] = []
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
                 while not engine.done():
                     # backfill: start everything ready that fits.  The
                     # pass runs on the modelled clock (see observe) so
                     # campaign arrivals gate on the same time base as the
-                    # simulator's
+                    # simulator's — and so do failure/recovery events
                     now = (time.perf_counter() - t0) / self.tx_scale
+                    while recoveries and recoveries[0][0] <= now:
+                        _, rk, rn = heapq.heappop(recoveries)
+                        engine.recover_node(rk, rn, now=now)
+                    while (next_fail is not None and next_fail[0] <= now
+                           and not engine.done()):
+                        _, fk, fn = next_fail
+                        modelled = {k: v / self.tx_scale
+                                    for k, v in started.items()}
+                        ev = engine.fail_node(fk, fn, now=now,
+                                              started=modelled)
+                        if ev is not None:
+                            apply_failure_event(ev)
+                            if math.isfinite(faults.node_recovery_time):
+                                heapq.heappush(
+                                    recoveries,
+                                    (now + faults.node_recovery_time,
+                                     fk, fn))
+                        next_fail = schedule.next_node_failure()
                     batch = engine.startable(now)
                     for name, i, pool_idx in batch:
-                        ex.submit(body, name, i, pool_idx, 0)
+                        if faults is None:
+                            ex.submit(body, name, i, pool_idx, 0)
+                            continue
+                        d = engine.dispatch_duration(
+                            name, i, durations[(name, i)], pool_idx)
+                        frac = schedule.attempt_failure(
+                            name, i, engine.attempt_number(name, i))
+                        ex.submit(body, name, i, pool_idx,
+                                  gen.get((name, i), 0), 0.0, d, False,
+                                  frac)
                     if not engine.done() and not batch:
                         # with mitigation on, the wait doubles as the
                         # straggler watchdog cadence; a pending campaign
-                        # arrival bounds the sleep so its dispatch pass
-                        # is not missed
-                        timeout = 0.05 if watchdog else 5.0
+                        # arrival (or fault/recovery event) bounds the
+                        # sleep so its dispatch pass is not missed
+                        timeout = 0.05 if (watchdog or replicating) else 5.0
                         nxt = next((a for a in arrivals if a > now), None)
+                        if next_fail is not None:
+                            nxt = (next_fail[0] if nxt is None
+                                   else min(nxt, next_fail[0]))
+                        if recoveries:
+                            nxt = (recoveries[0][0] if nxt is None
+                                   else min(nxt, recoveries[0][0]))
                         if nxt is not None:
                             timeout = min(timeout, max(
                                 0.0, (nxt - now) * self.tx_scale) + 1e-3)
@@ -303,6 +427,7 @@ class RealExecutor:
                             kind, dst, cost = act
                             if kind == "migrate":
                                 gen[(sn, si)] = gen.get((sn, si), 0) + 1
+                                mig_tasks.add((sn, si))
                                 # straggler clock pauses until the re-run's
                                 # worker stamps its own start
                                 started.pop((sn, si), None)
@@ -314,9 +439,21 @@ class RealExecutor:
                                 cv.notify_all()
                             else:  # speculate: a duplicate races the task
                                 ex.submit(body, sn, si, dst,
-                                          gen.get((sn, si), 0), cost,
+                                          spec_gen.get((sn, si), 0), cost,
                                           engine.tx_estimate(sn, pool=dst),
                                           True)
+                    if replicating:
+                        # proactively duplicate at-risk tasks onto another
+                        # node through the speculation machinery
+                        for (rn2, ri2) in engine.at_risk(modelled, now):
+                            rep = engine.try_replicate(rn2, ri2)
+                            if rep is None:
+                                continue
+                            dst, cost = rep
+                            ex.submit(body, rn2, ri2, dst,
+                                      spec_gen.get((rn2, ri2), 0), cost,
+                                      engine.tx_estimate(rn2, pool=dst),
+                                      True)
                     # online makespan re-prediction (core/predictor.py)
                     engine.repredict(now, modelled)
 
@@ -338,4 +475,10 @@ class RealExecutor:
                           speculations=engine.speculations,
                           predictions=engine.predictions,
                           workflows=workflows,
-                          admission_deferrals=engine.admission_deferrals)
+                          admission_deferrals=engine.admission_deferrals,
+                          node_failures=engine.node_failures,
+                          task_failures=engine.task_failures,
+                          recoveries_restart=engine.recoveries_restart,
+                          recoveries_rerun=engine.recoveries_rerun,
+                          replications=engine.replications,
+                          fault_log=engine.fault_log)

@@ -157,6 +157,37 @@ class MakespanPredictor:
         #: sets related by a dependency path (ancestors/descendants/self):
         #: those can NEVER contend — only order-unrelated sets co-run
         self._related = {n: self._related_sets(n) for n in self._order}
+        #: hazard-of-failure term (set via :meth:`set_hazard` by the
+        #: engine when fault injection is on; 0 = exact pre-fault bound)
+        self.hazard_rate = 0.0
+        #: set -> (interval, write, read) checkpoint params, or None —
+        #: decides which failure-inflation model prices the set's waves
+        self.ckpt_of: "Callable[[str], tuple | None] | None" = None
+
+    def set_hazard(self, rate: float,
+                   ckpt_of: "Callable[[str], tuple | None] | None" = None,
+                   ) -> None:
+        """Arm the residual bound's hazard-of-failure term: ``rate`` is
+        the per-attempt per-second failure hazard, ``ckpt_of`` resolves a
+        set's checkpoint params (None = the set re-runs from scratch)."""
+        self.hazard_rate = rate
+        self.ckpt_of = ckpt_of
+
+    def _hazard_adjust(self, t: float, name: str) -> float:
+        """Expected completion time of a ``t``-second task under Poisson
+        failures at ``hazard_rate``: the classic ``(e^(lam t) - 1)/lam``
+        restart-from-scratch inflation, or — when the set checkpoints
+        every ``c`` seconds — the write overhead plus ``lam*t`` expected
+        failures each losing half an interval + one read-back."""
+        lam = self.hazard_rate
+        if lam <= 0.0 or t <= 0.0:
+            return t
+        ck = self.ckpt_of(name) if self.ckpt_of is not None else None
+        if ck is not None:
+            c, w, r = ck
+            return (t + math.floor(t / c) * w
+                    + lam * t * (c / 2.0 + r))
+        return math.expm1(min(lam * t, 50.0)) / lam
 
     def _related_sets(self, name: str) -> set[str]:
         out = {name}
@@ -368,8 +399,13 @@ class MakespanPredictor:
         run_rem: dict[str, float] = {}
         run_work: dict[str, float] = {}
         run_count: dict[str, int] = {}
+        hazard = self.hazard_rate > 0.0
         for (name, _i), elapsed in running_elapsed.items():
             rem = self.expected_remaining(tx(name), std(name), elapsed)
+            if hazard:
+                # the remaining work is itself at risk of being lost and
+                # re-run — the same inflation the pending waves pay
+                rem = self._hazard_adjust(rem, name)
             run_rem[name] = max(run_rem.get(name, 0.0), rem)
             run_work[name] = run_work.get(name, 0.0) + rem
             run_count[name] = run_count.get(name, 0) + 1
@@ -380,6 +416,8 @@ class MakespanPredictor:
         for n in self._order:
             ts = self.g.node(n)
             t = tx(n)
+            if hazard:
+                t = self._hazard_adjust(t, n)
             s = std(n)
             m = pending.get(n, 0)
             slots = self._effective_slots(n, pending, run_count, held)

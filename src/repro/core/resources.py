@@ -126,6 +126,8 @@ class NodeState:
     free_gpus: int = -1
     #: free GPUs per NVLink group (contiguity domains)
     group_free: list[int] = dataclasses.field(default_factory=list)
+    #: node lost to a failure: fits nothing until :meth:`restore`
+    down: bool = False
 
     def __post_init__(self):
         if self.free_cpus < 0:
@@ -137,7 +139,29 @@ class NodeState:
                                for _ in range(self.spec.nvlink_groups)]
 
     def fits(self, need_cpus: int, need_gpus: int) -> bool:
-        return need_cpus <= self.free_cpus and need_gpus <= self.free_gpus
+        return (not self.down and need_cpus <= self.free_cpus
+                and need_gpus <= self.free_gpus)
+
+    def fail(self) -> tuple[int, int]:
+        """Take the node down; returns the (cpus, gpus) that were still
+        free (the engine removes them from the aggregate view).  The
+        caller must have released/failed every task placed here first."""
+        lost = (self.free_cpus, self.free_gpus)
+        self.down = True
+        self.free_cpus = 0
+        self.free_gpus = 0
+        self.group_free = [0] * self.spec.nvlink_groups
+        return lost
+
+    def restore(self) -> tuple[int, int]:
+        """Bring a failed node back, fully idle; returns the (cpus, gpus)
+        capacity being re-added to the aggregate view."""
+        self.down = False
+        self.free_cpus = self.cpus
+        self.free_gpus = self.spec.gpus
+        self.group_free = [self.spec.gpus_per_group
+                           for _ in range(self.spec.nvlink_groups)]
+        return (self.cpus, self.spec.gpus)
 
     def best_group(self, need_gpus: int) -> "int | None":
         """Tightest single NVLink group with ``need_gpus`` free, or

@@ -168,6 +168,7 @@ import math
 from collections import deque
 from typing import Sequence
 
+from ..runtime.fault import FaultOptions
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions, TxEstimator
 from .predictor import MakespanPrediction, MakespanPredictor
@@ -217,6 +218,29 @@ class SetInfo:
     priority: int = 0
     #: workflow arrival time (campaign runs; 0.0 otherwise)
     arrival: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """What a :meth:`SchedEngine.fail_node` / :meth:`~SchedEngine.fail_task`
+    call did, for the substrate to mirror onto its attempt bookkeeping:
+
+    - ``failed`` — attempts whose slots were released and whose tasks were
+      re-enqueued (the substrate invalidates their in-flight events);
+    - ``promoted`` — tasks whose primary attempt died but whose replica /
+      speculative duplicate survives on another node: the duplicate's slot
+      became the primary allocation, the task is NOT re-enqueued, and the
+      substrate re-labels the duplicate's completion as the primary's;
+    - ``cancelled`` — tasks whose *duplicate* died while the primary keeps
+      running: the duplicate's slot was released, nothing re-enqueued.
+    """
+
+    kind: str  # "node" | "task"
+    pool: int = -1
+    node: int = -1
+    failed: tuple = ()
+    promoted: tuple = ()
+    cancelled: tuple = ()
 
 
 class SchedulingPolicy:
@@ -511,9 +535,16 @@ class SchedEngine:
                  estimator: "TxEstimator | None" = None,
                  campaign: "CampaignView | None" = None,
                  admission: "AdmissionOptions | None" = None,
+                 faults: "FaultOptions | None" = None,
                  incremental: bool = True):
         self.g = g
         self.alloc = as_allocation(pool)
+        # -- fault tolerance (runtime/fault.py) ----------------------------
+        # disabled options are normalized to None so every faults-off code
+        # path is the exact pre-fault path (bit-identity)
+        if faults is not None and not faults.enabled:
+            faults = None
+        self.faults = faults
         # -- multi-workflow tenancy (core/workflow.py) ---------------------
         if admission is not None and campaign is None:
             raise ValueError("admission control requires a campaign "
@@ -540,6 +571,10 @@ class SchedEngine:
         self.pools: tuple[PoolSpec, ...] = self.alloc.pools
         self.free_cpus = [p.total.cpus for p in self.pools]
         self.free_gpus = [p.total.gpus for p in self.pools]
+        #: live capacity view: the static totals minus nodes currently
+        #: down to a failure (== totals whenever faults are off)
+        self.cap_cpus = [p.total.cpus for p in self.pools]
+        self.cap_gpus = [p.total.gpus for p in self.pools]
         #: per-node occupancy for ``node_level`` pools (None = aggregate
         #: accounting); the aggregate counters above stay a derived view
         self.node_states: list["list[NodeState] | None"] = [
@@ -586,8 +621,32 @@ class SchedEngine:
         self.predictor = (MakespanPredictor(
             g, self.alloc, contention=self._node_level_any,
             workflow_of=self.workflow_of or None, cache=True)
-            if feedback is not None or admission is not None else None)
+            if feedback is not None or admission is not None
+            or faults is not None else None)
         self.predictions: list[MakespanPrediction] = []
+
+        # -- fault-tolerance state (all dormant when ``faults is None``) ---
+        #: failure-site count for the empirical hazard estimate
+        self._fault_sites = max(1, sum(p.num_nodes for p in self.pools))
+        self.node_failures = 0
+        self.task_failures = 0
+        self.recoveries_restart = 0
+        self.recoveries_rerun = 0
+        self.replications = 0
+        #: failure trace: (now, kind, detail...) tuples
+        self.fault_log: list[tuple] = []
+        #: (set, index) -> failed-attempt count (the attempt number the
+        #: substrates key the seeded per-attempt failure draws on)
+        self._failures_of: dict[tuple[str, int], int] = {}
+        #: (set, index) -> (pool, node) the running attempt writes its
+        #: checkpoints from (present only while checkpointing the attempt)
+        self._ckpt_run: dict[tuple[str, int], tuple[int, int]] = {}
+        #: (set, index) -> (saved progress, writer pool, writer node) of a
+        #: restart-from-checkpoint decision, consumed at re-dispatch
+        self._recovery: dict[tuple[str, int], tuple[float, int, int]] = {}
+        #: aggregate pools: (pool, node) -> (cpus, gpus) removed while the
+        #: conceptual node is down (node-level pools track ``NodeState.down``)
+        self._agg_lost: dict[tuple[int, int], tuple[int, int]] = {}
 
         order = g.topological_order()
         ranks = g.ranks()
@@ -1311,6 +1370,410 @@ class SchedEngine:
         dst, cost = self._apply_speculation(name, i, *spec)
         return "speculate", dst, cost
 
+    # -- fault tolerance: failure events + priced recovery -------------------
+    def hazard_rate(self) -> float:
+        """Per-node-per-second failure hazard the recovery arbiter and the
+        predictor price against: the configured stochastic rate, or — when
+        the *observed* node-failure rate exceeds it (trace-driven runs
+        configure no rate but suffer real failures) — the empirical
+        ``failures / (sites x elapsed)`` estimate."""
+        f = self.faults
+        if f is None:
+            return 0.0
+        lam = f.node_failure_rate
+        if self.node_failures and self._now > 0:
+            lam = max(lam, self.node_failures
+                      / (self._fault_sites * self._now))
+        return lam
+
+    def attempt_number(self, name: str, i: int) -> int:
+        """How many attempts of (name, i) have failed so far — the attempt
+        index the substrates key the seeded per-attempt failure draws on."""
+        return self._failures_of.get((name, i), 0)
+
+    def _ckpt_enabled(self, name: str) -> bool:
+        """Does set ``name`` checkpoint its running attempts?  Forced by
+        the pure ``recovery`` arms; under ``"arbitrated"`` priced per set:
+        checkpoint iff the expected work a failure would destroy (hazard x
+        TX x half the attempt, less what a restart still re-pays) exceeds
+        the write overhead the set's every task pays up front."""
+        f = self.faults
+        if f is None or f.checkpoint_interval <= 0:
+            return False
+        if f.recovery == "rerun":
+            return False
+        if f.recovery == "restart":
+            return True
+        t = self.tx_estimate(name)
+        if t <= 0:
+            return False
+        c, w, r = (f.checkpoint_interval, f.checkpoint_write_cost,
+                   f.checkpoint_read_cost)
+        n_writes = math.floor(t / c)
+        if n_writes <= 0:
+            return False  # the task finishes before its first snapshot
+        # per-second hazard of losing the attempt: node loss + software
+        # failure (one expected per-attempt draw spread over the TX)
+        lam = self.hazard_rate() + f.task_failure_prob / t
+        if lam <= 0:
+            return False
+        loss_per_failure = t / 2 - (c / 2 + r + self.alloc.intra_pool_cost)
+        return lam * t * max(0.0, loss_per_failure) > n_writes * w
+
+    def checkpoint_params(self, name: str) -> "tuple[float, float, float] | None":
+        """(interval, write cost, read cost) when set ``name`` checkpoints,
+        else None — the predictor's hazard term reads this."""
+        if not self._ckpt_enabled(name):
+            return None
+        f = self.faults
+        return (f.checkpoint_interval, f.checkpoint_write_cost,
+                f.checkpoint_read_cost)
+
+    def dispatch_duration(self, name: str, i: int, d: float,
+                          k: int) -> float:
+        """Adjust a freshly dispatched attempt's duration for recovery and
+        checkpoint overheads (the substrates call this at every dispatch
+        while faults are on).  A restart-from-checkpoint decision resumes
+        from the saved progress and pays the checkpoint read over the
+        topology distance from the writer's placement
+        (:meth:`Allocation.transfer`); a checkpointing set pays one write
+        per completed interval."""
+        f = self.faults
+        if f is None:
+            return d
+        rec = self._recovery.pop((name, i), None)
+        if rec is not None:
+            saved, sp, sn = rec
+            d = max(0.0, d - saved)
+            d += f.checkpoint_read_cost + self.alloc.transfer(
+                sp, k, sn, self.node_of.get((name, i), -1))
+        if self._ckpt_enabled(name):
+            d += math.floor(d / f.checkpoint_interval) \
+                * f.checkpoint_write_cost
+            self._ckpt_run[(name, i)] = (k, self.node_of.get((name, i), -1))
+        else:
+            self._ckpt_run.pop((name, i), None)
+        return d
+
+    def _promote_duplicate(self, key: tuple[str, int]) -> None:
+        """The primary attempt died but its duplicate lives: the
+        duplicate's slot becomes the primary allocation (the task stays
+        launched, nothing is re-enqueued, no work is lost)."""
+        name, i = key
+        dst = self._spec_pool.pop(key)
+        dup_alloc = self._spec_node_alloc.pop(key, None)
+        if dup_alloc is not None:
+            self._node_alloc[key] = dup_alloc
+        self.pool_of[key] = dst
+        self.node_of[key] = dup_alloc[0] if dup_alloc is not None else -1
+        if key in self._ckpt_run:
+            self._ckpt_run[key] = (dst, self.node_of[key])
+
+    def _record_failure(self, name: str, i: int, elapsed: float) -> None:
+        """Plain-fail bookkeeping shared by node and task failures: count
+        the attempt, feed the estimator's empirical failure rate, decide
+        the recovery arm (restart-from-checkpoint when the saved progress
+        beats the estimated read-back, or when forced), and re-enqueue."""
+        key = (name, i)
+        self._failures_of[key] = self._failures_of.get(key, 0) + 1
+        if self.estimator is not None:
+            self.estimator.record_failure(name)
+        f = self.faults
+        ck = self._ckpt_run.pop(key, None)
+        plan = "rerun"
+        if ck is not None and elapsed > 0 and f.recovery != "rerun":
+            c, w = f.checkpoint_interval, f.checkpoint_write_cost
+            saved = math.floor(elapsed / (c + w)) * c
+            if saved > 0:
+                read_est = (f.checkpoint_read_cost
+                            + self.alloc.intra_pool_cost)
+                if f.recovery == "restart" or saved > read_est:
+                    self._recovery[key] = (saved, ck[0], ck[1])
+                    plan = "restart"
+        if plan == "restart":
+            self.recoveries_restart += 1
+        else:
+            self.recoveries_rerun += 1
+        self.launched.discard(key)
+        self.pool_of.pop(key, None)
+        self.node_of.pop(key, None)
+
+    def _requeue_failed(self, failed: "list[tuple[str, int]]") -> None:
+        """Failed tasks retry at the head of their ready queue, ascending
+        index order preserved."""
+        for name, i in sorted(failed, reverse=True):
+            self.ready[name].appendleft(i)
+
+    def _placeable_without(self, k: int, node: int) -> bool:
+        """Conservation guard: would every unfinished set still have SOME
+        possible placement (full-capacity fit on a surviving node / pool)
+        if (pool k, node) went down?  A failure that strands work is
+        refused — failed must never become lost."""
+        for n in self.order:
+            if self._set_remaining[n] <= 0:
+                continue
+            ts = self.g.node(n)
+            ok = False
+            for j, p in enumerate(self.pools):
+                if not p.accepts(ts):
+                    continue
+                need_c, need_g = self._needs(j, ts)
+                states = self.node_states[j]
+                if states is not None:
+                    ok = any(not ns.down and ns.cpus >= need_c
+                             and ns.spec.gpus >= need_g
+                             for m, ns in enumerate(states)
+                             if not (j == k and m == node))
+                else:
+                    cc, cg = self.cap_cpus[j], self.cap_gpus[j]
+                    if j == k:
+                        cc -= min(p.node.cpus, cc)
+                        cg -= min(p.node.gpus, cg)
+                    ok = cc >= need_c and cg >= need_g
+                if ok:
+                    break
+            if not ok:
+                return False
+        return True
+
+    def fail_node(self, k: int, node: int, now: float = 0.0,
+                  started: "dict[tuple[str, int], float] | None" = None,
+                  ) -> "FailureEvent | None":
+        """Node ``node`` of pool ``k`` fails at ``now``: every attempt
+        placed there is released and its task re-enqueued (or its replica
+        promoted), the node's remaining slots leave the free/capacity
+        counters, and the incremental indexes are updated.  ``started``
+        maps in-flight attempts to their start times on the substrate's
+        clock — the recovery arbiter prices saved checkpoint progress off
+        it.  Returns the :class:`FailureEvent` applied, or ``None`` when
+        the failure is refused (unknown/already-down node, or the
+        conservation guard: taking the node down would leave some
+        unfinished set with no possible placement anywhere)."""
+        if self.faults is None:
+            return None
+        self._now = max(self._now, now)
+        states = self.node_states[k]
+        if states is not None:
+            if node < 0 or node >= len(states) or states[node].down:
+                return None
+        else:
+            if (node < 0 or node >= self.pools[k].num_nodes
+                    or (k, node) in self._agg_lost):
+                return None
+        if not self._placeable_without(k, node):
+            return None
+        started = started or {}
+        failed: list[tuple[str, int]] = []
+        promoted: list[tuple[str, int]] = []
+        cancelled: list[tuple[str, int]] = []
+
+        def fail_primary(key):
+            name, i = key
+            ts = self.g.node(name)
+            self._release(self.pool_of[key], ts,
+                          self._node_alloc.pop(key, None))
+            dst = self._spec_pool.get(key)
+            if dst is not None:
+                dup_alloc = self._spec_node_alloc.get(key)
+                dup_dead = (dst == k and dup_alloc is not None
+                            and dup_alloc[0] == node)
+                if not dup_dead:
+                    self._promote_duplicate(key)
+                    promoted.append(key)
+                    return
+                self._release(dst, ts, self._spec_node_alloc.pop(key, None))
+                self._spec_pool.pop(key)
+            self._record_failure(name, i,
+                                 now - started.get(key, now))
+            failed.append(key)
+
+        def cancel_duplicate(key):
+            name, i = key
+            self._release(self._spec_pool.pop(key), self.g.node(name),
+                          self._spec_node_alloc.pop(key, None))
+            cancelled.append(key)
+
+        if states is not None:
+            for key in sorted(key for key, na in self._node_alloc.items()
+                              if self.pool_of.get(key) == k
+                              and na[0] == node):
+                fail_primary(key)
+            for key in sorted(key for key, na
+                              in self._spec_node_alloc.items()
+                              if self._spec_pool.get(key) == k
+                              and na[0] == node):
+                cancel_duplicate(key)
+            lost_c, lost_g = states[node].fail()
+            self.free_cpus[k] -= lost_c
+            self.free_gpus[k] -= lost_g
+            self.cap_cpus[k] -= states[node].cpus
+            self.cap_gpus[k] -= states[node].spec.gpus
+            if self.incremental:
+                self._node_changed(k, node)
+        else:
+            p = self.pools[k]
+            lost_c = min(p.node.cpus, self.cap_cpus[k])
+            lost_g = min(p.node.gpus, self.cap_gpus[k])
+            self.free_cpus[k] -= lost_c
+            self.free_gpus[k] -= lost_g
+            self.cap_cpus[k] -= lost_c
+            self.cap_gpus[k] -= lost_g
+            self._agg_lost[(k, node)] = (lost_c, lost_g)
+            # an aggregate pool has no node placements: the tasks "on the
+            # dead node" are the latest-launched attempts on the pool,
+            # failed until what survivors hold fits the shrunk capacity
+            victims = sorted(
+                [key for key in self.launched
+                 if key not in self.finished
+                 and self.pool_of.get(key) == k],
+                reverse=True)
+            dups = sorted((key for key, j in self._spec_pool.items()
+                           if j == k and key not in self.finished),
+                          reverse=True)
+            while ((self.free_cpus[k] < 0 or self.free_gpus[k] < 0)
+                   and (victims or dups)):
+                if dups:
+                    cancel_duplicate(dups.pop(0))
+                    continue
+                fail_primary(victims.pop(0))
+        self._requeue_failed(failed)
+        self.node_failures += 1
+        if self.predictor is not None:
+            self.predictor.invalidate()
+        # an aggregate loss may cancel a duplicate AND then fail its
+        # primary in the same sweep: the cancel entry is moot (there is
+        # no surviving attempt whose event the substrate should re-push)
+        cancelled = [c for c in cancelled if c not in failed]
+        ev = FailureEvent("node", pool=k, node=node, failed=tuple(failed),
+                          promoted=tuple(promoted),
+                          cancelled=tuple(cancelled))
+        self.fault_log.append((now, "node_failure", self.pools[k].name,
+                               node, len(failed), len(promoted),
+                               len(cancelled)))
+        return ev
+
+    def recover_node(self, k: int, node: int, now: float = 0.0) -> bool:
+        """A failed node rejoins, fully idle: restore its capacity to the
+        free/capacity counters and the incremental indexes."""
+        if self.faults is None:
+            return False
+        states = self.node_states[k]
+        if states is not None:
+            if node < 0 or node >= len(states) or not states[node].down:
+                return False
+            c, g = states[node].restore()
+            self.free_cpus[k] += c
+            self.free_gpus[k] += g
+            self.cap_cpus[k] += c
+            self.cap_gpus[k] += g
+            if self.incremental:
+                self._node_changed(k, node)
+        else:
+            lost = self._agg_lost.pop((k, node), None)
+            if lost is None:
+                return False
+            self.free_cpus[k] += lost[0]
+            self.free_gpus[k] += lost[1]
+            self.cap_cpus[k] += lost[0]
+            self.cap_gpus[k] += lost[1]
+            if self.incremental:
+                self._agg_freed(k)
+        self.fault_log.append((now, "node_recovery",
+                               self.pools[k].name, node))
+        return True
+
+    def fail_task(self, name: str, i: int, now: float = 0.0,
+                  elapsed: float = 0.0) -> "FailureEvent | None":
+        """The running primary attempt of (name, i) fails (software
+        fault): release its slot and re-enqueue the task — unless a
+        replica / speculative duplicate is racing, which is promoted to
+        primary instead (a software crash of one attempt does not touch
+        the other).  No-op on tasks not currently in flight."""
+        if self.faults is None:
+            return None
+        self._now = max(self._now, now)
+        key = (name, i)
+        if key in self.finished or key not in self.launched:
+            return None
+        ts = self.g.node(name)
+        self._release(self.pool_of[key], ts, self._node_alloc.pop(key, None))
+        self.task_failures += 1
+        if key in self._spec_pool:
+            self._promote_duplicate(key)
+            ev = FailureEvent("task", promoted=(key,))
+        else:
+            self._record_failure(name, i, elapsed)
+            self._requeue_failed([key])
+            ev = FailureEvent("task", failed=(key,))
+        if self.predictor is not None:
+            self.predictor.invalidate()
+        self.fault_log.append((now, "task_failure", name, i,
+                               "promoted" if ev.promoted else "requeued"))
+        return ev
+
+    def at_risk(self, running: "dict[tuple[str, int], float]",
+                now: float) -> list[tuple[str, int]]:
+        """Running tasks worth proactively replicating: probability of
+        losing the attempt's node before it finishes (``1 - exp(-hazard x
+        expected remaining)``) at or above ``replicate_risk``, no
+        duplicate racing yet."""
+        f = self.faults
+        if f is None or not f.replicate:
+            return []
+        lam = self.hazard_rate()
+        if lam <= 0:
+            return []
+        out = []
+        for (name, i), start in running.items():
+            key = (name, i)
+            if (key in self.finished or key in self._spec_pool
+                    or key not in self.launched):
+                continue
+            rem = self.tx_estimate(name, pool=self.pool_of.get(key)) \
+                - (now - start)
+            if rem <= 0:
+                continue  # about to finish: nothing left to protect
+            if 1.0 - math.exp(-lam * rem) >= f.replicate_risk:
+                out.append(key)
+        return out
+
+    def try_replicate(self, name: str, i: int) -> "tuple[int, float] | None":
+        """Proactive replication of an at-risk task: launch a duplicate on
+        a *different* node (one node loss must never take both attempts)
+        through the speculation slot machinery; when the primary's node
+        later dies the replica is promoted and no work is lost.  The risk
+        gate lives in :meth:`at_risk`; here only a free slot is needed."""
+        f = self.faults
+        if f is None or not f.replicate:
+            return None
+        key = (name, i)
+        if (key in self.finished or key not in self.launched
+                or key in self._spec_pool):
+            return None
+        if self._speculations_of.get(key, 0) >= 2:
+            return None  # replica churn guard (re-replication after loss)
+        src = self.pool_of[key]
+        src_node = self.node_placement(name, i)
+        ts = self.g.node(name)
+        best: "tuple[float, int, int] | None" = None
+        for k in self._candidates(ts):
+            if self.node_states[k] is not None:
+                node = self._choose_node(
+                    k, ts, exclude=src_node if k == src else -1)
+                if node < 0:
+                    continue
+                cost = self.alloc.transfer(src, k, src_node, node)
+            else:
+                node, cost = -1, self.alloc.transfer(src, k)
+            if best is None or (cost, k) < (best[0], best[1]):
+                best = (cost, k, node)
+        if best is None:
+            return None
+        cost, dst, node = best
+        self._apply_speculation(name, i, dst, cost, node)
+        self.replications += 1
+        return dst, cost
+
     # -- online makespan re-prediction (core/predictor.py) ------------------
     def repredict(self, now: float,
                   running: "dict[tuple[str, int], float]"
@@ -1342,6 +1805,10 @@ class SchedEngine:
             if (n, i) not in self.finished:
                 gpu_held[n] = (gpu_held.get(n, 0)
                                + self._needs(k, self.g.node(n))[1])
+        if self.faults is not None:
+            self.predictor.set_hazard(
+                self.hazard_rate() if self.faults.hazard_aware else 0.0,
+                self.checkpoint_params)
         p = self.predictor.predict(
             self.tx_estimate, now, pending, elapsed,
             done_fraction=self._n_done / max(1, self._n_total),
@@ -1691,6 +2158,11 @@ class SchedEngine:
         completions — straggler mitigation — are no-ops)."""
         if (name, i) in self.finished:
             return self.pool_of.get((name, i), 0)
+        if self.faults is not None and (name, i) not in self.launched:
+            # stale completion of a failed attempt: the failure path
+            # already released every slot and re-enqueued the task, so
+            # freeing again here would double-credit the pool
+            return self.pool_of.get((name, i), 0)
         k = self.pool_of.get((name, i), 0)
         ts = self.g.node(name)
         need_c, need_g = self._needs(k, ts)
@@ -1718,6 +2190,9 @@ class SchedEngine:
                 self.node_of[(name, i)] = (spec_node_alloc[0]
                                            if spec_node_alloc is not None
                                            else -1)
+        if self.faults is not None:
+            self._ckpt_run.pop((name, i), None)
+            self._recovery.pop((name, i), None)
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1

@@ -53,6 +53,7 @@ from .resources import Allocation, PoolSpec, as_allocation
 from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
 from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
                        weighted_slowdown)
+from ..runtime.fault import FailureSchedule, FaultOptions
 
 Mode = Literal["async", "sequential"]
 
@@ -61,6 +62,10 @@ Mode = Literal["async", "sequential"]
 _WATCHDOG = "\x00watchdog"
 #: sentinel event name for a campaign workflow's arrival (dispatch pass)
 _ARRIVAL = "\x00arrival"
+#: sentinel event names for fault injection (payload keyed by event seq)
+_FAIL = "\x00fail"
+_RECOVER = "\x00recover"
+_TASKFAIL = "\x00taskfail"
 
 
 def per_pool_task_counts(records: "Sequence[TaskRecord]") -> dict[str, int]:
@@ -123,6 +128,16 @@ class SimResult:
     workflows: "dict[str, WorkflowStats] | None" = None
     #: task sets the admission controller deferred at least once
     admission_deferrals: int = 0
+    #: fault injection (``faults=FaultOptions(...)``): applied node losses,
+    #: software task failures, and the recovery arms taken per failure
+    node_failures: int = 0
+    task_failures: int = 0
+    recoveries_restart: int = 0
+    recoveries_rerun: int = 0
+    #: proactive at-risk replications launched (``FaultOptions.replicate``)
+    replications: int = 0
+    #: the engine's failure trace: (time, kind, detail...) tuples
+    fault_log: list = dataclasses.field(default_factory=list)
 
     def throughput(self) -> float:
         return self.tasks_total / self.makespan if self.makespan else 0.0
@@ -189,6 +204,7 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
              scheduling: "str | SchedulingPolicy" = "fifo",
              feedback: "FeedbackOptions | None" = None,
              admission: "AdmissionOptions | None" = None,
+             faults: "FaultOptions | None" = None,
              ) -> SimResult:
     """Run one workflow execution and return its schedule.
 
@@ -206,7 +222,16 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     workflow's arrival time), ``SimResult.workflows`` carries per-workflow
     makespan/wait/slowdown metrics, and ``admission=AdmissionOptions()``
     enables the engine's prediction-driven admission controller
-    (campaigns run asynchronously — ``mode`` must be ``"async"``)."""
+    (campaigns run asynchronously — ``mode`` must be ``"async"``).
+
+    ``faults=FaultOptions(...)`` injects seeded node losses (stochastic
+    and/or trace-driven) and per-attempt software failures into the run:
+    in-flight attempts on a dying node are released and re-enqueued (or
+    their replica promoted), the recovery arbiter prices
+    restart-from-checkpoint vs. re-run per failure, and re-predictions
+    fold the live hazard in (``FaultOptions.hazard_aware``).  Disabled
+    options (the default instance) are treated exactly like ``None`` —
+    the dispatch trace stays bit-identical."""
     rng = random.Random(options.seed)
     view: "CampaignView | None" = None
     if isinstance(dag, Campaign):
@@ -238,7 +263,13 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     # ---- expand task sets into tasks -------------------------------------
     engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
                          feedback=feedback, campaign=view,
-                         admission=admission)
+                         admission=admission, faults=faults)
+    faults = engine.faults  # disabled options normalized to None
+    schedule = (FailureSchedule(faults,
+                                [(k, p.num_nodes)
+                                 for k, p in enumerate(engine.pools)],
+                                [p.name for p in engine.pools])
+                if faults is not None else None)
     order = engine.order
     wf_of = view.workflow_of if view is not None else {}
     durations: dict[tuple[str, int], float] = {}
@@ -271,16 +302,50 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     duplicates = 0
     duplicated: set[tuple[str, int]] = set()
     set_durations: dict[str, list[float]] = {}
+    #: tasks that were straggler-migrated (the record flag; under faults
+    #: ``gen`` is also bumped by failures, so membership in ``gen`` no
+    #: longer means "migrated")
+    mig_tasks: set[tuple[str, int]] = set()
+    #: payload store for fault sentinel events, keyed by event seq
+    payload: dict[int, tuple] = {}
+    #: (set, i) -> scheduled end of the current primary / duplicate event
+    #: (re-pushed with a fresh gen when a failure invalidates a survivor)
+    end_of: dict[tuple[str, int], float] = {}
+    spec_end: dict[tuple[str, int], float] = {}
+    #: primary attempts doomed by a seeded software failure: the pending
+    #: _TASKFAIL time (re-pushed instead of a completion on gen bumps)
+    fail_at: dict[tuple[str, int], float] = {}
 
     def try_start() -> None:
         nonlocal seq
-        for name, i, _pool in engine.startable(now):
-            end = now + options.launch_latency + durations[(name, i)]
+        for name, i, pool_k in engine.startable(now):
+            d = durations[(name, i)]
+            if faults is None:
+                first_start[(name, i)] = now
+            else:
+                # retried attempts keep the original start: the record
+                # spans the whole task, failed attempts included
+                first_start.setdefault((name, i), now)
+                d = engine.dispatch_duration(name, i, d, pool_k)
+            end = now + options.launch_latency + d
             # straggler/estimator clock starts when the WORK starts:
             # launch latency must not read as task duration
             running[(name, i)] = now + options.launch_latency
-            first_start[(name, i)] = now
-            heapq.heappush(events, (end, seq, name, i, False, 0))
+            end_of[(name, i)] = end
+            g0 = gen.get((name, i), 0)
+            frac = (schedule.attempt_failure(
+                        name, i, engine.attempt_number(name, i))
+                    if schedule is not None else None)
+            if frac is not None:
+                # the attempt dies mid-run: push the failure, not the
+                # completion (a gen bump re-derives one from fail_at)
+                t_fail = now + options.launch_latency + frac * d
+                fail_at[(name, i)] = t_fail
+                payload[seq] = (name, i, g0)
+                heapq.heappush(events, (t_fail, seq, _TASKFAIL, -1,
+                                        False, 0))
+            else:
+                heapq.heappush(events, (end, seq, name, i, False, g0))
             seq += 1
 
     #: speculative duplicates in flight: (set, i) -> (work start, pool)
@@ -307,11 +372,13 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
             k = engine.complete(name, i)
             won_by_dup = False
         start = first_start.pop((name, i), attempt_start)
+        end_of.pop((name, i), None)
+        spec_end.pop((name, i), None)
         records.append(TaskRecord(name, i, start, now,
                                   ts.cpus_per_task, ts.gpus_per_task,
                                   duplicate=won_by_dup,
                                   pool=engine.pool_name(k),
-                                  migrated=(name, i) in gen,
+                                  migrated=(name, i) in mig_tasks,
                                   node=node,
                                   workflow=wf_of.get(name, "")))
         set_durations.setdefault(name, []).append(now - attempt_start)
@@ -328,6 +395,11 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
             work_start = now + cost + options.launch_latency
             if kind == "migrate":
                 gen[(sn, si)] = gen.get((sn, si), 0) + 1
+                mig_tasks.add((sn, si))
+                # migration pre-empts the attempt: any pending seeded
+                # software failure dies with it (the re-run is fresh)
+                fail_at.pop((sn, si), None)
+                end_of[(sn, si)] = work_start + d
                 heapq.heappush(events, (work_start + d, seq, sn, si,
                                         False, gen[(sn, si)]))
                 seq += 1
@@ -337,27 +409,101 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
                 running[(sn, si)] = work_start
             else:  # speculate: the original keeps running, a dup races it
                 spec_info[(sn, si)] = (work_start, dst)
+                spec_end[(sn, si)] = work_start + d
                 heapq.heappush(events, (work_start + d, seq, sn, si,
                                         True, gen.get((sn, si), 0)))
                 seq += 1
+
+    def apply_failure_event(ev) -> None:
+        """Invalidate the sim events a :class:`FailureEvent` superseded.
+        Failed attempts simply vanish (the engine re-enqueued them);
+        promoted replicas re-push their completion as the new primary's;
+        a cancelled replica's primary re-pushes its pending outcome
+        (completion, or the doomed software failure) under the fresh gen."""
+        nonlocal seq
+        for key in ev.failed:
+            gen[key] = gen.get(key, 0) + 1
+            running.pop(key, None)
+            spec_info.pop(key, None)
+            end_of.pop(key, None)
+            spec_end.pop(key, None)
+            fail_at.pop(key, None)
+        for key in ev.promoted:
+            gen[key] = gen.get(key, 0) + 1
+            st, _dst = spec_info.pop(key)
+            running[key] = st
+            end = spec_end.pop(key)
+            end_of[key] = end
+            fail_at.pop(key, None)
+            heapq.heappush(events, (end, seq, key[0], key[1], False,
+                                    gen[key]))
+            seq += 1
+        for key in ev.cancelled:
+            gen[key] = gen.get(key, 0) + 1
+            spec_info.pop(key, None)
+            spec_end.pop(key, None)
+            tf = fail_at.get(key)
+            if tf is not None:
+                payload[seq] = (key[0], key[1], gen[key])
+                heapq.heappush(events, (tf, seq, _TASKFAIL, -1, False, 0))
+            else:
+                heapq.heappush(events, (end_of[key], seq, key[0], key[1],
+                                        False, gen[key]))
+            seq += 1
+
+    def push_next_failure() -> None:
+        """Feed the next node-failure event into the heap — one in flight
+        at a time, and none once the workload is done (the stochastic
+        stream is infinite; it must not keep the loop alive)."""
+        nonlocal seq
+        if schedule is None or engine.done():
+            return
+        nxt = schedule.next_node_failure()
+        if nxt is None:
+            return
+        t, fk, fn = nxt
+        payload[seq] = (fk, fn)
+        heapq.heappush(events, (max(t, now), seq, _FAIL, -1, False, 0))
+        seq += 1
+
+    def replicate_scan() -> None:
+        """Proactively duplicate at-risk tasks (``FaultOptions.replicate``)
+        through the speculation machinery — same event shape as
+        ``mitigate_scan``'s speculate branch."""
+        nonlocal seq
+        for (rn, ri) in engine.at_risk(running, now):
+            rep = engine.try_replicate(rn, ri)
+            if rep is None:
+                continue
+            dst, cost = rep
+            d = sample_base(g.node(rn)) * overhead
+            work_start = now + cost + options.launch_latency
+            spec_info[(rn, ri)] = (work_start, dst)
+            spec_end[(rn, ri)] = work_start + d
+            heapq.heappush(events, (work_start + d, seq, rn, ri, True,
+                                    gen.get((rn, ri), 0)))
+            seq += 1
 
     # periodic watchdog (mitigation enabled only): completions trigger
     # scans too, but a lone tail straggler has no completion left to
     # piggyback on — without a timer event it would never be detected.
     # Migration needs a second pool; speculation only needs a free slot,
     # so it keeps the watchdog alive even on single-pool allocations.
+    # Proactive replication rides the same timer.
     migrating = (feedback is not None
                  and (feedback.speculate
                       or (feedback.migrate and len(engine.pools) > 1)))
-    if migrating:
+    replicating = faults is not None and faults.replicate
+    if migrating or replicating:
         positive = [ts.tx_mean for ts in g.nodes.values() if ts.tx_mean > 0]
-        scan_dt = (feedback.watchdog_interval
+        scan_dt = ((feedback.watchdog_interval
+                    if feedback is not None else 0.0)
                    or (0.5 * min(positive) if positive else 1.0))
     watchdog_pending = False
 
     def schedule_scan() -> None:
         nonlocal watchdog_pending, seq
-        if migrating and not watchdog_pending and running:
+        if (migrating or replicating) and not watchdog_pending and running:
             heapq.heappush(events, (now + scan_dt, seq, _WATCHDOG, -1,
                                     False, 0))
             seq += 1
@@ -372,14 +518,18 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
 
     try_start()
     schedule_scan()
+    push_next_failure()
     engine.repredict(now, running)   # prior-based prediction at t = 0
     event_count = 0
     while events:
-        now_, _, name, i, dup, g_ = heapq.heappop(events)
+        now_, sq, name, i, dup, g_ = heapq.heappop(events)
         now = now_
         if name is _WATCHDOG:
             watchdog_pending = False
-            mitigate_scan()
+            if migrating:
+                mitigate_scan()
+            if replicating:
+                replicate_scan()
             engine.repredict(now, running)
             try_start()
             schedule_scan()
@@ -388,6 +538,42 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
             engine.repredict(now, running)  # the new workflow is visible
             try_start()
             schedule_scan()
+            continue
+        if name is _FAIL:
+            fk, fn = payload.pop(sq)
+            if not engine.done():
+                ev = engine.fail_node(fk, fn, now=now, started=running)
+                if ev is not None:
+                    apply_failure_event(ev)
+                    if math.isfinite(faults.node_recovery_time):
+                        payload[seq] = (fk, fn)
+                        heapq.heappush(
+                            events, (now + faults.node_recovery_time,
+                                     seq, _RECOVER, -1, False, 0))
+                        seq += 1
+                    engine.repredict(now, running)
+                    try_start()
+                    schedule_scan()
+            push_next_failure()
+            continue
+        if name is _RECOVER:
+            rk, rn = payload.pop(sq)
+            if engine.recover_node(rk, rn, now=now):
+                try_start()
+                schedule_scan()
+            continue
+        if name is _TASKFAIL:
+            tn, ti, g0 = payload.pop(sq)
+            if (tn, ti) in engine.finished or g0 != gen.get((tn, ti), 0):
+                continue
+            fail_at.pop((tn, ti), None)
+            ev = engine.fail_task(tn, ti, now=now,
+                                  elapsed=now - running.get((tn, ti), now))
+            if ev is not None:
+                apply_failure_event(ev)
+                engine.repredict(now, running)
+                try_start()
+                schedule_scan()
             continue
         if (name, i) in engine.finished:
             continue  # a duplicate already finished this task
@@ -456,4 +642,10 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
         workflows=(campaign_stats(view, records)
                    if view is not None else None),
         admission_deferrals=engine.admission_deferrals,
+        node_failures=engine.node_failures,
+        task_failures=engine.task_failures,
+        recoveries_restart=engine.recoveries_restart,
+        recoveries_rerun=engine.recoveries_rerun,
+        replications=engine.replications,
+        fault_log=engine.fault_log,
     )

@@ -14,6 +14,7 @@ _LAZY = {
     "build_train_step": "steps", "make_train_state": "steps",
     "state_shardings": "steps", "cache_shardings": "steps",
     "ElasticMesh": "fault", "FailureInjector": "fault",
+    "FailureSchedule": "fault", "FaultOptions": "fault",
     "NodeFailure": "fault", "StragglerMonitor": "fault",
     "run_resilient": "fault",
 }

@@ -23,12 +23,150 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import math
 import time
+import zlib
 from typing import Callable, Sequence
 
 import numpy as np
 
 log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultOptions:
+    """Failure injection + recovery policy for the scheduling stack.
+
+    Passed to ``simulate()`` / ``RealExecutor.run()`` (and through them to
+    ``SchedEngine``).  With the default (all rates zero, empty trace) the
+    options are *disabled* and every consumer treats them exactly like
+    ``None`` — dispatch traces stay bit-identical.
+
+    Failure injection (seeded, substrate-independent):
+
+    - ``node_failure_rate`` — stochastic per-node-per-second hazard; the
+      fleet-wide failure process is Poisson with rate
+      ``rate x total_nodes``, victims drawn uniformly.
+    - ``node_failure_trace`` — trace-driven ``(time, pool_name, node)``
+      events, merged with the stochastic stream in time order.
+    - ``task_failure_prob`` — per-attempt software-failure probability;
+      the failing attempt dies at a seeded fraction of its duration.
+      Attempts beyond ``max_task_retries`` always succeed (runaway guard).
+    - ``node_recovery_time`` — a failed node rejoins after this many
+      modelled seconds (``inf`` = permanent loss).
+
+    Recovery policy:
+
+    - ``recovery`` — ``"arbitrated"`` prices restart-from-checkpoint vs.
+      re-run-from-scratch per set (and decides per set whether paying the
+      checkpoint write overhead is worth it, from the live hazard
+      estimate); ``"restart"`` / ``"rerun"`` force the pure arms.
+    - ``checkpoint_interval`` — modelled seconds of task progress between
+      snapshots (0 disables checkpointing entirely).
+    - ``checkpoint_write_cost`` / ``checkpoint_read_cost`` — base I/O cost
+      per snapshot; reads additionally pay the ``Allocation.transfer``
+      distance from the writer's placement to the restarted attempt's.
+    - ``replicate`` — proactively duplicate at-risk tasks (failure
+      probability before completion above ``replicate_risk``) onto
+      another node via the speculation machinery; if the primary's node
+      dies the replica is promoted and no work is lost.
+    - ``hazard_aware`` — fold the failure hazard into the predictor's
+      residual bound (re-predictions stay honest under faults).
+    """
+
+    node_failure_rate: float = 0.0
+    node_failure_trace: tuple = ()
+    task_failure_prob: float = 0.0
+    node_recovery_time: float = math.inf
+    seed: int = 0
+    recovery: str = "arbitrated"
+    checkpoint_interval: float = 0.0
+    checkpoint_write_cost: float = 0.0
+    checkpoint_read_cost: float = 0.0
+    max_task_retries: int = 4
+    replicate: bool = False
+    replicate_risk: float = 0.35
+    hazard_aware: bool = True
+
+    def __post_init__(self):
+        if self.recovery not in ("arbitrated", "rerun", "restart"):
+            raise ValueError(f"unknown recovery policy {self.recovery!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.node_failure_rate > 0.0
+                or bool(self.node_failure_trace)
+                or self.task_failure_prob > 0.0)
+
+
+class FailureSchedule:
+    """Deterministic failure stream shared by both substrates.
+
+    ``next_node_failure()`` yields ``(time, pool_index, node)`` events in
+    time order, merging the trace with a seeded Poisson stream; the stream
+    depends only on ``(opts.seed, sites)``, never on when the caller asks,
+    so the simulator and the real executor see identical schedules.
+
+    ``attempt_failure(name, i, attempt)`` is keyed purely on the task
+    identity + attempt number (stable CRC of the set name), so per-attempt
+    draws are independent of substrate dispatch order too.
+    """
+
+    def __init__(self, opts: FaultOptions, sites: Sequence[tuple[int, int]],
+                 pool_names: Sequence[str]):
+        self.opts = opts
+        #: flat (pool_index, node) list of every failure site
+        self._sites = [(k, n) for k, count in sites for n in range(count)]
+        name_to_idx = {name: k for k, name in enumerate(pool_names)}
+        trace = []
+        for t, pool_name, node in opts.node_failure_trace:
+            if pool_name not in name_to_idx:
+                raise ValueError(f"unknown pool in failure trace: "
+                                 f"{pool_name!r}")
+            trace.append((float(t), name_to_idx[pool_name], int(node)))
+        self._trace = sorted(trace)
+        self._trace_pos = 0
+        self._rng = np.random.default_rng((opts.seed, 0xFA01))
+        self._t = 0.0  # internal stochastic clock
+
+    def _next_stochastic(self) -> tuple[float, int, int] | None:
+        rate = self.opts.node_failure_rate * len(self._sites)
+        if rate <= 0.0 or not self._sites:
+            return None
+        self._t += float(self._rng.exponential(1.0 / rate))
+        k, n = self._sites[int(self._rng.integers(len(self._sites)))]
+        return (self._t, k, n)
+
+    def next_node_failure(self) -> tuple[float, int, int] | None:
+        """Pop the next (time, pool_index, node) event, or None."""
+        trace_ev = (self._trace[self._trace_pos]
+                    if self._trace_pos < len(self._trace) else None)
+        if self._stoch_peek is None:
+            self._stoch_peek = self._next_stochastic()
+        stoch_ev = self._stoch_peek
+        if trace_ev is None and stoch_ev is None:
+            return None
+        if stoch_ev is None or (trace_ev is not None
+                                and trace_ev[0] <= stoch_ev[0]):
+            self._trace_pos += 1
+            return trace_ev
+        self._stoch_peek = None
+        return stoch_ev
+
+    _stoch_peek: tuple[float, int, int] | None = None
+
+    def attempt_failure(self, name: str, i: int, attempt: int) \
+            -> float | None:
+        """Does attempt #``attempt`` of task (name, i) fail?  Returns the
+        fraction of its duration at which it dies, or None."""
+        p = self.opts.task_failure_prob
+        if p <= 0.0 or attempt >= self.opts.max_task_retries:
+            return None
+        rng = np.random.default_rng(
+            (self.opts.seed, 0xFA02, zlib.crc32(name.encode()), i, attempt))
+        if rng.random() >= p:
+            return None
+        return 0.05 + 0.9 * float(rng.random())
 
 
 class NodeFailure(RuntimeError):

@@ -1,0 +1,238 @@
+"""Edges of the fault-injection layer (``runtime/fault.py``) and the
+checkpoint store (``checkpoint/store.py``) that the end-to-end suites
+don't reach: the deterministic failure streams both substrates share,
+FaultOptions validation, elastic-mesh shrink limits, crash-mid-write
+artifacts, corrupt-archive fallback, and async-save completion ordering.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, restore_latest,
+                              save_pytree)
+from repro.runtime.fault import (ElasticMesh, FailureSchedule, FaultOptions,
+                                 ckpt_manager_latest)
+
+
+# ---------------------------------------------------------------------------
+# FaultOptions: validation + the enabled/disabled contract
+# ---------------------------------------------------------------------------
+
+def test_fault_options_rejects_unknown_recovery_policy():
+    with pytest.raises(ValueError, match="unknown recovery policy"):
+        FaultOptions(recovery="pray")
+
+
+def test_fault_options_enabled_iff_something_can_fail():
+    assert not FaultOptions().enabled
+    assert not FaultOptions(checkpoint_interval=10.0,
+                            node_recovery_time=5.0).enabled
+    assert FaultOptions(node_failure_rate=0.1).enabled
+    assert FaultOptions(task_failure_prob=0.1).enabled
+    assert FaultOptions(node_failure_trace=((1.0, "p", 0),)).enabled
+
+
+# ---------------------------------------------------------------------------
+# FailureSchedule: the seeded substrate-independent failure streams
+# ---------------------------------------------------------------------------
+
+SITES = [(0, 2), (1, 1)]
+NAMES = ["p0", "p1"]
+
+
+def _drain(schedule, n=20):
+    out = []
+    for _ in range(n):
+        ev = schedule.next_node_failure()
+        if ev is None:
+            break
+        out.append(ev)
+    return out
+
+
+def test_node_failure_stream_deterministic():
+    opts = FaultOptions(node_failure_rate=0.01, seed=7)
+    a = _drain(FailureSchedule(opts, SITES, NAMES))
+    b = _drain(FailureSchedule(opts, SITES, NAMES))
+    assert a == b and len(a) == 20
+    assert [t for t, _k, _n in a] == sorted(t for t, _k, _n in a)
+    assert all((k, n) in [(0, 0), (0, 1), (1, 0)] for _t, k, n in a)
+    # a different seed is a different stream
+    c = _drain(FailureSchedule(
+        FaultOptions(node_failure_rate=0.01, seed=8), SITES, NAMES))
+    assert c != a
+
+
+def test_trace_merged_with_stochastic_stream_in_time_order():
+    trace = ((5.0, "p1", 0), (1e9, "p0", 1))
+    opts = FaultOptions(node_failure_rate=0.001, seed=3,
+                        node_failure_trace=trace)
+    evs = _drain(FailureSchedule(opts, SITES, NAMES), n=50)
+    assert [t for t, _k, _n in evs] == sorted(t for t, _k, _n in evs)
+    assert (5.0, 1, 0) in evs  # pool name resolved to its index
+    # trace-only schedule: exactly the trace, then exhausted
+    only = FailureSchedule(FaultOptions(node_failure_trace=trace),
+                           SITES, NAMES)
+    assert _drain(only) == [(5.0, 1, 0), (1e9, 0, 1)]
+    assert only.next_node_failure() is None
+
+
+def test_trace_with_unknown_pool_rejected():
+    opts = FaultOptions(node_failure_trace=((1.0, "nope", 0),))
+    with pytest.raises(ValueError, match="unknown pool"):
+        FailureSchedule(opts, SITES, NAMES)
+
+
+def test_attempt_failure_draws_deterministic_and_bounded():
+    opts = FaultOptions(task_failure_prob=0.5, seed=11)
+    s1 = FailureSchedule(opts, SITES, NAMES)
+    s2 = FailureSchedule(opts, SITES, NAMES)
+    draws = [(name, i, a, s1.attempt_failure(name, i, a))
+             for name in ("T0", "T36") for i in range(8) for a in range(3)]
+    # substrate-independent: a second schedule (any call order) agrees
+    for name, i, a, frac in reversed(draws):
+        assert s2.attempt_failure(name, i, a) == frac
+    fracs = [f for _n, _i, _a, f in draws if f is not None]
+    assert fracs and all(0.05 <= f <= 0.95 for f in fracs)
+    assert any(f is None for _n, _i, _a, f in draws)
+
+
+def test_attempt_failure_runaway_guard_and_off_switch():
+    opts = FaultOptions(task_failure_prob=1.0, max_task_retries=3, seed=0)
+    s = FailureSchedule(opts, SITES, NAMES)
+    # certain failure up to the retry cap, certain success past it
+    assert all(s.attempt_failure("T", 0, a) is not None for a in range(3))
+    assert s.attempt_failure("T", 0, 3) is None
+    off = FailureSchedule(FaultOptions(node_failure_rate=0.1), SITES, NAMES)
+    assert off.attempt_failure("T", 0, 0) is None
+
+
+# ---------------------------------------------------------------------------
+# ElasticMesh: shrink limits
+# ---------------------------------------------------------------------------
+
+def test_elastic_mesh_refuses_partial_model_replica():
+    em = ElasticMesh(model_axis=4, devices=tuple(range(8)))
+    assert em.usable(8) == (2, 4)
+    assert em.usable(7) == (1, 4)  # a partial data row is dropped
+    with pytest.raises(RuntimeError, match="not enough devices"):
+        em.usable(3)  # survivors < model_axis: no full parameter shard set
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store: crash artifacts, corruption fallback, async ordering
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": np.full(4, float(v)), "opt": {"m": np.arange(3.0) + v}}
+
+
+def test_restore_latest_missing_and_empty_dir(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None
+    assert restore_latest(_tree(0), str(tmp_path / "nope")) is None
+    os.makedirs(tmp_path / "empty")
+    assert restore_latest(_tree(0), str(tmp_path / "empty")) is None
+
+
+def test_crash_mid_write_artifact_never_restored(tmp_path):
+    """A crash between the tmp write and the rename leaves ``tmp.<step>``
+    (and possibly a complete ``tmp.<step>.npz`` never renamed): neither
+    counts as a restorable checkpoint."""
+    d = str(tmp_path / "ck")
+    save_pytree(_tree(1), d, 1)
+    with open(os.path.join(d, "tmp.2"), "wb") as f:
+        f.write(b"partial")
+    # a finished-but-unrenamed tmp archive with DIFFERENT content
+    np.savez(os.path.join(d, "tmp.3"), leaf_0=np.zeros(4))
+    assert latest_step(d) == 1
+    step, tree = restore_latest(_tree(0), d)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), _tree(1)["w"])
+
+
+def test_corrupt_newest_archive_falls_back_to_older_step(tmp_path):
+    d = str(tmp_path / "ck")
+    save_pytree(_tree(1), d, 1)
+    save_pytree(_tree(2), d, 2)
+    # step 3 finalized but truncated on disk (e.g. the node died during
+    # fsync): restore must skip it and land on step 2
+    with open(os.path.join(d, "step_00000003.npz"), "wb") as f:
+        f.write(b"\x00" * 16)
+    assert latest_step(d) == 3  # it *looks* newest...
+    step, tree = restore_latest(_tree(0), d)  # ...but cannot be read
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["opt"]["m"]),
+                                  _tree(2)["opt"]["m"])
+
+
+def test_all_archives_corrupt_returns_none(tmp_path):
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    with open(os.path.join(d, "step_00000005.npz"), "wb") as f:
+        f.write(b"junk")
+    assert restore_latest(_tree(0), d) is None
+
+
+def test_async_save_completes_before_restore(tmp_path):
+    """The manager's background save must be awaited before a restore:
+    ``ckpt_manager_latest`` (the restart loop's lookup) calls ``wait()``,
+    so the step it reports is always fully on disk."""
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, interval=1, max_keep=2)
+    assert ckpt_manager_latest(mgr) is None
+    for s in range(4):
+        assert mgr.maybe_save(_tree(s), s)
+    latest = ckpt_manager_latest(mgr)  # waits for the in-flight save
+    assert latest == 3
+    step, tree = restore_latest(_tree(0), d)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(tree["w"]), _tree(3)["w"])
+    mgr.close()
+    # max_keep GC ran inside the worker thread
+    steps = [f for f in os.listdir(d) if f.startswith("step_")]
+    assert len(steps) == 2
+
+
+def test_maybe_save_skips_off_interval_steps(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), interval=5)
+    assert not mgr.maybe_save(_tree(1), 3)
+    assert mgr.maybe_save(_tree(2), 5)
+    mgr.close()
+    assert latest_step(str(tmp_path / "ck")) == 5
+
+
+# ---------------------------------------------------------------------------
+# run_resilient: the generic restart loop end-to-end
+# ---------------------------------------------------------------------------
+
+def test_run_resilient_restarts_from_latest_checkpoint(tmp_path):
+    """Seeded failures mid-loop: the loop rebuilds, restores the newest
+    complete snapshot, and still reaches exactly ``total_steps`` effective
+    steps (restarts re-pay only the work since the last checkpoint)."""
+    from repro.checkpoint import restore_pytree
+    from repro.runtime.fault import FailureInjector, run_resilient
+
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, interval=2, max_keep=3)
+    template = {"w": np.zeros(1)}
+
+    def step_fn(state, s):
+        return {"w": state["w"] + 1.0}
+
+    def build(lost):
+        return step_fn, None  # re-lowering is a no-op on this toy state
+
+    state, history = run_resilient(
+        total_steps=30, build=build,
+        step_fn_state=(step_fn, {"w": np.zeros(1)}),
+        injector=FailureInjector(rate=0.3, seed=9),
+        ckpt_manager=mgr,
+        restore=lambda step: restore_pytree(template, d, step),
+        start_step=0)
+    mgr.close()
+    # bit-deterministic across restarts: exactly 30 effective steps
+    assert float(np.asarray(state["w"])[0]) == 30.0
+    assert history["failures"] > 0
+    assert len(history["restarts"]) == history["failures"]

@@ -565,3 +565,153 @@ def test_incremental_engine_bit_identical_to_scan(policy, mode, g, seed):
         assert engines[0].pool_of == engines[1].pool_of
 
     _drive_random_ops(engines, rng, same_placements)
+
+
+# ---------------------------------------------------------------------------
+# 16-19: fault tolerance — exactly-once under failure/recovery
+# interleavings, no slot leak after node loss, conservation (failed is
+# never lost), and faults-off bit-identity
+# ---------------------------------------------------------------------------
+
+from repro.core import FaultOptions, SchedEngine  # noqa: E402
+
+
+def fault_storm(seed: int, replicate: bool = False) -> FaultOptions:
+    """Stochastic node losses with recovery + software failures +
+    checkpointing — every recovery mechanism can engage."""
+    return FaultOptions(node_failure_rate=0.004, node_recovery_time=60.0,
+                        task_failure_prob=0.15, seed=seed,
+                        checkpoint_interval=5.0, checkpoint_write_cost=0.5,
+                        checkpoint_read_cost=1.0, replicate=replicate)
+
+
+@pytest.mark.parametrize("mode", POOL_MODES)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=6, deadline=None)
+@given(g=random_dags(), seed=st.integers(0, 3), replicate=st.booleans())
+def test_exactly_once_under_faults(policy, mode, g, seed, replicate):
+    """Random failure/recovery interleavings (node losses, software
+    faults, promotions, checkpointed restarts): every task completes
+    effectively exactly once — one non-duplicate record per task."""
+    res = simulate(g, make_pool(mode), "async",
+                   options=SimOptions(seed=seed), scheduling=policy,
+                   faults=fault_storm(seed, replicate))
+    total = sum(ts.num_tasks for ts in g.nodes.values())
+    assert res.tasks_total == total
+    prim = [(r.set_name, r.index) for r in res.records if not r.duplicate]
+    assert len(prim) == total and len(set(prim)) == total
+    for r in res.records:
+        assert 0.0 <= r.start <= r.end
+
+
+@pytest.mark.parametrize("mode", POOL_MODES)
+@settings(max_examples=6, deadline=None)
+@given(g=random_dags(max_nodes=5), seed=st.integers(0, 5),
+       ops=st.lists(st.integers(0, 5), min_size=10, max_size=120))
+def test_no_slot_leak_after_node_loss(mode, g, seed, ops):
+    """Drive the engine through random dispatch / completion / node loss
+    / recovery / software-failure / replication interleavings: the
+    incremental indexes equal a brute-force recount after EVERY mutation
+    (``check_index_integrity``), and once the DAG drains and every node
+    is restored the pools are back to full capacity — no slot leaks."""
+    import random as _random
+    rng = _random.Random(seed)
+    eng = SchedEngine(g, make_pool(mode), policy="gpu_bestfit",
+                      faults=FaultOptions(node_failure_rate=1e-12,
+                                          replicate=True,
+                                          checkpoint_interval=5.0,
+                                          checkpoint_write_cost=0.5,
+                                          checkpoint_read_cost=1.0))
+    for n in g.nodes:
+        eng.observe(n, g.node(n).tx_mean)
+    running: list = []
+    down: list = []
+    now = 0.0
+    for op in ops:
+        if eng.done():
+            break
+        now += 1.0
+        for name, i, _k in eng.startable(now):
+            running.append((name, i))
+        eng.check_index_integrity()
+        if op <= 1 and running:
+            name, i = running.pop(rng.randrange(len(running)))
+            eng.complete(name, i)
+        elif op == 2:
+            k = rng.randrange(len(eng.pools))
+            node = rng.randrange(eng.pools[k].num_nodes)
+            if eng.fail_node(k, node, now=now,
+                             started=dict.fromkeys(running, 0.0)):
+                down.append((k, node))
+                running = [key for key in running if key in eng.launched]
+        elif op == 3 and down:
+            k, node = down.pop(rng.randrange(len(down)))
+            eng.recover_node(k, node, now=now)
+        elif op == 4 and running:
+            name, i = running[rng.randrange(len(running))]
+            ev = eng.fail_task(name, i, now=now,
+                               elapsed=rng.uniform(0.0, 20.0))
+            if ev is not None and ev.failed:
+                running.remove((name, i))
+        elif op == 5 and running:
+            name, i = running[rng.randrange(len(running))]
+            eng.try_replicate(name, i)
+        eng.check_index_integrity()
+    for name, i in running:
+        eng.complete(name, i)
+    for _ in range(2000):
+        if eng.done():
+            break
+        started = eng.startable(now)
+        assert started, "unfinished work with nothing startable"
+        for name, i, _k in started:
+            eng.complete(name, i)
+    assert eng.done()
+    for k, node in down:
+        eng.recover_node(k, node, now=now)
+    eng.check_index_integrity()
+    for k, p in enumerate(eng.pools):
+        assert eng.free_cpus[k] == p.total.cpus
+        assert eng.free_gpus[k] == p.total.gpus
+
+
+@settings(max_examples=8, deadline=None)
+@given(g=random_dags(), seed=st.integers(0, 3))
+def test_conservation_failed_is_never_lost(g, seed):
+    """Permanent (no-recovery) trace-driven node losses: the conservation
+    guard refuses any loss that would strand work, so every task still
+    completes — failed != lost, even when nodes never come back."""
+    trace = tuple((10.0 * (j + 1), "p0", j % 2) for j in range(3)) \
+        + ((25.0, "p1", 0),)
+    res = simulate(g, make_pool("node_level"), "async",
+                   options=SimOptions(seed=seed), scheduling="gpu_bestfit",
+                   faults=FaultOptions(node_failure_trace=trace,
+                                       task_failure_prob=0.1, seed=seed))
+    total = sum(ts.num_tasks for ts in g.nodes.values())
+    prim = {(r.set_name, r.index) for r in res.records if not r.duplicate}
+    assert len(prim) == total
+    assert res.node_failures <= len(trace)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=6, deadline=None)
+@given(g=random_dags(), seed=st.integers(0, 3))
+def test_disabled_faults_bit_identity(policy, g, seed):
+    """``FaultOptions()`` (all rates zero) is indistinguishable from
+    ``faults=None`` — bit-identical record tuples under stragglers +
+    mitigation, and every fault counter zero."""
+    opts = straggler_opts(seed)
+    fb = _feedback("feedback")
+
+    def trace(res):
+        return [(r.set_name, r.index, r.start, r.end, r.pool, r.node)
+                for r in res.records]
+
+    plain = simulate(g, make_pool("node_level"), "async", options=opts,
+                     scheduling=policy, feedback=fb)
+    off = simulate(g, make_pool("node_level"), "async", options=opts,
+                   scheduling=policy, feedback=fb, faults=FaultOptions())
+    assert trace(off) == trace(plain)
+    assert off.makespan == plain.makespan
+    assert off.node_failures == 0 and off.task_failures == 0
+    assert off.recoveries_restart == 0 and off.recoveries_rerun == 0

@@ -969,3 +969,343 @@ def test_scan_engine_rejects_integrity_check():
                       incremental=False)
     with pytest.raises(AssertionError):
         eng.check_index_integrity()
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: seeded in-container variants of the hypothesis fault
+# properties (tests/test_invariants.py runs the full random exploration)
+# ---------------------------------------------------------------------------
+
+from repro.core import FaultOptions  # noqa: E402
+
+
+def _on(**kw):
+    """Enabled-but-inert FaultOptions for direct engine driving: the
+    vanishing stochastic rate flips ``enabled`` without ever being drawn
+    from (the engine only injects what the caller tells it to)."""
+    kw.setdefault("node_failure_rate", 1e-12)
+    return FaultOptions(**kw)
+
+
+def _storm(seed, **kw):
+    """A real failure storm for end-to-end runs: stochastic node losses
+    with recovery, software task failures, and checkpointing on."""
+    base = dict(node_failure_rate=0.004, node_recovery_time=60.0,
+                task_failure_prob=0.15, seed=seed,
+                checkpoint_interval=5.0, checkpoint_write_cost=0.5,
+                checkpoint_read_cost=1.0)
+    base.update(kw)
+    return FaultOptions(**base)
+
+
+def _two_node_fault_engine(**fault_kw):
+    alloc = Allocation("ft", (
+        PoolSpec("p", 2, NodeSpec(cpus=8, gpus=2), node_level=True),),
+        transfer_cost=((0.0,),))
+    g = DAG()
+    g.add(TaskSet("s", 1, 4, 1, tx_mean=10.0, tx_sigma=0.0))
+    return SchedEngine(g, alloc, faults=_on(**fault_kw))
+
+
+@pytest.mark.parametrize("mode", ("aggregate", "node_level"))
+@pytest.mark.parametrize("policy", EVERY_POLICY)
+def test_disabled_faults_bit_identical_to_plain(mode, policy):
+    """``FaultOptions()`` (all rates zero) must be indistinguishable from
+    ``faults=None``: the full record tuples — starts, ends, placements —
+    are bit-identical and every fault counter stays zero."""
+    import random
+    g = _rand_dag(random.Random(5))
+    opts = SimOptions(seed=3)
+
+    def trace(res):
+        return [(r.set_name, r.index, r.start, r.end, r.pool, r.node)
+                for r in res.records]
+
+    plain = simulate(g, _inv_alloc(mode), "async", options=opts,
+                     scheduling=policy)
+    off = simulate(g, _inv_alloc(mode), "async", options=opts,
+                   scheduling=policy, faults=FaultOptions())
+    assert trace(off) == trace(plain)
+    assert off.makespan == plain.makespan
+    assert off.node_failures == 0 and off.task_failures == 0
+    assert off.recoveries_restart == 0 and off.recoveries_rerun == 0
+
+
+@pytest.mark.parametrize("mode", ("aggregate", "node_level"))
+@pytest.mark.parametrize("policy", EVERY_POLICY)
+def test_exactly_once_under_failure_storm_seeded(mode, policy):
+    """Seeded stochastic node losses + software failures + checkpointed
+    recovery: every task still completes effectively exactly once (one
+    non-duplicate record per task, no extras, no losses)."""
+    import random
+    for seed in range(2):
+        g = _rand_dag(random.Random(900 + seed))
+        total = sum(ts.num_tasks for ts in g.nodes.values())
+        res = simulate(g, _inv_alloc(mode), "async",
+                       options=SimOptions(seed=seed), scheduling=policy,
+                       faults=_storm(seed))
+        assert res.tasks_total == total
+        prim = [(r.set_name, r.index) for r in res.records
+                if not r.duplicate]
+        assert len(prim) == total and len(set(prim)) == total
+        for r in res.records:
+            assert 0.0 <= r.start <= r.end
+
+
+def test_executor_exactly_once_under_faults():
+    """The thread executor under a trace-driven node loss + software
+    failures reaches the same exactly-once guarantee as the simulator."""
+    import random
+    g = _rand_dag(random.Random(77))
+    total = sum(ts.num_tasks for ts in g.nodes.values())
+    res = RealExecutor(_inv_alloc("node_level"), tx_scale=1e-3).run(
+        g, "async", scheduling="gpu_bestfit",
+        faults=FaultOptions(task_failure_prob=0.3, seed=1,
+                            node_failure_trace=((3.0, "p0", 0),),
+                            node_recovery_time=30.0))
+    prim = {(r.set_name, r.index) for r in res.records if not r.duplicate}
+    assert prim == {(n, i) for n in g.nodes
+                    for i in range(g.node(n).num_tasks)}
+    assert res.node_failures == 1
+    assert res.task_failures >= 1
+
+
+@pytest.mark.parametrize("mode", ("aggregate", "node_level"))
+def test_no_slot_leak_after_node_loss_seeded(mode):
+    """Random interleavings of dispatch / completion / node loss / node
+    recovery / software failure / replication: every incremental index
+    equals a brute-force recount after EVERY mutation, and full capacity
+    is restored once all nodes are back and the DAG has drained."""
+    import random
+    for seed in range(3):
+        rng = random.Random(40 + seed)
+        g = _rand_dag(rng)
+        eng = SchedEngine(g, _inv_alloc(mode), policy="gpu_bestfit",
+                          faults=_on(replicate=True,
+                                     checkpoint_interval=5.0,
+                                     checkpoint_write_cost=0.5,
+                                     checkpoint_read_cost=1.0))
+        for n in g.nodes:
+            eng.observe(n, g.node(n).tx_mean)
+        running: list[tuple[str, int]] = []
+        down: list[tuple[int, int]] = []
+        now = 0.0
+        guard = 0
+        while not eng.done() and guard < 4000:
+            guard += 1
+            now += 1.0
+            for name, i, _k in eng.startable(now):
+                running.append((name, i))
+            eng.check_index_integrity()
+            op = rng.randint(0, 5)
+            if op <= 1 and running:
+                name, i = running.pop(rng.randrange(len(running)))
+                eng.complete(name, i)
+            elif op == 2:
+                k = rng.randrange(len(eng.pools))
+                node = rng.randrange(eng.pools[k].num_nodes)
+                ev = eng.fail_node(k, node, now=now,
+                                   started=dict.fromkeys(running, 0.0))
+                if ev is not None:
+                    down.append((k, node))
+                    running = [key for key in running
+                               if key in eng.launched]
+            elif op == 3 and down:
+                k, node = down.pop(rng.randrange(len(down)))
+                eng.recover_node(k, node, now=now)
+            elif op == 4 and running:
+                name, i = running[rng.randrange(len(running))]
+                ev = eng.fail_task(name, i, now=now,
+                                   elapsed=rng.uniform(0.0, 20.0))
+                if ev is not None and ev.failed:
+                    running.remove((name, i))
+            elif op == 5 and running:
+                name, i = running[rng.randrange(len(running))]
+                eng.try_replicate(name, i)
+            eng.check_index_integrity()
+        for name, i in running:
+            eng.complete(name, i)
+        while not eng.done() and guard < 5000:
+            guard += 1
+            started = eng.startable(now)
+            assert started, "unfinished work with nothing startable"
+            for name, i, _k in started:
+                eng.complete(name, i)
+        eng.check_index_integrity()
+        assert eng.done()
+        for k, node in down:
+            eng.recover_node(k, node, now=now)
+        eng.check_index_integrity()
+        for k, p in enumerate(eng.pools):
+            assert eng.free_cpus[k] == p.total.cpus
+            assert eng.free_gpus[k] == p.total.gpus
+
+
+def test_failure_refused_when_it_would_strand_work():
+    """Conservation guard: a node loss that would leave an unfinished set
+    with no possible placement anywhere is refused — failed must never
+    become lost."""
+    alloc = Allocation("c", (
+        PoolSpec("p", 2, NodeSpec(cpus=8, gpus=2), node_level=True),),
+        transfer_cost=((0.0,),))
+    g = DAG()
+    g.add(TaskSet("only", 2, 4, 1, tx_mean=10.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc, faults=_on())
+    assert eng.fail_node(0, 0, now=1.0) is not None
+    # the second loss would strand "only": refused
+    assert eng.fail_node(0, 1, now=2.0) is None
+    # ... and an already-down / unknown node is refused too
+    assert eng.fail_node(0, 0, now=2.0) is None
+    assert eng.fail_node(0, 99, now=2.0) is None
+    assert eng.recover_node(0, 0, now=3.0)
+    # with node 0 back, node 1 may now go down
+    assert eng.fail_node(0, 1, now=4.0) is not None
+
+
+def test_stale_completion_after_node_death_is_a_noop():
+    """Regression (audit): a task whose node died between dispatch and
+    completion was already released + re-enqueued by the failure path — a
+    late completion report from the dead attempt must not double-free the
+    slots or mark the task finished."""
+    eng = _two_node_fault_engine()
+    (name, i, _k), = eng.startable()
+    node = eng.node_placement(name, i)
+    ev = eng.fail_node(0, node, now=1.0, started={(name, i): 0.0})
+    assert ev.failed == ((name, i),)
+    free = (list(eng.free_cpus), list(eng.free_gpus))
+    eng.complete(name, i)  # the dead attempt's thread reports in late
+    assert (list(eng.free_cpus), list(eng.free_gpus)) == free
+    assert (name, i) not in eng.finished and not eng.done()
+    # the re-queued attempt dispatches onto the surviving node and wins
+    (n2, i2, _k2), = eng.startable()
+    assert (n2, i2) == (name, i)
+    assert eng.node_placement(name, i) != node
+    eng.complete(name, i)
+    assert eng.done()
+
+
+def test_spec_loser_cannot_resurrect_failed_task():
+    """Regression (audit): after a software failure re-enqueues a task, a
+    stale speculative-winner completion from a cancelled duplicate must
+    not resurrect its placement or finish the task."""
+    eng = _two_node_fault_engine(replicate=True)
+    (name, i, _k), = eng.startable()
+    assert eng.try_replicate(name, i) is not None
+    dup_node = eng.spec_node(name, i)
+    # the duplicate's node dies: duplicate cancelled, primary unharmed
+    ev = eng.fail_node(0, dup_node, now=1.0, started={(name, i): 0.0})
+    assert ev.cancelled == ((name, i),)
+    assert (name, i) in eng.launched
+    # now the primary hits a software fault: released + re-enqueued
+    ev2 = eng.fail_task(name, i, now=2.0, elapsed=2.0)
+    assert ev2.failed == ((name, i),)
+    free = (list(eng.free_cpus), list(eng.free_gpus))
+    eng.complete(name, i, spec_won=True)  # stale loser report
+    assert (list(eng.free_cpus), list(eng.free_gpus)) == free
+    assert (name, i) not in eng.finished
+    assert (name, i) not in eng.node_of
+    eng.recover_node(0, dup_node, now=3.0)
+    (n2, i2, _k2), = eng.startable()
+    assert (n2, i2) == (name, i)
+    eng.complete(name, i)
+    assert eng.done()
+
+
+def test_replica_promoted_when_primary_node_dies():
+    """Proactive replication: the primary's node dies, the replica on the
+    other node is promoted in place — the task is never re-enqueued and
+    no work is lost."""
+    eng = _two_node_fault_engine(replicate=True)
+    (name, i, _k), = eng.startable()
+    prim = eng.node_placement(name, i)
+    assert eng.try_replicate(name, i) is not None
+    rep = eng.spec_node(name, i)
+    assert rep != prim
+    ev = eng.fail_node(0, prim, now=5.0, started={(name, i): 0.0})
+    assert ev.promoted == ((name, i),)
+    assert ev.failed == () and ev.cancelled == ()
+    assert (name, i) in eng.launched
+    assert eng.node_placement(name, i) == rep
+    assert eng.replications == 1
+    eng.complete(name, i)
+    assert eng.done()
+    eng.recover_node(0, prim)
+    assert eng.free_cpus == [16] and eng.free_gpus == [4]
+
+
+def test_at_risk_flags_only_long_remaining_tasks():
+    """The replication risk gate: probability of losing the node before
+    completion (1 - exp(-hazard x remaining)) against ``replicate_risk``
+    — a long-remaining task is flagged, a nearly-done one is not."""
+    alloc = Allocation("r", (
+        PoolSpec("p", 2, NodeSpec(cpus=8, gpus=2), node_level=True),),
+        transfer_cost=((0.0,),))
+    g = DAG()
+    g.add(TaskSet("along", 1, 2, 0, tx_mean=100.0, tx_sigma=0.0))
+    g.add(TaskSet("bshort", 1, 2, 0, tx_mean=1.0, tx_sigma=0.0))
+    eng = SchedEngine(g, alloc,
+                      faults=_on(node_failure_rate=0.01, replicate=True,
+                                 replicate_risk=0.35))
+    started = {(name, i): 0.0 for name, i, _k in eng.startable()}
+    assert len(started) == 2
+    risky = eng.at_risk(started, now=0.0)
+    assert risky == [("along", 0)]
+
+
+def test_restart_recovery_resumes_from_checkpoint_progress():
+    """Forced restart arm: a checkpointing task that failed mid-flight
+    re-dispatches with the saved progress subtracted and the checkpoint
+    read (plus write overheads on the remainder) added."""
+    g = DAG()
+    g.add(TaskSet("t", 1, 4, 0, tx_mean=100.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0))
+    eng = SchedEngine(g, pool,
+                      faults=_on(recovery="restart",
+                                 checkpoint_interval=10.0,
+                                 checkpoint_write_cost=1.0,
+                                 checkpoint_read_cost=2.0))
+    eng.observe("t", 100.0)
+    (name, i, k), = eng.startable()
+    # 100s of work snapshots 10x at 1s each
+    assert eng.dispatch_duration(name, i, 100.0, k) == 110.0
+    assert eng.fail_task(name, i, now=55.0, elapsed=55.0) is not None
+    assert eng.recoveries_restart == 1 and eng.recoveries_rerun == 0
+    (name, i, k2), = eng.startable()
+    # floor(55 / (10+1)) = 5 intervals saved -> 50s of progress; the
+    # remainder re-pays the read (2) and its own snapshots (5x1)
+    assert eng.dispatch_duration(name, i, 100.0, k2) == 57.0
+    eng.complete(name, i)
+    assert eng.done()
+
+
+def test_rerun_recovery_repays_everything():
+    """Forced rerun arm: no checkpoints are written (dispatch durations
+    unchanged) and a failed attempt re-pays its full duration."""
+    g = DAG()
+    g.add(TaskSet("t", 1, 4, 0, tx_mean=100.0, tx_sigma=0.0))
+    pool = PoolSpec("p", 1, NodeSpec(cpus=8, gpus=0))
+    eng = SchedEngine(g, pool,
+                      faults=_on(recovery="rerun",
+                                 checkpoint_interval=10.0,
+                                 checkpoint_write_cost=1.0,
+                                 checkpoint_read_cost=2.0))
+    eng.observe("t", 100.0)
+    (name, i, k), = eng.startable()
+    assert eng.dispatch_duration(name, i, 100.0, k) == 100.0
+    assert eng.fail_task(name, i, now=55.0, elapsed=55.0) is not None
+    assert eng.recoveries_rerun == 1 and eng.recoveries_restart == 0
+    (name, i, k2), = eng.startable()
+    assert eng.dispatch_duration(name, i, 100.0, k2) == 100.0
+
+
+def test_hazard_rate_tracks_observed_failures():
+    """Trace-driven runs configure no stochastic rate, but the arbiter
+    and predictor still need a hazard: the empirical failures/(sites x
+    elapsed) estimate takes over once losses are observed."""
+    eng = _two_node_fault_engine()
+    assert eng.hazard_rate() == pytest.approx(1e-12)
+    (name, i, _k), = eng.startable()
+    node = eng.node_placement(name, i)
+    eng.fail_node(0, node, now=10.0, started={(name, i): 0.0})
+    # 1 failure over 2 sites x 10s
+    assert eng.hazard_rate() == pytest.approx(1.0 / 20.0)

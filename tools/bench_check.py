@@ -38,12 +38,20 @@ Failure conditions:
      and the two arms' dispatch sequences identical).  Timing values in
      that file are machine-dependent and are NOT drift-compared (none
      of its keys contain ``makespan``); only the fresh headline flags
-     gate.
+     gate;
+   - priced recovery arbitration still matches-or-beats both pure
+     recovery arms on every seed of the c-DG2 failure storm
+     (``faults.json``: per-seed arbitrated <= min(always-rerun,
+     always-restart)) while genuinely using both mechanisms, the
+     hazard term still lowers mid-run re-prediction error under node
+     losses, and disabled ``FaultOptions()`` stays bit-identical to
+     the committed fault-free baselines.
 
 Exits non-zero with a list of problems; wired into CI after the bench
-targets.  To accept an intentional change, regenerate the baseline:
-``make bench-policies bench-feedback bench-predictor`` and copy the new
-``benchmarks/out/*.json`` over ``benchmarks/baseline/``.
+targets.  To accept an intentional change, regenerate the baseline
+(e.g. ``make bench-policies bench-feedback bench-predictor
+bench-faults``) and copy the new ``benchmarks/out/*.json`` over
+``benchmarks/baseline/``.
 """
 
 from __future__ import annotations
@@ -191,6 +199,40 @@ def check_headlines(name, fresh, problems):
             problems.append(
                 f"{name}: incremental and brute-force-scan arms no longer "
                 f"emit identical dispatch sequences")
+    if name == "faults.json":
+        rec = fresh.get("recovery", {})
+        arms = rec.get("arms", {})
+        try:
+            arb = arms["arbitrated"]["makespans"]
+            rerun = arms["always_rerun"]["makespans"]
+            restart = arms["always_restart"]["makespans"]
+            for j, seed in enumerate(rec.get("seeds", [])):
+                pure = min(rerun[j], restart[j])
+                if arb[j] > pure * 1.0001:
+                    problems.append(
+                        f"{name}: recovery seed {seed}: arbitrated "
+                        f"({arb[j]}) lost to the best pure arm ({pure})")
+            if not arms["arbitrated"]["recoveries_restart"] \
+                    or not arms["arbitrated"]["recoveries_rerun"]:
+                problems.append(
+                    f"{name}: arbitrated arm no longer exercises both "
+                    f"recovery mechanisms (restarts="
+                    f"{arms['arbitrated']['recoveries_restart']!r}, "
+                    f"reruns={arms['arbitrated']['recoveries_rerun']!r})")
+            if not arms["arbitrated"]["node_failures"]:
+                problems.append(
+                    f"{name}: recovery scenario injected no node failures "
+                    f"— the storm is not exercising the fault layer")
+        except (KeyError, IndexError) as e:
+            problems.append(f"{name}: recovery arm missing: {e!r}")
+        haz = fresh.get("hazard", {})
+        e_with, e_without = haz.get("err_with"), haz.get("err_without")
+        if e_with is None or e_without is None or e_with > e_without:
+            problems.append(
+                f"{name}: hazard term no longer lowers mid-run "
+                f"re-prediction error under node losses "
+                f"(with={e_with!r}, without={e_without!r})")
+        check_identity(name, fresh, problems, "FaultOptions disabled")
 
 
 def main() -> int:

@@ -1,0 +1,65 @@
+"""Per-module coverage floors: `python tools/coverage_floor.py
+coverage.xml <path-suffix>=<floor> [...]`.
+
+Reads the Cobertura XML that ``make test-cov`` writes and fails when any
+named module's line coverage sits below its floor.  Matching is by path
+suffix so the gate is independent of how coverage.py roots filenames
+(``src/repro/...`` vs ``repro/...``).  Used by CI to pin the fault layer
+(``runtime/fault.py``) and the checkpoint store (``checkpoint/store.py``)
+— the modules whose failure paths only fire when things go wrong, where
+untested lines stay untested in production until a real outage.
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def module_rates(xml_path: str) -> dict[str, tuple[int, int]]:
+    """filename -> (covered, total) statement counts."""
+    out: dict[str, tuple[int, int]] = {}
+    for cls in ET.parse(xml_path).getroot().iter("class"):
+        fname = cls.get("filename", "")
+        covered = total = 0
+        for line in cls.iter("line"):
+            total += 1
+            if int(line.get("hits", "0")) > 0:
+                covered += 1
+        c, t = out.get(fname, (0, 0))
+        out[fname] = (c + covered, t + total)
+    return out
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print("usage: coverage_floor.py coverage.xml suffix=floor [...]")
+        return 2
+    rates = module_rates(argv[0])
+    problems = []
+    for spec in argv[1:]:
+        suffix, floor_s = spec.rsplit("=", 1)
+        floor = float(floor_s)
+        hits = {f: ct for f, ct in rates.items() if f.endswith(suffix)}
+        if not hits:
+            problems.append(f"{suffix}: not present in {argv[0]}")
+            continue
+        covered = sum(c for c, _t in hits.values())
+        total = sum(t for _c, t in hits.values())
+        rate = covered / total if total else 0.0
+        status = "OK" if rate >= floor else "BELOW FLOOR"
+        print(f"  {suffix}: {rate:.1%} ({covered}/{total} lines, "
+              f"floor {floor:.0%}) {status}")
+        if rate < floor:
+            problems.append(f"{suffix}: {rate:.1%} < floor {floor:.0%}")
+    if problems:
+        print("coverage-floor: FAILED")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("coverage-floor: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
