@@ -3,8 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all test-cov bench-policies bench-feedback \
         bench-predictor bench-topology bench-admission \
-        bench-engine-scale bench-faults bench-check bench-paper \
-        docs-check lint format-check
+        bench-engine-scale bench-faults bench-streaming bench-check \
+        bench-paper docs-check lint format-check
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -57,6 +57,13 @@ bench-engine-scale:
 ## baselines
 bench-faults:
 	$(PY) benchmarks/bench_faults.py
+
+## streaming tenancy: deadline-aware + elastic SLO/P99 win over
+## deadline-blind static capacity on the 1-hour diurnal serving
+## stream, revocation + lease expiry exercised, and the streaming run
+## API's bit-identity to the committed closed-campaign baselines
+bench-streaming:
+	$(PY) benchmarks/bench_streaming.py
 
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost

@@ -1,0 +1,258 @@
+"""Streaming service tenancy: open arrival streams with SLOs + elastic
+capacity (``core/stream.WorkflowStream``, ``RunConfig``,
+``ElasticOptions``, deadline-aware admission).
+
+The 1-hour open-stream scenario (per seed): a node-level 8-node Summit
+slice serves a diurnal batch-inference arrival process
+(`examples/serve_batch.py`-shaped decode jobs with per-arrival SLOs),
+interleaved with mid-priority multi-GPU analysis jobs on tight
+deadlines and a fixed-cadence low-priority training job — the serving
+fleet's recurring fine-tune.  The day/night swing saturates the slice
+around the diurnal peak and leaves it half-idle off-peak.
+
+Two arms, asserted per seed (CI gates on them via
+``benchmarks/baseline/streaming.json`` + ``make bench-check``):
+
+(a) **SLO headline** — deadline-aware admission + preemptive revocation
+    + elastic node leases (``aware_elastic``) attains at least the SLO
+    fraction of deadline-blind admission on the static slice
+    (``blind_static``) and no worse a P99 weighted slowdown, on every
+    seed.  The deadline-blind arm defers the wide analysis jobs on
+    price alone (no masking win, long device pinning) until they age
+    out — turning likely SLO misses into certain ones; the aware arm's
+    deadline override admits them while they still fit, revoking an
+    admitted-but-unstarted training job when one is in the way, and the
+    diurnal peak is absorbed by leased burst nodes that drain and
+    retire off-peak.
+
+(b) **Mechanism coverage** — revocation fires (aggregate across seeds)
+    and never kills a started workflow (engine invariant), and elastic
+    leases are both granted and expired on every seed; stream
+    conservation (arrived == finished) holds everywhere.
+
+(c) **Bit-identity** — wrapping the committed 3-workflow admission
+    campaign in a ``CampaignStream`` and passing admission via
+    ``RunConfig`` reproduces ``admission.json``'s seed-1 makespan
+    exactly, and the frozen-``RunConfig`` call form reproduces
+    ``predictor.json``'s convergence seed 3 exactly: the streaming API
+    may not disturb a closed-campaign schedule by a single event.
+
+Writes ``benchmarks/out/streaming.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import (DAG, AdmissionOptions, ElasticOptions,
+                        CampaignStream, FeedbackOptions, GeneratedStream,
+                        RunConfig, SimOptions, StreamTemplate, TaskSet,
+                        cdg_dag, simulate, summit_pool)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baseline")
+
+SEEDS = (1, 2, 3, 4, 5)
+LOGNORMAL = dict(tx_distribution="lognormal", lognormal_sigma=0.5)
+#: the 1-hour open-stream horizon (modelled seconds)
+HORIZON = 3600.0
+#: steady-state reporting window (modelled seconds)
+WINDOW = 900.0
+
+
+def service_pool():
+    """The static slice: 8 node-level Summit nodes (48 GPUs)."""
+    return summit_pool(8, node_level=True)
+
+
+def infer_dag() -> DAG:
+    """One batch-decode job (`examples/serve_batch.py` shape): a prefill
+    wave pacing a decode wave, 4 x 1-GPU tasks each."""
+    g = DAG()
+    g.add(TaskSet("prefill", 4, 4, 1, tx_mean=40.0, kind="inference"))
+    g.add(TaskSet("decode", 4, 4, 1, tx_mean=60.0, kind="inference"))
+    g.add_edge("prefill", "decode")
+    return g
+
+
+def analysis_dag() -> DAG:
+    """A deadline-carrying analysis job: 2 whole-node 6-GPU tasks."""
+    g = DAG()
+    g.add(TaskSet("ana", 2, 8, 6, tx_mean=240.0, kind="analysis"))
+    return g
+
+
+def train_dag() -> DAG:
+    """The recurring low-priority fine-tune: 4 x 6-GPU x 500 s tasks."""
+    g = DAG()
+    g.add(TaskSet("tune", 4, 8, 6, tx_mean=500.0, kind="training"))
+    return g
+
+
+def references(seed: int) -> dict[str, float]:
+    """Dedicated single-tenant makespans (slowdown denominators)."""
+    opts = SimOptions(seed=seed, **LOGNORMAL)
+    return {name: simulate(dag(), service_pool(), "async",
+                           options=opts).makespan
+            for name, dag in (("infer", infer_dag),
+                              ("analysis", analysis_dag),
+                              ("train", train_dag))}
+
+
+def build_stream(seed: int, refs: dict[str, float]) -> GeneratedStream:
+    """The per-seed arrival process (identical for both arms: all
+    randomness comes from the stream seed, fixed at construction)."""
+    infer = StreamTemplate("infer", infer_dag, priority=2, weight=4.0,
+                           deadline_slack=600.0,
+                           reference_makespan=refs["infer"], share=6.0)
+    analysis = StreamTemplate("analysis", analysis_dag, priority=1,
+                              weight=1.0, deadline_slack=450.0,
+                              reference_makespan=refs["analysis"],
+                              share=1.0)
+    train = StreamTemplate("train", train_dag, priority=0, weight=0.25,
+                           reference_makespan=refs["train"])
+    return GeneratedStream(
+        [infer, analysis], rate=1 / 40.0, horizon=HORIZON, seed=seed,
+        kind="diurnal", period=HORIZON, peak_ratio=5.0,
+        periodic=[(train, 1200.0)], name="serve")
+
+
+#: shared (deadline-blind) admission knobs, both arms: an aggressive
+#: price floor so wide jobs defer while the slice is saturated, a low
+#: hold ratio so the rule keeps biting once other wide sets are in
+#: flight, and a 400 s age-out so deferred work is never stranded
+ADMISSION = dict(i_floor=0.3, hold_ratio=0.1, max_defer_time=400.0)
+
+
+def blind_static_config() -> RunConfig:
+    return RunConfig(scheduling="priority",
+                     admission=AdmissionOptions(**ADMISSION))
+
+
+def aware_elastic_config() -> RunConfig:
+    return RunConfig(
+        scheduling="priority",
+        admission=AdmissionOptions(deadline_aware=True, revoke=True,
+                                   **ADMISSION),
+        elastic=ElasticOptions(max_lease_nodes=4, lease_term=600.0,
+                               check_interval=60.0))
+
+
+def arm_metrics(r) -> dict:
+    return dict(
+        slo=round(r.slo_attainment(), 4),
+        p50_slowdown=round(r.slowdown_percentile(0.50), 4),
+        p99_slowdown=round(r.slowdown_percentile(0.99), 4),
+        weighted_slowdown=round(r.weighted_slowdown(), 4),
+        deferrals=r.admission_deferrals,
+        revocations=r.admission_revocations,
+        leases_granted=r.leases_granted,
+        leases_expired=r.leases_expired)
+
+
+def run_streaming() -> dict:
+    per_seed = {}
+    for seed in SEEDS:
+        refs = references(seed)
+        opts = SimOptions(seed=seed, **LOGNORMAL)
+        blind = simulate(build_stream(seed, refs), service_pool(),
+                         options=opts, config=blind_static_config())
+        aware = simulate(build_stream(seed, refs), service_pool(),
+                         options=opts, config=aware_elastic_config())
+        for r in (blind, aware):
+            s = r.stream
+            assert s["finished"] == s["arrived"], (seed, s)  # conservation
+        per_seed[seed] = dict(
+            arrived=blind.stream["arrived"],
+            blind=arm_metrics(blind),
+            aware=arm_metrics(aware),
+            windows=aware.window_stats(WINDOW))
+    mean = lambda arm, key: round(  # noqa: E731 - tiny reduction helper
+        sum(r[arm][key] for r in per_seed.values()) / len(per_seed), 4)
+    return dict(seeds=list(SEEDS), horizon=HORIZON, per_seed=per_seed,
+                blind_slo_mean=mean("blind", "slo"),
+                aware_slo_mean=mean("aware", "slo"),
+                blind_p99_mean=mean("blind", "p99_slowdown"),
+                aware_p99_mean=mean("aware", "p99_slowdown"),
+                revocations_total=sum(r["aware"]["revocations"]
+                                      for r in per_seed.values()))
+
+
+def run_baseline_identity() -> dict:
+    """The streaming API wrappers must reproduce committed closed-
+    campaign baselines bit-exactly."""
+    out: dict = {}
+
+    # admission.json tenancy seed 1, replayed through CampaignStream +
+    # RunConfig (was: bare Campaign + legacy kwargs)
+    from bench_admission import build_campaign
+    from bench_admission import references as adm_references
+    adm = simulate(CampaignStream(build_campaign(adm_references(1))),
+                   summit_pool(), "async",
+                   options=SimOptions(seed=1, **LOGNORMAL),
+                   config=RunConfig(scheduling="priority",
+                                    admission=AdmissionOptions()))
+    with open(os.path.join(BASELINE_DIR, "admission.json")) as f:
+        committed = json.load(f)["tenancy"]["per_seed"]["1"][
+            "makespan_admission"]
+    out["campaign_stream_seed1"] = dict(
+        fresh=round(adm.makespan, 1), committed=committed,
+        identical=round(adm.makespan, 1) == committed)
+
+    # predictor.json convergence seed 3 through the frozen-RunConfig
+    # call form (was: legacy feedback= kwarg)
+    shared = dataclasses.replace(summit_pool(), oversubscribe_gpus=True)
+    res = simulate(cdg_dag("c-DG2"), shared, "async",
+                   options=SimOptions(seed=3, **LOGNORMAL),
+                   config=RunConfig(feedback=FeedbackOptions(
+                       straggler_k=2.0, speculate=True)))
+    with open(os.path.join(BASELINE_DIR, "predictor.json")) as f:
+        committed2 = json.load(f)["convergence"]["per_seed"]["3"]["makespan"]
+    out["runconfig_predictor_seed3"] = dict(
+        fresh=round(res.makespan, 1), committed=committed2,
+        identical=round(res.makespan, 1) == committed2)
+    return out
+
+
+def main() -> dict:
+    print("== (a) open stream: deadline-aware + elastic vs "
+          "deadline-blind static ==")
+    st = run_streaming()
+    for seed, r in st["per_seed"].items():
+        b, a = r["blind"], r["aware"]
+        print(f"  seed {seed}: slo {b['slo']:.3f} -> {a['slo']:.3f}  "
+              f"p99 {b['p99_slowdown']:.2f} -> {a['p99_slowdown']:.2f}  "
+              f"revocations={a['revocations']}  "
+              f"leases +{a['leases_granted']}/-{a['leases_expired']}  "
+              f"({r['arrived']} workflows)")
+        assert a["slo"] >= b["slo"], (seed, st)
+        assert a["p99_slowdown"] <= b["p99_slowdown"], (seed, st)
+        assert a["leases_granted"] > 0, (seed, st)    # burst absorbed...
+        assert a["leases_expired"] > 0, (seed, st)    # ...and returned
+        assert b["leases_granted"] == 0, (seed, st)   # static arm is static
+    print(f"  means: slo {st['blind_slo_mean']:.3f} -> "
+          f"{st['aware_slo_mean']:.3f}  p99 {st['blind_p99_mean']:.2f} "
+          f"-> {st['aware_p99_mean']:.2f}")
+    assert st["revocations_total"] > 0, st  # revocation exercised
+
+    print("== (b) streaming API stays bit-identical to committed "
+          "baselines ==")
+    ident = run_baseline_identity()
+    for which, r in ident.items():
+        print(f"  {which:28s} fresh={r['fresh']} "
+              f"committed={r['committed']} identical={r['identical']}")
+        assert r["identical"], (which, ident)
+
+    out = {"streaming": st, "baseline_identity": ident}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "streaming.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  streaming: OK (wrote {os.path.relpath(path)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

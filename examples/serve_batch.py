@@ -2,6 +2,11 @@
 architectures (dense / MoE / RWKV6 / hybrid), demonstrating the unified
 cache-specs + decode-step API the serving runtime is built on.
 
+The scheduler-side view of a fleet of these jobs is
+`examples/stream_tenancy.py`: an open `WorkflowStream` of prefill +
+decode workflows with per-arrival SLOs, deadline-aware admission, and
+elastic node leases.
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 

@@ -20,6 +20,8 @@ from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
 from .model_batch import (BatchEqns, jax_available,
                           staggered_async_ttx_batch)
 from .predictor import MakespanPrediction, MakespanPredictor
+from .results import RunResult, per_pool_task_counts
+from .runconfig import RunConfig, resolve_run_config
 from .simulator import SimOptions, SimResult, TaskRecord, simulate
 from .executor import ExecResult, RealExecutor
 from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
@@ -27,6 +29,8 @@ from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
                         gpu_bestfit_policy, locality_policy, lpt_policy,
                         nodepack_policy, priority_policy, sequential_policy)
 from .adaptive import PolicyComparison, compare_policies
+from .stream import (CampaignStream, GeneratedStream, StreamTemplate,
+                     WorkflowStream, prefix_view)
 from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
                        Campaign, CampaignView, Pipeline, Stage, WorkflowEntry,
                        WorkflowStats, campaign_stats, cdg_dag,
@@ -34,5 +38,49 @@ from .workflow import (CDG_SEQUENTIAL_GROUPS, CDG_TABLE2, DDMD_TABLE1,
                        ddmd_stage_tx, deepdrivemd_dag, fig2a_chain,
                        fig2b_fork, fig2b_with_paper_tx, fig2d_independent,
                        pipelines_to_dag, weighted_slowdown)
+from .resources import ElasticOptions
 
-__all__ = [s for s in dir() if not s.startswith("_")]
+#: the curated public surface — what ``from repro.core import *`` gives
+#: and what ``tests/test_public_api.py`` snapshots.  Additions are
+#: deliberate API growth; removals are breaking changes.
+__all__ = [
+    # structure + workloads
+    "DAG", "TaskSet", "Pipeline", "Stage", "pipelines_to_dag",
+    "fig2a_chain", "fig2b_fork", "fig2b_with_paper_tx", "fig2d_independent",
+    "deepdrivemd_dag", "cdg_dag", "ddmd_stage_tx", "cdg_sequential_stage_tx",
+    "ddmd_sequential_stage_groups", "DDMD_TABLE1", "CDG_TABLE2",
+    "CDG_SEQUENTIAL_GROUPS",
+    # resources
+    "Resources", "NodeSpec", "NodeState", "PoolSpec", "Allocation",
+    "ElasticOptions", "as_allocation", "node_states", "summit_pool",
+    "hybrid_pool", "tpu_pod_pool", "doa_res", "wla",
+    # analytic model + prediction
+    "ENTK_OVERHEAD", "ASYNC_OVERHEAD", "Prediction", "predict",
+    "async_ttx", "sequential_ttx", "sequential_ttx_grouped",
+    "staggered_async_ttx", "relative_improvement", "maskable_stages",
+    "tx_lookup_fn", "BatchEqns", "jax_available",
+    "staggered_async_ttx_batch", "MakespanPrediction", "MakespanPredictor",
+    # scheduling engine
+    "SchedEngine", "SchedulingPolicy", "SCHEDULING_POLICIES",
+    "get_scheduling_policy", "SetInfo", "FifoBackfill", "LargestTxFirst",
+    "GpuAwareBestFit", "LocalityAware", "NodePackTopology",
+    "CampaignPriority", "AdmissionOptions", "FailureEvent",
+    # estimator / feedback
+    "TxEstimator", "SetEstimate", "FeedbackOptions",
+    # faults
+    "FaultOptions", "FailureSchedule",
+    # tenancy: campaigns + streams
+    "Campaign", "CampaignView", "WorkflowEntry", "WorkflowStats",
+    "campaign_stats", "weighted_slowdown", "WorkflowStream",
+    "CampaignStream", "GeneratedStream", "StreamTemplate", "prefix_view",
+    # run API (both substrates)
+    "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
+    "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
+    "RealExecutor", "ExecResult",
+    # execution policies / comparison
+    "ExecutionPolicy", "async_policy", "sequential_policy",
+    "adaptive_policy", "adaptive_observed_policy", "arbitrated_policy",
+    "priority_policy", "lpt_policy", "gpu_bestfit_policy",
+    "locality_policy", "nodepack_policy", "PolicyComparison",
+    "compare_policies",
+]

@@ -51,62 +51,24 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 from .dag import DAG
-from .estimator import FeedbackOptions
+from .estimator import FeedbackOptions  # noqa: F401 (re-export surface)
 from .resources import Allocation, PoolSpec
+from .results import RunResult, TaskRecord
+from .runconfig import _LEGACY, RunConfig, resolve_run_config
 from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
-from .simulator import Mode, TaskRecord, per_pool_task_counts
-from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
-                       weighted_slowdown)
+from .simulator import Mode
+from .stream import WorkflowStream, prefix_view
+from .workflow import Campaign, CampaignView, campaign_stats
 from ..runtime.fault import FailureSchedule, FaultOptions
 
 
 @dataclasses.dataclass
-class ExecResult:
-    makespan: float
-    records: list[TaskRecord]
-    mode: str
-    tasks_total: int
-    policy: str = "fifo"
-    #: straggler preemption + migration count (runtime feedback enabled)
-    migrations: int = 0
-    #: speculative-duplicate launches (first finisher wins, loser freed)
-    speculations: int = 0
-    #: mid-run makespan re-predictions (``SchedEngine.repredict`` trace,
-    #: feedback enabled; see ``core/predictor.py``)
-    predictions: list = dataclasses.field(default_factory=list)
-    #: per-workflow metrics of a campaign run (None otherwise); see
-    #: ``core/workflow.WorkflowStats``.  Times are in MODELLED seconds
-    #: (wall / tx_scale), commensurate with the simulator's.
-    workflows: "dict[str, WorkflowStats] | None" = None
-    #: task sets the admission controller deferred at least once
-    admission_deferrals: int = 0
-    #: fault injection (``faults=FaultOptions(...)``): applied node losses,
-    #: software task failures, and the recovery arms taken per failure
-    node_failures: int = 0
-    task_failures: int = 0
-    recoveries_restart: int = 0
-    recoveries_rerun: int = 0
-    #: proactive at-risk replications launched (``FaultOptions.replicate``)
-    replications: int = 0
-    #: the engine's failure trace: (time, kind, detail...) tuples
-    fault_log: list = dataclasses.field(default_factory=list)
-
-    def throughput(self) -> float:
-        return self.tasks_total / self.makespan if self.makespan else 0.0
-
-    def per_pool_task_counts(self) -> dict[str, int]:
-        return per_pool_task_counts(self.records)
-
-    def weighted_slowdown(self) -> "float | None":
-        """Fairness-weighted mean slowdown of a campaign run (None for
-        single-workflow runs or when no reference makespans are set)."""
-        if not self.workflows:
-            return None
-        return weighted_slowdown(self.workflows)
-
-    def workflow_records(self, name: str) -> "list[TaskRecord]":
-        """The trace of one campaign workflow's tasks."""
-        return [r for r in self.records if r.workflow == name]
+class ExecResult(RunResult):
+    """A real-executor run's result: exactly the shared
+    :class:`~repro.core.results.RunResult` protocol.  ``records`` are in
+    WALL seconds; ``workflows`` (and everything derived from it — SLO
+    attainment, slowdown percentiles, window stats) is on the MODELLED
+    clock (wall / ``tx_scale``), commensurate with the simulator's."""
 
 
 class RealExecutor:
@@ -129,16 +91,52 @@ class RealExecutor:
         self.straggler_prob = straggler_prob
         self.straggler_factor = straggler_factor
 
-    def run(self, dag: "DAG | Campaign", mode: Mode = "async", *,
-            task_level: bool = False,
-            sequential_stage_groups: Sequence[Sequence[str]] | None = None,
-            scheduling: "str | SchedulingPolicy" = "fifo",
-            feedback: "FeedbackOptions | None" = None,
-            admission: "AdmissionOptions | None" = None,
-            faults: "FaultOptions | None" = None,
+    def run(self, dag: "DAG | Campaign | WorkflowStream",
+            mode: Mode = "async", *,
+            config: "RunConfig | None" = None,
+            task_level=_LEGACY,
+            sequential_stage_groups=_LEGACY,
+            scheduling=_LEGACY,
+            feedback=_LEGACY,
+            admission=_LEGACY,
+            faults=_LEGACY,
             ) -> ExecResult:
+        """Execute ``dag`` (a DAG, a closed Campaign, or an open
+        :class:`~repro.core.stream.WorkflowStream` consumed incrementally
+        on the modelled clock).  Scheduling-semantics knobs arrive in
+        ``config=RunConfig(...)``; the individual keyword arguments are
+        the deprecated legacy form (bit-identical, not mixable with
+        ``config=`` — see ``core/runconfig.py``)."""
+        cfg = resolve_run_config(config, dict(
+            task_level=task_level,
+            sequential_stage_groups=sequential_stage_groups,
+            scheduling=scheduling, feedback=feedback,
+            admission=admission, faults=faults), "RealExecutor.run()")
+        task_level = cfg.task_level
+        sequential_stage_groups = cfg.sequential_stage_groups
+        scheduling = cfg.scheduling
+        feedback = cfg.feedback
+        admission = cfg.admission
+        faults = cfg.faults
+
+        stream: "WorkflowStream | None" = None
+        if isinstance(dag, WorkflowStream):
+            closed = dag.closed_campaign
+            if closed is not None:
+                dag = closed  # a closed stream IS its campaign
+            else:
+                stream = dag
+                stream.reset()
         view: "CampaignView | None" = None
-        if isinstance(dag, Campaign):
+        arrived_entries: "list" = []
+        if stream is not None:
+            if mode != "async":
+                raise ValueError("streams execute asynchronously "
+                                 "(mode='async')")
+            arrived_entries = list(stream.take_until(0.0))
+            view = prefix_view(arrived_entries, stream.name)
+            g = view.dag
+        elif isinstance(dag, Campaign):
             if mode != "async":
                 raise ValueError("campaigns execute asynchronously "
                                  "(mode='async')")
@@ -147,15 +145,17 @@ class RealExecutor:
         else:
             g = dag if mode == "async" else dag.with_sequential_barriers(
                 sequential_stage_groups)
-        wf_of = view.workflow_of if view is not None else {}
-        #: distinct workflow arrivals (modelled s), for dispatcher wakeups
-        arrivals = (sorted({w.arrival for w in view.entries})
-                    if view is not None else [])
         rng = random.Random(self.seed)
         engine = SchedEngine(g, self.pool, policy=scheduling,
                              task_level=task_level, feedback=feedback,
                              campaign=view, admission=admission,
-                             faults=faults)
+                             faults=faults, elastic=cfg.elastic)
+        # live for streams (add_workflow extends it); a superset-correct
+        # copy of view.workflow_of for closed campaigns
+        wf_of = engine.workflow_of if view is not None else {}
+        #: distinct workflow arrivals (modelled s), for dispatcher wakeups
+        arrivals = (sorted({w.arrival for w in view.entries})
+                    if view is not None else [])
         faults = engine.faults  # disabled options normalized to None
         schedule = (FailureSchedule(faults,
                                     [(k, p.num_nodes)
@@ -164,14 +164,21 @@ class RealExecutor:
                     if faults is not None else None)
 
         durations: dict[tuple[str, int], float] = {}
-        for name in engine.order:
-            ts = g.node(name)
-            for i in range(ts.num_tasks):
-                mu = ts.tx_mean
-                d = max(0.0, rng.gauss(mu, ts.tx_sigma)) if mu else 0.0
-                if self.straggler_prob and rng.random() < self.straggler_prob:
-                    d *= self.straggler_factor
-                durations[(name, i)] = d
+
+        def sample_durations(names: "Sequence[str]") -> None:
+            """Pre-sample every task of ``names`` in set order (the RNG
+            draw order is part of the trace contract)."""
+            for name in names:
+                ts = g.node(name)
+                for i in range(ts.num_tasks):
+                    mu = ts.tx_mean
+                    d = max(0.0, rng.gauss(mu, ts.tx_sigma)) if mu else 0.0
+                    if (self.straggler_prob
+                            and rng.random() < self.straggler_prob):
+                        d *= self.straggler_factor
+                    durations[(name, i)] = d
+
+        sample_durations(engine.order)
 
         lock = threading.Lock()
         cv = threading.Condition(lock)
@@ -359,14 +366,33 @@ class RealExecutor:
                      if schedule is not None else None)
         #: pending node recoveries: (modelled time, pool, node) heap
         recoveries: list[tuple[float, int, int]] = []
+        #: next elastic control step (modelled s)
+        next_elastic = (engine.elastic.check_interval
+                        if engine.elastic is not None else math.inf)
+
+        def stream_pending() -> bool:
+            return stream is not None and stream.next_arrival() is not None
+
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
-                while not engine.done():
+                while not engine.done() or stream_pending():
                     # backfill: start everything ready that fits.  The
                     # pass runs on the modelled clock (see observe) so
                     # campaign arrivals gate on the same time base as the
-                    # simulator's — and so do failure/recovery events
+                    # simulator's — and so do failure/recovery, stream
+                    # arrival, and elastic lease events
                     now = (time.perf_counter() - t0) / self.tx_scale
+                    if stream is not None:
+                        new_names: list[str] = []
+                        for w in stream.take_until(now):
+                            arrived_entries.append(w)
+                            new_names.extend(
+                                engine.add_workflow(w, now=now))
+                        sample_durations(new_names)
+                    if now >= next_elastic:
+                        engine.elastic_pass(now)
+                        next_elastic = (now
+                                        + engine.elastic.check_interval)
                     while recoveries and recoveries[0][0] <= now:
                         _, rk, rn = heapq.heappop(recoveries)
                         engine.recover_node(rk, rn, now=now)
@@ -397,11 +423,12 @@ class RealExecutor:
                         ex.submit(body, name, i, pool_idx,
                                   gen.get((name, i), 0), 0.0, d, False,
                                   frac)
-                    if not engine.done() and not batch:
+                    if (not engine.done() or stream_pending()) \
+                            and not batch:
                         # with mitigation on, the wait doubles as the
                         # straggler watchdog cadence; a pending campaign
-                        # arrival (or fault/recovery event) bounds the
-                        # sleep so its dispatch pass is not missed
+                        # arrival (or fault/recovery/stream/lease event)
+                        # bounds the sleep so its pass is not missed
                         timeout = 0.05 if (watchdog or replicating) else 5.0
                         nxt = next((a for a in arrivals if a > now), None)
                         if next_fail is not None:
@@ -410,6 +437,12 @@ class RealExecutor:
                         if recoveries:
                             nxt = (recoveries[0][0] if nxt is None
                                    else min(nxt, recoveries[0][0]))
+                        if stream_pending():
+                            na = stream.next_arrival()
+                            nxt = na if nxt is None else min(nxt, na)
+                        if next_elastic < math.inf:
+                            nxt = (next_elastic if nxt is None
+                                   else min(nxt, next_elastic))
                         if nxt is not None:
                             timeout = min(timeout, max(
                                 0.0, (nxt - now) * self.tx_scale) + 1e-3)
@@ -458,6 +491,10 @@ class RealExecutor:
                     engine.repredict(now, modelled)
 
         makespan = max((r.end for r in records), default=0.0)
+        if stream is not None:
+            # final per-workflow stats span everything that arrived (the
+            # re-merged view names sets exactly as add_workflow did)
+            view = prefix_view(arrived_entries, stream.name)
         workflows = None
         if view is not None:
             # per-workflow stats on the MODELLED clock, commensurate with
@@ -481,4 +518,10 @@ class RealExecutor:
                           recoveries_restart=engine.recoveries_restart,
                           recoveries_rerun=engine.recoveries_rerun,
                           replications=engine.replications,
-                          fault_log=engine.fault_log)
+                          fault_log=engine.fault_log,
+                          admission_revocations=engine.admission_revocations,
+                          leases_granted=engine.leases_granted,
+                          leases_expired=engine.leases_expired,
+                          lease_log=engine.lease_log,
+                          stream=(engine.stream_accounting()
+                                  if stream is not None else None))

@@ -136,7 +136,11 @@ def async_ttx(dag: DAG, overhead_c: float = 0.0,
 
 
 def relative_improvement(t_seq: float, t_async: float) -> float:
-    """Eqn. 5: ``I = 1 - t_async / t_seq``."""
+    """Eqn. 5: ``I = 1 - t_async / t_seq`` (0 on an empty workload —
+    an open stream's engine can be legitimately empty before the first
+    arrival)."""
+    if t_seq == 0:
+        return 0.0
     return 1.0 - t_async / t_seq
 
 

@@ -91,6 +91,24 @@ class MakespanPrediction:
     #: back to back with no cross-set overlap (the Eqn.-2-shaped serial
     #: counterpart of ``remaining``, for prediction-trace consumers).
     residual_seq: float = 0.0
+    #: per-workflow predicted finish times of a multi-tenant run:
+    #: ``(workflow, predicted_finish_clock)`` pairs, sorted by name, for
+    #: every workflow that still has pending or running work.  Empty for
+    #: single-workflow runs — the field defaults keep those snapshots
+    #: bit-identical to their pre-streaming form.
+    wf_finish: "tuple[tuple[str, float], ...]" = ()
+    #: per-workflow Eqn. 2-5 snapshots ``(workflow, t_seq, t_async,
+    #: improvement)``, batch-evaluated via ``BatchEqns`` when a pass
+    #: prices many workflows at once (see ``SchedEngine.repredict``)
+    wf_models: "tuple[tuple[str, float, float, float], ...]" = ()
+
+    def predicted_finish(self, workflow: str) -> "float | None":
+        """This snapshot's predicted finish clock for one workflow
+        (``None`` when the workflow has no remaining work here)."""
+        for wf, fin in self.wf_finish:
+            if wf == workflow:
+                return fin
+        return None
 
     @property
     def residual_improvement(self) -> float:
@@ -133,6 +151,12 @@ class MakespanPredictor:
         #: only the sets whose inputs moved (dirty sets)
         self._residual_memo: dict[str, tuple[tuple, float]] = {}
         self._model_cache: "tuple | None" = None
+        #: epoch-keyed cache of the batched per-workflow Eqn. 2-5
+        #: snapshot (see :meth:`workflow_models`)
+        self._wf_model_cache: "tuple | None" = None
+        #: lazily-compiled ``BatchEqns`` over ``self.g`` (rebuilt when
+        #: :meth:`add_sets` grows the graph)
+        self._batch_eqns = None
         #: cross-set GPU contention term (see :meth:`_effective_slots`):
         #: enabled by the engine when the allocation carries node-level
         #: occupancy (``PoolSpec.node_level``), whose honest accounting is
@@ -250,10 +274,27 @@ class MakespanPredictor:
         so between them ``predict`` re-prices only dirty sets."""
         self._tx_epoch += 1
         self._model_cache = None
+        self._wf_model_cache = None
         if name is None:
             self._residual_memo.clear()
         else:
             self._residual_memo.pop(name, None)
+
+    def add_sets(self, names: "Sequence[str]",
+                 workflow_of: "Mapping[str, str] | None" = None) -> None:
+        """Register sets that joined ``self.g`` after construction (a
+        stream arrival merged by ``SchedEngine.add_workflow``).  The
+        construction-time structure snapshots (topological order, slot
+        counts, related-set closures) are extended; existing entries stay
+        valid because an arriving workflow is dependency-disconnected
+        from everything already in the graph."""
+        self.workflow_of.update(workflow_of or {})
+        self._order = self.g.topological_order()
+        for n in names:
+            self._slots[n] = self._set_slots(self.g.node(n))
+            self._related[n] = self._related_sets(n)
+        self._batch_eqns = None
+        self.invalidate()
 
     # -- Eqns. 2-6 on live TXs ---------------------------------------------
     def live_model(self, tx: TxFn) -> tuple[float, float, float]:
@@ -278,6 +319,40 @@ class MakespanPredictor:
         TXs — e.g. DeepDriveMD's ``3 t_seq - 2 t_Aggr - 1 t_Train``."""
         return staggered_async_ttx([tx(s) for s in stage_names], n,
                                    list(maskable))
+
+    def workflow_models(self, tx: TxFn, workflows: "Sequence[str]",
+                        ) -> "tuple[tuple[str, float, float, float], ...]":
+        """Per-workflow Eqn. 2-5 snapshots ``(wf, t_seq, t_async, I)``,
+        evaluated for ALL workflows in one :class:`BatchEqns` pass over
+        the merged graph with each row's TX vector masked to its
+        workflow's sets (a masked stage contributes a 0 span, so the row
+        reduces to the workflow's own subgraph).  This is the
+        many-candidate pricing path streams make hot: one vectorized
+        NumPy segment reduction instead of W scalar graph walks, cached
+        on the TX epoch like :meth:`live_model` (same invalidation
+        discipline, so serving the cache is bit-identical)."""
+        wfs = tuple(sorted(workflows))
+        if not wfs:
+            return ()
+        if self.cache:
+            c = self._wf_model_cache
+            if c is not None and c[0] == (self._tx_epoch, wfs):
+                return c[1]
+        if self._batch_eqns is None:
+            from .model_batch import BatchEqns
+            self._batch_eqns = BatchEqns(self.g, backend="numpy")
+        eq = self._batch_eqns
+        rows = []
+        for wf in wfs:
+            rows.append([tx(n) if self.workflow_of.get(n) == wf else 0.0
+                         for n in eq.names])
+        import numpy as np
+        t_seq, t_async, imp = eq.evaluate(np.asarray(rows, dtype=np.float64))
+        out = tuple((wf, float(t_seq[j]), float(t_async[j]), float(imp[j]))
+                    for j, wf in enumerate(wfs))
+        if self.cache:
+            self._wf_model_cache = ((self._tx_epoch, wfs), out)
+        return out
 
     # -- residual (remaining-makespan) bound -------------------------------
     def _wave_span(self, t: float, sigma: float, k: int) -> float:
@@ -459,12 +534,27 @@ class MakespanPredictor:
         if self._bound_gpus and total.gpus:
             remaining = max(remaining, gpu_work / total.gpus)
 
+        # per-workflow predicted finish: the longest residual path into
+        # any of the workflow's sets that still carry work (multi-tenant
+        # runs only — single-workflow snapshots keep the empty default)
+        wf_fin: dict[str, float] = {}
+        if self.workflow_of:
+            for n in self._order:
+                if not (pending.get(n, 0) or run_count.get(n, 0)):
+                    continue
+                wf = self.workflow_of.get(n)
+                if wf is None:
+                    continue
+                wf_fin[wf] = max(wf_fin.get(wf, 0.0), best[n])
+
         t_seq, t_async, improvement = self.live_model(tx)
         return MakespanPrediction(
             now=now, done_fraction=done_fraction, t_seq=t_seq,
             t_async=t_async, improvement=improvement,
             remaining=remaining, total=now + remaining,
-            residual_seq=sum(residual.values()))
+            residual_seq=sum(residual.values()),
+            wf_finish=tuple(sorted((wf, now + b)
+                                   for wf, b in wf_fin.items())))
 
     # -- straggler-mitigation pricing (the arbiter's cost model) -----------
     @staticmethod

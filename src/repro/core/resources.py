@@ -128,6 +128,10 @@ class NodeState:
     group_free: list[int] = dataclasses.field(default_factory=list)
     #: node lost to a failure: fits nothing until :meth:`restore`
     down: bool = False
+    #: leased node past its expiry: accepts no NEW placements but keeps
+    #: running the tasks already on it; retired (-> ``down``) once idle,
+    #: so lease expiry can never strand a placed task
+    draining: bool = False
 
     def __post_init__(self):
         if self.free_cpus < 0:
@@ -139,8 +143,15 @@ class NodeState:
                                for _ in range(self.spec.nvlink_groups)]
 
     def fits(self, need_cpus: int, need_gpus: int) -> bool:
-        return (not self.down and need_cpus <= self.free_cpus
+        return (not self.down and not self.draining
+                and need_cpus <= self.free_cpus
                 and need_gpus <= self.free_gpus)
+
+    @property
+    def idle(self) -> bool:
+        """Nothing placed here (free counters at full capacity)."""
+        return (self.free_cpus == self.cpus
+                and self.free_gpus == self.spec.gpus)
 
     def fail(self) -> tuple[int, int]:
         """Take the node down; returns the (cpus, gpus) that were still
@@ -148,6 +159,7 @@ class NodeState:
         caller must have released/failed every task placed here first."""
         lost = (self.free_cpus, self.free_gpus)
         self.down = True
+        self.draining = False
         self.free_cpus = 0
         self.free_gpus = 0
         self.group_free = [0] * self.spec.nvlink_groups
@@ -157,6 +169,7 @@ class NodeState:
         """Bring a failed node back, fully idle; returns the (cpus, gpus)
         capacity being re-added to the aggregate view."""
         self.down = False
+        self.draining = False
         self.free_cpus = self.cpus
         self.free_gpus = self.spec.gpus
         self.group_free = [self.spec.gpus_per_group
@@ -174,7 +187,11 @@ class NodeState:
 
     def largest_block(self) -> int:
         """Largest contiguous free GPU block (within one NVLink group) —
-        the fragmentation metric ``nodepack`` scores candidates by."""
+        the fragmentation metric ``nodepack`` scores candidates by.
+        A draining node offers no block: its free GPUs exist but accept
+        nothing new."""
+        if self.draining:
+            return 0
         return max(self.group_free, default=0)
 
     def acquire(self, need_cpus: int,
@@ -224,6 +241,47 @@ def node_states(pool: "PoolSpec") -> list[NodeState]:
     return [NodeState(pool.node, pool.node.cpus - base - (1 if i < extra
                                                           else 0))
             for i in range(pool.num_nodes)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticOptions:
+    """Elastic capacity: one ``node_level`` pool of the allocation may
+    grow and shrink mid-run through whole-node *leases* with expiry, so
+    slots follow queue depth (the cloud-bursting half of streaming
+    tenancy).
+
+    The engine's periodic elastic pass (driven by both substrates every
+    ``check_interval`` modelled seconds) grants at most one lease node
+    per pass while the ready queue's strict resource demand exceeds
+    ``grow_threshold`` x the pool's usable free capacity, up to
+    ``max_lease_nodes`` concurrently-leased nodes.  A lease lasts
+    ``lease_term`` seconds; at expiry an idle node retires immediately,
+    a busy one *drains* (no new placements, running tasks finish) and
+    retires on its last release — lease expiry never strands a placed
+    task.  Retired nodes are recycled by later grants, so the node table
+    stays bounded on unbounded streams.
+
+    ``max_lease_nodes = 0`` disables elasticity entirely (normalized to
+    ``None`` by the engine — no elastic code path runs)."""
+
+    #: name of the pool to elasticize (None = the allocation's first
+    #: ``node_level`` pool); must be a node-level pool
+    pool: "str | None" = None
+    #: burst budget: concurrently-leased whole nodes (0 disables)
+    max_lease_nodes: int = 4
+    #: modelled seconds a granted node stays before expiry
+    lease_term: float = 600.0
+    #: grow when queued strict demand > threshold x usable free capacity
+    grow_threshold: float = 2.0
+    #: cadence (modelled s) of the substrates' elastic pass (grants and
+    #: expiries are both evaluated at this granularity)
+    check_interval: float = 60.0
+    #: don't grow for a nearly-empty queue, whatever the ratio says
+    min_queue_tasks: int = 1
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_lease_nodes > 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,96 @@
+"""Unified run configuration for both execution substrates.
+
+Seven PRs of options accreted into parallel kwarg sprawl on
+``simulate()`` and ``RealExecutor.run()`` (``scheduling=``,
+``feedback=``, ``admission=``, ``faults=``, ...).  :class:`RunConfig`
+bundles them — plus the streaming-tenancy knobs this PR adds
+(``elastic``, ``slo_window``) — into one frozen dataclass accepted as
+``simulate(dag, pool, config=RunConfig(...))`` and
+``executor.run(dag, config=RunConfig(...))``.
+
+Legacy kwargs keep working through :func:`resolve_run_config`: the shim
+emits one :class:`DeprecationWarning` per process the first time any
+legacy kwarg is used, and *forbids mixing* the kwarg and config forms in
+one call (silently preferring either would make the other a no-op).
+Resolution is purely mechanical — a legacy call and its ``RunConfig``
+equivalent produce bit-identical runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from ..runtime.fault import FaultOptions
+from .estimator import FeedbackOptions
+from .resources import ElasticOptions
+from .sched_engine import AdmissionOptions, SchedulingPolicy
+
+__all__ = ["RunConfig", "resolve_run_config"]
+
+#: sentinel distinguishing "kwarg not passed" from an explicit None/default
+#: (passing ``scheduling="fifo"`` explicitly still counts as legacy usage)
+_LEGACY = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything about *how* to run a workload, substrate-independent.
+
+    What to run (DAG / Campaign / WorkflowStream), where (PoolSpec /
+    Allocation) and the substrate's own physics (SimOptions sampling,
+    RealExecutor tx_scale) stay separate arguments — this bundles the
+    scheduling-semantics knobs the two substrates must agree on."""
+
+    #: scheduling policy name or instance (``SCHEDULING_POLICIES``)
+    scheduling: "str | SchedulingPolicy" = "fifo"
+    #: task-level dependency granularity (the paper's future-work mode)
+    task_level: bool = False
+    #: explicit PST stage groups for ``mode="sequential"``
+    sequential_stage_groups: "list | None" = None
+    #: runtime feedback / straggler mitigation (``core/estimator.py``)
+    feedback: "FeedbackOptions | None" = None
+    #: prediction-driven admission control (campaign/stream runs)
+    admission: "AdmissionOptions | None" = None
+    #: fault injection + priced recovery (``runtime/fault.py``)
+    faults: "FaultOptions | None" = None
+    #: elastic capacity leases (``core/resources.ElasticOptions``)
+    elastic: "ElasticOptions | None" = None
+    #: sliding-window width (modelled s) for ``RunResult.window_stats``
+    #: consumers; recorded on the config for benchmarks to share
+    slo_window: "float | None" = None
+
+
+_warned = False
+
+
+def _warn_legacy(where: str, names: "list[str]") -> None:
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        f"{where}: passing {', '.join(sorted(names))} as separate keyword "
+        f"arguments is deprecated — bundle them in config=RunConfig(...) "
+        f"(this warning is emitted once per process)",
+        DeprecationWarning, stacklevel=4)
+
+
+def resolve_run_config(config: "RunConfig | None", legacy: dict,
+                       where: str) -> RunConfig:
+    """Fold a substrate entry point's arguments into one ``RunConfig``.
+
+    ``legacy`` maps kwarg name -> passed value, with the module-level
+    ``_LEGACY`` sentinel marking "not passed".  Mixing any legacy kwarg
+    with ``config=`` raises ``TypeError``; pure-legacy calls warn once
+    per process and resolve to the equivalent config."""
+    used = {k: v for k, v in legacy.items() if v is not _LEGACY}
+    if config is not None:
+        if used:
+            raise TypeError(
+                f"{where}: pass either config=RunConfig(...) or the legacy "
+                f"keyword arguments ({', '.join(sorted(used))}), not both")
+        return config
+    if used:
+        _warn_legacy(where, list(used))
+    return RunConfig(**used)

@@ -77,6 +77,34 @@ scheduling pass, which newly-ready task sets join the dispatch frontier:
   set can start, the best deferred set is admitted unconditionally, and
   ``max_defer_time`` optionally ages any deferral into an admission.
 
+Streaming tenancy (``core/stream.py``)
+--------------------------------------
+With an open :class:`~repro.core.stream.WorkflowStream` the engine never
+sees "the whole DAG": substrates merge each arrival into the live state
+through :meth:`SchedEngine.add_workflow` (dependency counters, ready
+queues, priority order, incremental indexes, predictor snapshots — all
+extended in place), and admission prices only the arrived prefix.  Three
+extensions serve SLOs:
+
+- *deadline-aware admission* (``AdmissionOptions.deadline_aware``): a
+  priced defer is overridden once the candidate's dedicated residual no
+  longer fits before its ``WorkflowEntry.deadline`` plus margin;
+- *preemptive revocation* (``AdmissionOptions.revoke``): such a deadline
+  admit may un-admit one not-yet-started lower-priority workflow
+  (:meth:`SchedEngine.revoke_workflow`; started workflows are never
+  revoked, revoked work re-enters the deferred pool);
+- *elastic capacity* (``elastic=ElasticOptions(...)``): one node-level
+  pool grows by whole-node leases while queued strict demand outruns its
+  usable free capacity and shrinks at lease expiry — idle nodes retire
+  at once, busy ones drain and retire on their last release, so expiry
+  never strands a placed task (:meth:`SchedEngine.elastic_pass`; the
+  aggregate-counter/index invariants hold across every resize and are
+  asserted by :meth:`SchedEngine.check_index_integrity`).
+
+:meth:`SchedEngine.stream_accounting` reports the conservation partition
+(arrived == finished + admitted + deferred + queued) the invariant suite
+drives random streams against.
+
 Admission-deferred sets are also *preempted ahead of running-task
 migration* in the arbiter's cost model: their queued tasks do not count
 as slot pressure (deferral already absorbed them), so the arbiter
@@ -172,9 +200,9 @@ from ..runtime.fault import FaultOptions
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions, TxEstimator
 from .predictor import MakespanPrediction, MakespanPredictor
-from .resources import (Allocation, NodeState, PoolSpec, as_allocation,
-                        node_states)
-from .workflow import CampaignView
+from .resources import (Allocation, ElasticOptions, NodeState, PoolSpec,
+                        as_allocation, node_states)
+from .workflow import WORKFLOW_SEP, CampaignView, WorkflowEntry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +228,21 @@ class AdmissionOptions:
     #: age any deferral into an admission after this long (``inf`` = only
     #: the idle-admission conservation guard ends a deferral).
     max_defer_time: float = math.inf
+    #: price SLOs into the defer decision: a priced-path defer is
+    #: overridden when the candidate workflow's *deadline* no longer fits
+    #: its dedicated residual (plus margin) — deferring would turn a
+    #: likely miss into a certain one.  Off by default so deadline-blind
+    #: runs (every committed baseline) stay bit-identical.
+    deadline_aware: bool = False
+    #: safety margin of the miss test, as a fraction of the candidate's
+    #: dedicated residual: admit on deadline when
+    #: ``deadline - now - alone.remaining <= margin * alone.remaining``.
+    deadline_margin: float = 0.25
+    #: with ``deadline_aware``: a deadline-driven admission may *revoke*
+    #: (un-admit, back to deferred) one strictly-lower-priority admitted
+    #: workflow none of whose tasks have started, freeing the frontier
+    #: for the urgent arrival.  Started workflows are never revoked.
+    revoke: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -536,6 +579,7 @@ class SchedEngine:
                  campaign: "CampaignView | None" = None,
                  admission: "AdmissionOptions | None" = None,
                  faults: "FaultOptions | None" = None,
+                 elastic: "ElasticOptions | None" = None,
                  incremental: bool = True):
         self.g = g
         self.alloc = as_allocation(pool)
@@ -556,6 +600,9 @@ class SchedEngine:
             dict(campaign.arrival_of) if campaign else {})
         self.wf_priority: dict[str, int] = (
             dict(campaign.priority_of) if campaign else {})
+        #: set -> its workflow's SLO deadline (None = best-effort)
+        self.wf_deadline: dict[str, "float | None"] = (
+            dict(campaign.deadline_of) if campaign else {})
         self.admission = admission
         #: sets the admission controller let onto the dispatch frontier
         #: (sticky); with admission off every set is implicitly admitted
@@ -566,6 +613,17 @@ class SchedEngine:
         self.admission_deferrals = 0
         #: admission trace: (now, set, decision) tuples
         self.admission_log: list[tuple[float, str, str]] = []
+        #: workflows with at least one launched task (never revocable)
+        self._wf_started: set[str] = set()
+        #: workflows un-admitted by a deadline-driven revocation
+        self.admission_revocations = 0
+        #: admission-pricing epoch: bumped whenever an input of the priced
+        #: predictions may have moved (completions, TX observations,
+        #: admissions, revocations, arrivals, leases); cached prices are
+        #: reused within one epoch — see :meth:`_admission_price`
+        self._adm_epoch = 0
+        self._adm_price_cache: dict[str, tuple] = {}
+        self._adm_base_cache: "tuple[int, MakespanPrediction] | None" = None
         #: last scheduling-pass clock (supplied by the substrates)
         self._now = 0.0
         self.pools: tuple[PoolSpec, ...] = self.alloc.pools
@@ -580,6 +638,38 @@ class SchedEngine:
         self.node_states: list["list[NodeState] | None"] = [
             node_states(p) if p.node_level else None for p in self.pools]
         self._node_level_any = any(p.node_level for p in self.pools)
+        # -- elastic capacity (leases; core/resources.py) ------------------
+        if elastic is not None and not elastic.enabled:
+            elastic = None
+        if elastic is not None and self.faults is not None:
+            raise ValueError(
+                "elastic leases cannot be combined with fault injection "
+                "(retired lease nodes and failed nodes share NodeState.down)")
+        self.elastic = elastic
+        #: index of the elasticized pool (-1 with elasticity off)
+        self._lease_pool = -1
+        if elastic is not None:
+            if elastic.pool is None:
+                lk = next((i for i, p in enumerate(self.pools)
+                           if p.node_level), -1)
+            else:
+                lk = next((i for i, p in enumerate(self.pools)
+                           if p.name == elastic.pool), -1)
+            if lk < 0 or not self.pools[lk].node_level:
+                raise ValueError(
+                    "elastic leases need a node_level pool "
+                    f"(got pool={elastic.pool!r})")
+            self._lease_pool = lk
+        #: leased node index -> lease expiry time (modelled clock)
+        self._lease_expiry: dict[int, float] = {}
+        #: retired (down) lease nodes, recycled by later grants
+        self._lease_retired: list[int] = []
+        #: lease nodes draining towards retirement (expired while busy)
+        self._draining: set[int] = set()
+        self.leases_granted = 0
+        self.leases_expired = 0
+        #: lease trace: (now, event, node) tuples
+        self.lease_log: list[tuple[float, str, int]] = []
         #: (set, index) -> (node, per-group GPU takes) of the primary
         #: attempt on a node-level pool (absent on aggregate pools)
         self._node_alloc: dict[tuple[str, int],
@@ -722,6 +812,113 @@ class SchedEngine:
         self._blocked: set[str] = set()
         if incremental:
             self._build_indexes()
+
+    # -- streaming arrivals (core/stream.py) --------------------------------
+    def add_workflow(self, entry: "WorkflowEntry", now: float = 0.0
+                     ) -> list[str]:
+        """Merge a newly-arrived workflow into the live engine state (the
+        open-stream consumption path: the engine only ever holds the
+        arrived prefix).  Namespaces the entry's sets exactly as
+        :meth:`~repro.core.workflow.Campaign.view` does, extends every
+        dependency / resource / index structure, and returns the merged
+        set names in the entry's topological order — the substrates
+        sample task durations for them in that order.  Arriving workflows
+        are dependency-disconnected from everything already merged, so
+        existing entries (including the predictor's snapshots, via
+        :meth:`~repro.core.predictor.MakespanPredictor.add_sets`) stay
+        valid."""
+        g = self.g
+        sub = entry.dag
+        sub_order = sub.topological_order()
+        sub_ranks = sub.ranks()
+        names: list[str] = []
+        for n in sub_order:
+            merged = f"{entry.name}{WORKFLOW_SEP}{n}"
+            if merged in g:
+                raise ValueError(f"workflow {entry.name!r} already merged "
+                                 f"(set {merged!r} exists)")
+            g.add(sub.node(n).with_(name=merged))
+            names.append(merged)
+        for n in sub_order:
+            for p in sub.parents(n):
+                g.add_edge(f"{entry.name}{WORKFLOW_SEP}{p}",
+                           f"{entry.name}{WORKFLOW_SEP}{n}")
+        for m in names:
+            ts = g.node(m)
+            if not any(p.accepts(ts) for p in self.pools):
+                raise ValueError(
+                    f"arrived task set {m!r} (cpus={ts.cpus_per_task}, "
+                    f"gpus={ts.gpus_per_task}, kind={ts.kind!r}) fits no "
+                    f"pool of allocation {self.alloc.name!r}")
+            self.workflow_of[m] = entry.name
+            self.arrival_of[m] = entry.arrival
+            self.wf_priority[m] = entry.priority
+            self.wf_deadline[m] = entry.deadline
+        # dependency counters + ready queues (same semantics as __init__;
+        # all parents are entry-local — no cross-workflow edges exist)
+        base_topo = len(self.order)
+        for j, n in enumerate(sub_order):
+            m = names[j]
+            ts = g.node(m)
+            self.order.append(m)
+            self._infos.append(SetInfo(
+                m, sub_ranks[n], base_topo + j, ts.num_tasks,
+                ts.cpus_per_task, ts.gpus_per_task, ts.tx_mean, ts.kind,
+                entry.priority, entry.arrival))
+            self._set_remaining[m] = ts.num_tasks
+            self.ready[m] = deque()
+            self._n_total += ts.num_tasks
+            if self.task_level:
+                nc = ts.num_tasks
+                for i in range(nc):
+                    cnt = 0
+                    for p in g.parents(m):
+                        np_ = g.node(p).num_tasks
+                        self._child_waiters.setdefault(
+                            (p, i * np_ // nc), []).append((m, i))
+                        cnt += 1
+                    self._remaining[(m, i)] = cnt
+            else:
+                cnt = sum(g.node(p).num_tasks for p in g.parents(m))
+                for i in range(ts.num_tasks):
+                    self._remaining[(m, i)] = cnt
+            if not g.parents(m):
+                for i in range(ts.num_tasks):
+                    self.ready[m].append(i)
+        self.priority = list(self.policy.order_sets(self._infos))
+        if self.policy.uses_tx:
+            self._priority_dirty = True
+        if self.estimator is not None:
+            for m in names:
+                self.estimator.prior.setdefault(m, g.node(m).tx_mean)
+        if self.incremental:
+            for m in names:
+                ts = g.node(m)
+                entries = []
+                for k, p in enumerate(self.pools):
+                    if (p.only_kinds is not None
+                            and ts.kind not in p.only_kinds):
+                        continue
+                    cls = self._needs(k, ts)
+                    ent = self._classes[k].get(cls)
+                    if ent is None:
+                        ent = self._classes[k][cls] = _FitClass(*cls)
+                        states = self.node_states[k]
+                        if states is not None:
+                            ent.nodes = {n for n, ns in enumerate(states)
+                                         if ns.fits(ent.need_c, ent.need_g)}
+                            ent.fits = bool(ent.nodes)
+                        else:
+                            ent.fits = (ent.need_c <= self.free_cpus[k]
+                                        and ent.need_g <= self.free_gpus[k])
+                    ent.sets.append(m)
+                    entries.append((k, ent))
+                self._set_pools[m] = entries
+        if self.predictor is not None:
+            self.predictor.add_sets(names, {m: entry.name for m in names})
+        self._adm_epoch += 1
+        self._now = max(self._now, now)
+        return names
 
     # -- incremental indexes (dirty tracking; module docstring section) -----
     def _build_indexes(self) -> None:
@@ -895,6 +1092,31 @@ class SchedEngine:
                             f"pool {k} class {cls}: fits=False but "
                             f"counters fit (missed unblock)")
                 continue
+            # the aggregate counters stay a derived view of the node table
+            # — the invariant elastic grow/drain/retire must preserve
+            if self.free_cpus[k] != sum(ns.free_cpus for ns in states):
+                raise AssertionError(
+                    f"pool {k}: free_cpus {self.free_cpus[k]} != node sum "
+                    f"{sum(ns.free_cpus for ns in states)}")
+            if self.free_gpus[k] != sum(ns.free_gpus for ns in states):
+                raise AssertionError(
+                    f"pool {k}: free_gpus {self.free_gpus[k]} != node sum "
+                    f"{sum(ns.free_gpus for ns in states)}")
+            if self.cap_cpus[k] != sum(ns.cpus for ns in states
+                                       if not ns.down):
+                raise AssertionError(
+                    f"pool {k}: cap_cpus {self.cap_cpus[k]} != live node "
+                    f"capacity")
+            if self.cap_gpus[k] != sum(ns.spec.gpus for ns in states
+                                       if not ns.down):
+                raise AssertionError(
+                    f"pool {k}: cap_gpus {self.cap_gpus[k]} != live node "
+                    f"capacity")
+            drain = {n for n, ns in enumerate(states) if ns.draining}
+            if drain != (self._draining if k == self._lease_pool else set()):
+                raise AssertionError(
+                    f"pool {k}: draining flags {drain} != lease-drain set "
+                    f"{self._draining}")
             blocks = [ns.largest_block() for ns in states]
             if self._node_block[k] != blocks:
                 raise AssertionError(
@@ -935,6 +1157,184 @@ class SchedEngine:
             if cands:
                 raise AssertionError(
                     f"set {name!r} is blocked but pools {cands} fit it")
+
+    # -- elastic capacity (leases; ElasticOptions) --------------------------
+    def elastic_pass(self, now: float) -> bool:
+        """One elasticity control step (both substrates drive it every
+        ``ElasticOptions.check_interval`` modelled seconds): expire any
+        lease past its term (idle nodes retire immediately, busy ones
+        drain), then grant at most one new lease while queued strict
+        demand outruns the pool's usable free capacity.  Returns True
+        when capacity changed, so the caller re-runs dispatch."""
+        if self.elastic is None:
+            return False
+        self._now = max(self._now, now)
+        changed = self._expire_leases(now)
+        if self._should_grow():
+            changed = self._grant_lease(now) or changed
+        return changed
+
+    def _should_grow(self) -> bool:
+        opts = self.elastic
+        k = self._lease_pool
+        if len(self._lease_expiry) + len(self._draining) \
+                >= opts.max_lease_nodes:
+            return False
+        queued_c = queued_g = tasks = 0
+        for n in self.order:
+            q = self.ready[n]
+            if not q or not self._dispatchable(n):
+                continue
+            ts = self.g.node(n)
+            if not self.pools[k].accepts(ts):
+                continue
+            need_c, need_g = self._needs(k, ts)
+            queued_c += len(q) * need_c
+            queued_g += len(q) * need_g
+            tasks += len(q)
+        if tasks < opts.min_queue_tasks:
+            return False
+        # usable free capacity: a draining node's free slots accept no
+        # new placements, so they are not headroom
+        states = self.node_states[k]
+        free_c, free_g = self.free_cpus[k], self.free_gpus[k]
+        for node in self._draining:
+            free_c -= states[node].free_cpus
+            free_g -= states[node].free_gpus
+        return ((queued_g > 0 and queued_g > opts.grow_threshold * free_g)
+                or (queued_c > 0 and queued_c > opts.grow_threshold * free_c))
+
+    def _grant_lease(self, now: float) -> bool:
+        k = self._lease_pool
+        p = self.pools[k]
+        states = self.node_states[k]
+        if self._lease_retired:  # recycle a retired node's slot
+            node = self._lease_retired.pop(0)
+            ns = states[node]
+            c, g = ns.restore()
+            self.free_cpus[k] += c
+            self.free_gpus[k] += g
+            self.cap_cpus[k] += c
+            self.cap_gpus[k] += g
+            if self.incremental:
+                self._node_changed(k, node)
+        else:
+            # a fresh lease node carries the same per-node reserved-core
+            # share as the pool's static nodes
+            ns = NodeState(p.node,
+                           p.node.cpus - p.reserved_cpus // p.num_nodes)
+            node = len(states)
+            states.append(ns)
+            self.free_cpus[k] += ns.cpus
+            self.free_gpus[k] += ns.spec.gpus
+            self.cap_cpus[k] += ns.cpus
+            self.cap_gpus[k] += ns.spec.gpus
+            if self.incremental:
+                self._index_add_node(k, node)
+        self._lease_expiry[node] = now + self.elastic.lease_term
+        self.leases_granted += 1
+        self.lease_log.append((now, "grant", node))
+        self._adm_epoch += 1
+        if self.predictor is not None:
+            self.predictor.invalidate()
+        return True
+
+    def _expire_leases(self, now: float) -> bool:
+        changed = False
+        k = self._lease_pool
+        states = self.node_states[k]
+        for node in sorted(self._lease_expiry):
+            if self._lease_expiry[node] > now:
+                continue
+            del self._lease_expiry[node]
+            if states[node].idle:
+                self._retire_lease_node(k, node, now)
+                changed = True
+            else:
+                # drain: no new placements, running tasks finish; the
+                # last release retires the node (_maybe_retire) — lease
+                # expiry never strands a placed task
+                states[node].draining = True
+                self._draining.add(node)
+                self.lease_log.append((now, "drain", node))
+                if self.incremental:
+                    self._node_changed(k, node)
+        return changed
+
+    def _retire_lease_node(self, k: int, node: int, now: float) -> None:
+        ns = self.node_states[k][node]
+        c, g = ns.fail()  # idle, so free == capacity leaves with it
+        self.free_cpus[k] -= c
+        self.free_gpus[k] -= g
+        self.cap_cpus[k] -= ns.cpus
+        self.cap_gpus[k] -= ns.spec.gpus
+        self._draining.discard(node)
+        self._lease_retired.append(node)
+        if self.incremental:
+            self._node_changed(k, node)
+        self.leases_expired += 1
+        self.lease_log.append((now, "expire", node))
+        self._adm_epoch += 1
+        if self.predictor is not None:
+            self.predictor.invalidate()
+
+    def _maybe_retire(self, k: int, node: int) -> None:
+        """Release hook: a draining lease node retires on its last
+        release (it just went idle)."""
+        if (self.elastic is not None and k == self._lease_pool
+                and node in self._draining
+                and self.node_states[k][node].idle):
+            self._retire_lease_node(k, node, self._now)
+
+    def _index_add_node(self, k: int, node: int) -> None:
+        """Register a freshly-appended (leased) node with every
+        incremental structure of pool ``k`` — the grow counterpart of
+        :meth:`_node_changed`, which assumes the node already has index
+        entries."""
+        ns = self.node_states[k][node]
+        b = ns.largest_block()
+        blocks = self._node_block[k]
+        blocks.append(b)
+        buckets = self._block_buckets[k]
+        while len(buckets) <= b:
+            buckets.append(0)
+        buckets[b] += 1
+        if b > self._block_max[k]:
+            self._block_max[k] = b
+        self._node_ver[k].append(0)
+        heapq.heappush(self._spread_heap[k],
+                       (-ns.free_gpus, -ns.free_cpus, node, 0))
+        for ent in self._classes[k].values():
+            if ns.fits(ent.need_c, ent.need_g):
+                if not ent.nodes and self._blocked:
+                    self._blocked.difference_update(ent.sets)
+                ent.nodes.add(node)
+                ent.fits = True
+
+    def stream_accounting(self) -> dict:
+        """Conservation partition over every workflow the engine has seen
+        (the arrived prefix): ``arrived == finished + admitted + deferred
+        + queued`` always holds — a revoked workflow re-enters
+        ``deferred`` (``revoked`` counts revocation *events*, not a
+        disjoint state).  ``admitted`` means in flight: some set on the
+        dispatch frontier, remaining work > 0."""
+        sets_of: dict[str, list[str]] = {}
+        for n, wf in self.workflow_of.items():
+            sets_of.setdefault(wf, []).append(n)
+        finished = admitted = deferred = queued = 0
+        for wf, ns in sets_of.items():
+            if all(self._set_remaining[n] == 0 for n in ns):
+                finished += 1
+            elif (self.admission is None
+                  or any(n in self.admitted for n in ns)):
+                admitted += 1
+            elif any(n in self.deferred for n in ns):
+                deferred += 1
+            else:
+                queued += 1
+        return dict(arrived=len(sets_of), finished=finished,
+                    admitted=admitted, deferred=deferred, queued=queued,
+                    revoked=self.admission_revocations)
 
     # -- state queries ------------------------------------------------------
     def done(self) -> bool:
@@ -1059,6 +1459,7 @@ class SchedEngine:
             self.node_states[k][node].release(need_c, takes)
             if self.incremental:
                 self._node_changed(k, node)
+            self._maybe_retire(k, node)
         elif self.incremental and self.node_states[k] is None:
             self._agg_freed(k)
 
@@ -1114,6 +1515,7 @@ class SchedEngine:
                 if m > 0:
                     duration = min(duration, fb.winsorize_ratio * m)
         self.estimator.observe(name, duration, pool=pname, raw=raw)
+        self._adm_epoch += 1  # TX estimates are admission-pricing inputs
         if self.predictor is not None:
             # explicit cache invalidation: this set's live TX moved, so
             # its memoized residual terms and the whole-workflow Eqn. 2-5
@@ -1813,6 +2215,16 @@ class SchedEngine:
             self.tx_estimate, now, pending, elapsed,
             done_fraction=self._n_done / max(1, self._n_total),
             tx_std=self.tx_std_estimate, gpu_held=gpu_held)
+        if self.admission is not None and self.workflow_of:
+            # per-workflow Eqn. 2-5 snapshots for the prediction trace —
+            # batched through BatchEqns once enough workflows are in
+            # flight for the one-matrix evaluation to beat scalar loops
+            wfs = {self.workflow_of[n] for n in self.order
+                   if self._set_remaining[n] > 0 and n in self.workflow_of}
+            if len(wfs) >= 4:
+                p = dataclasses.replace(
+                    p, wf_models=self.predictor.workflow_models(
+                        self.tx_estimate, wfs))
         self.predictions.append(p)
         return p
 
@@ -2001,7 +2413,20 @@ class SchedEngine:
         residual, i.e. what deferring until the admitted work drains
         would cost it).  Running tasks are priced as pending (the engine
         has no per-task clocks; the bound is conservative by at most one
-        in-flight wave)."""
+        in-flight wave).
+
+        Prices are *epoch-cached*: every input of these predictions (set
+        remainders, TX estimates, the admitted set, arrivals) only moves
+        when an engine event bumps ``_adm_epoch``, so a candidate
+        re-priced on a later pass within the same epoch reuses its cached
+        triple, and the admitted-work ``base`` snapshot — identical for
+        every candidate priced in one epoch — is hoisted across them.
+        Decisions read only the now-independent ``remaining`` fields, so
+        caching is decision-bit-identical to re-predicting (a cached
+        prediction's ``now``/``total`` may be stale)."""
+        cached = self._adm_price_cache.get(name)
+        if cached is not None and cached[0] == self._adm_epoch:
+            return cached[1]
         wf = self.workflow_of.get(name)
         active = {self.workflow_of.get(m) for m in self.admitted
                   if self._set_remaining[m] > 0}
@@ -2014,13 +2439,20 @@ class SchedEngine:
         with_pending = dict(base_pending)
         with_pending.update(cand_pending)
         predict = self.predictor.predict
-        base = predict(self.tx_estimate, now, base_pending, {},
-                       tx_std=self.tx_std_estimate)
+        bc = self._adm_base_cache
+        if bc is not None and bc[0] == self._adm_epoch:
+            base = bc[1]
+        else:
+            base = predict(self.tx_estimate, now, base_pending, {},
+                           tx_std=self.tx_std_estimate)
+            self._adm_base_cache = (self._adm_epoch, base)
         with_ = predict(self.tx_estimate, now, with_pending, {},
                         tx_std=self.tx_std_estimate)
         alone = predict(self.tx_estimate, now, cand_pending, {},
                         tx_std=self.tx_std_estimate)
-        return base, with_, alone
+        out = (base, with_, alone)
+        self._adm_price_cache[name] = (self._adm_epoch, out)
+        return out
 
     def _admit_decision(self, name: str, now: float) -> tuple[bool, str]:
         opts = self.admission
@@ -2051,6 +2483,14 @@ class SchedEngine:
                          if self._set_remaining[m] > 0), default=0.0)
         if (i_adm < opts.i_floor and active_tx > 0
                 and self.tx_estimate(name) > opts.hold_ratio * active_tx):
+            if opts.deadline_aware:
+                # SLO override: the candidate's dedicated residual no
+                # longer fits before its workflow deadline (plus margin)
+                # — defer would turn the likely miss into a certain one
+                dl = self.wf_deadline.get(name)
+                if (dl is not None and dl - now - alone.remaining
+                        <= opts.deadline_margin * alone.remaining):
+                    return True, "deadline"
             return False, "defer"
         return True, "priced"
 
@@ -2058,6 +2498,48 @@ class SchedEngine:
         self.admitted.add(name)
         self.deferred.pop(name, None)
         self.admission_log.append((now, name, why))
+        self._adm_epoch += 1  # the admitted frontier is a pricing input
+
+    def revoke_workflow(self, wf: str, now: float) -> bool:
+        """Preemptive revocation: un-admit every admitted set of workflow
+        ``wf``, returning them to the deferred pool (re-priced on later
+        passes, still covered by the idle conservation guard — revoked is
+        never lost).  Refuses (False) once any of the workflow's tasks
+        has launched: revocation never kills a started workflow."""
+        if wf in self._wf_started:
+            return False
+        sets = [m for m in self.admitted
+                if self.workflow_of.get(m) == wf]
+        if not sets:
+            return False
+        for m in sorted(sets):
+            self.admitted.discard(m)
+            self.deferred.setdefault(m, now)
+        self.admission_revocations += 1
+        self.admission_log.append((now, wf, "revoke"))
+        self._adm_epoch += 1
+        return True
+
+    def _revoke_for(self, urgent: str, now: float) -> None:
+        """A deadline-driven admission may displace ONE admitted
+        workflow: strictly lower priority than the urgent set's, not yet
+        started, with remaining work — lowest priority first, then the
+        latest arrival (the cheapest commitment to walk back)."""
+        upri = self.wf_priority.get(urgent, 0)
+        uwf = self.workflow_of.get(urgent)
+        cands: dict[str, tuple[int, float]] = {}
+        for m in self.admitted:
+            wf = self.workflow_of.get(m)
+            if (wf is None or wf == uwf or wf in self._wf_started
+                    or self._set_remaining[m] <= 0):
+                continue
+            pri = self.wf_priority.get(m, 0)
+            if pri >= upri:
+                continue
+            cands[wf] = (pri, -self.arrival_of.get(m, 0.0))
+        if cands:
+            victim = min(cands, key=lambda w: (*cands[w], w))
+            self.revoke_workflow(victim, now)
 
     def _admission_pass(self, now: float) -> None:
         cand = [n for n in self.priority
@@ -2072,6 +2554,8 @@ class SchedEngine:
                 ok, why = self._admit_decision(n, now)
                 if ok:
                     self._admit(n, now, why)
+                    if why == "deadline" and self.admission.revoke:
+                        self._revoke_for(n, now)
                 elif n not in self.deferred:
                     self.deferred[n] = now
                     self.admission_deferrals += 1
@@ -2141,6 +2625,9 @@ class SchedEngine:
                                            if node_alloc is not None else -1)
                 self.launched.add((name, i))
                 self.pool_of[(name, i)] = k
+                wf = self.workflow_of.get(name)
+                if wf is not None:
+                    self._wf_started.add(wf)  # now beyond revocation
                 out.append((name, i, k))
         return out
 
@@ -2176,6 +2663,7 @@ class SchedEngine:
             self.node_states[k][node].release(need_c, takes)
             if self.incremental:
                 self._node_changed(k, node)
+            self._maybe_retire(k, node)
         elif self.incremental and self.node_states[k] is None:
             self._agg_freed(k)
         spec = self._spec_pool.pop((name, i), None)
@@ -2196,6 +2684,7 @@ class SchedEngine:
         self.finished.add((name, i))
         self._n_done += 1
         self._set_remaining[name] -= 1
+        self._adm_epoch += 1  # set remainders are admission-pricing inputs
         if self.task_level:
             for (cn, ci) in self._child_waiters.get((name, i), ()):
                 self._remaining[(cn, ci)] -= 1

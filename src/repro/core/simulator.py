@@ -48,11 +48,12 @@ from typing import Literal, Sequence
 
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions
-from .predictor import MakespanPrediction
 from .resources import Allocation, PoolSpec, as_allocation
+from .results import RunResult, TaskRecord, per_pool_task_counts  # noqa: F401
+from .runconfig import _LEGACY, RunConfig, resolve_run_config
 from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
-from .workflow import (Campaign, CampaignView, WorkflowStats, campaign_stats,
-                       weighted_slowdown)
+from .stream import WorkflowStream, prefix_view
+from .workflow import Campaign, CampaignView, campaign_stats
 from ..runtime.fault import FailureSchedule, FaultOptions
 
 Mode = Literal["async", "sequential"]
@@ -66,92 +67,24 @@ _ARRIVAL = "\x00arrival"
 _FAIL = "\x00fail"
 _RECOVER = "\x00recover"
 _TASKFAIL = "\x00taskfail"
-
-
-def per_pool_task_counts(records: "Sequence[TaskRecord]") -> dict[str, int]:
-    """How many tasks each pool of the allocation executed."""
-    out: dict[str, int] = {}
-    for r in records:
-        out[r.pool] = out.get(r.pool, 0) + 1
-    return out
-
-
-@dataclasses.dataclass(frozen=True)
-class TaskRecord:
-    set_name: str
-    index: int
-    start: float
-    end: float
-    cpus: int
-    gpus: int
-    duplicate: bool = False
-    #: name of the pool the task was placed on ("" for legacy records)
-    pool: str = ""
-    #: True when the task was preempted + migrated off a straggling pool
-    #: (``pool`` is the pool it finally completed on)
-    migrated: bool = False
-    #: node index within the pool the winning attempt ran on (-1 on
-    #: aggregate pools — see ``PoolSpec.node_level``)
-    node: int = -1
-    #: owning workflow of a campaign run ("" for single-workflow runs)
-    workflow: str = ""
-
-    @property
-    def duration(self) -> float:
-        return self.end - self.start
+#: sentinel event name for an open stream's next workflow arrival
+_STREAM = "\x00streamarrival"
+#: sentinel event name for the periodic elastic-capacity pass
+_ELASTIC = "\x00elastic"
 
 
 @dataclasses.dataclass
-class SimResult:
-    makespan: float
-    records: list[TaskRecord]
-    pool_cpus: int
-    pool_gpus: int
-    mode: str
+class SimResult(RunResult):
+    """A simulator run's result: the shared :class:`RunResult` protocol
+    plus the simulator-only utilization/duplication accounting.  Always
+    constructed keyword-only."""
+
+    pool_cpus: int = 0
+    pool_gpus: int = 0
     #: fraction of (resource x makespan) area actually used
     cpu_utilization: float = 0.0
     gpu_utilization: float = 0.0
-    tasks_total: int = 0
     duplicates: int = 0
-    #: scheduling policy used (see sched_engine.SCHEDULING_POLICIES)
-    policy: str = "fifo"
-    #: straggler preemption + migration count (runtime feedback enabled)
-    migrations: int = 0
-    #: speculative-duplicate launches (first finisher wins, loser freed)
-    speculations: int = 0
-    #: mid-run makespan re-predictions (``SchedEngine.repredict`` trace,
-    #: feedback enabled; see ``core/predictor.py``)
-    predictions: "list[MakespanPrediction]" = (
-        dataclasses.field(default_factory=list))
-    #: per-workflow metrics of a campaign run (None otherwise); see
-    #: ``core/workflow.WorkflowStats``
-    workflows: "dict[str, WorkflowStats] | None" = None
-    #: task sets the admission controller deferred at least once
-    admission_deferrals: int = 0
-    #: fault injection (``faults=FaultOptions(...)``): applied node losses,
-    #: software task failures, and the recovery arms taken per failure
-    node_failures: int = 0
-    task_failures: int = 0
-    recoveries_restart: int = 0
-    recoveries_rerun: int = 0
-    #: proactive at-risk replications launched (``FaultOptions.replicate``)
-    replications: int = 0
-    #: the engine's failure trace: (time, kind, detail...) tuples
-    fault_log: list = dataclasses.field(default_factory=list)
-
-    def throughput(self) -> float:
-        return self.tasks_total / self.makespan if self.makespan else 0.0
-
-    def weighted_slowdown(self) -> "float | None":
-        """Fairness-weighted mean slowdown of a campaign run (None for
-        single-workflow runs or when no reference makespans are set)."""
-        if not self.workflows:
-            return None
-        return weighted_slowdown(self.workflows)
-
-    def workflow_records(self, name: str) -> "list[TaskRecord]":
-        """The trace of one campaign workflow's tasks."""
-        return [r for r in self.records if r.workflow == name]
 
     def utilization_trace(self, resolution: int = 256
                           ) -> tuple[list[float], list[int], list[int]]:
@@ -166,9 +99,6 @@ class SimResult:
                     cpu[i] += r.cpus
                     gpu[i] += r.gpus
         return ts, cpu, gpu
-
-    def per_pool_task_counts(self) -> dict[str, int]:
-        return per_pool_task_counts(self.records)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,26 +126,34 @@ class SimOptions:
     mitigation_threshold: float = 2.0
 
 
-def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
+def simulate(dag: "DAG | Campaign | WorkflowStream",
+             pool: "PoolSpec | Allocation",
              mode: Mode = "async", *,
              options: SimOptions = SimOptions(),
-             task_level: bool = False,
-             sequential_stage_groups: Sequence[Sequence[str]] | None = None,
-             scheduling: "str | SchedulingPolicy" = "fifo",
-             feedback: "FeedbackOptions | None" = None,
-             admission: "AdmissionOptions | None" = None,
-             faults: "FaultOptions | None" = None,
+             config: "RunConfig | None" = None,
+             task_level=_LEGACY,
+             sequential_stage_groups=_LEGACY,
+             scheduling=_LEGACY,
+             feedback=_LEGACY,
+             admission=_LEGACY,
+             faults=_LEGACY,
              ) -> SimResult:
     """Run one workflow execution and return its schedule.
 
-    ``feedback`` enables the runtime-feedback loop (core/estimator.py):
-    every completion updates the engine's per-set (and per-pool) TX
-    estimate, ordering policies re-rank by observed TX, stragglers
-    (runtime > mean + k*sigma of the running estimate) are mitigated by
-    preemptive migration and/or speculative duplicates — arbitrated per
-    straggler by predicted marginal makespan when both are enabled — and
-    the analytic model is re-evaluated mid-run on the live estimates
-    (``SimResult.predictions``).
+    Scheduling-semantics knobs are bundled in ``config=RunConfig(...)``
+    (``core/runconfig.py``); the individual keyword arguments
+    (``scheduling=``, ``feedback=``, ...) are a deprecated legacy form
+    that resolves to the equivalent config (bit-identical runs) and may
+    not be mixed with ``config=``.
+
+    ``RunConfig.feedback`` enables the runtime-feedback loop
+    (core/estimator.py): every completion updates the engine's per-set
+    (and per-pool) TX estimate, ordering policies re-rank by observed TX,
+    stragglers (runtime > mean + k*sigma of the running estimate) are
+    mitigated by preemptive migration and/or speculative duplicates —
+    arbitrated per straggler by predicted marginal makespan when both are
+    enabled — and the analytic model is re-evaluated mid-run on the live
+    estimates (``SimResult.predictions``).
 
     ``dag`` may be a :class:`~repro.core.workflow.Campaign`: the member
     workflows are multiplexed over the allocation (tasks gated on each
@@ -224,7 +162,16 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     enables the engine's prediction-driven admission controller
     (campaigns run asynchronously — ``mode`` must be ``"async"``).
 
-    ``faults=FaultOptions(...)`` injects seeded node losses (stochastic
+    ``dag`` may also be a :class:`~repro.core.stream.WorkflowStream`:
+    an *open* arrival stream consumed incrementally — the engine only
+    ever sees the arrived prefix (each arrival merges via
+    ``SchedEngine.add_workflow``), and ``SimResult.stream`` carries the
+    conservation partition.  A stream wrapping a closed campaign
+    (:attr:`~repro.core.stream.WorkflowStream.closed_campaign`) routes
+    through the campaign path verbatim.  ``RunConfig.elastic`` adds
+    whole-node capacity leases driven by a periodic control event.
+
+    ``RunConfig.faults`` injects seeded node losses (stochastic
     and/or trace-driven) and per-attempt software failures into the run:
     in-flight attempts on a dying node are released and re-enqueued (or
     their replica promoted), the recovery arbiter prices
@@ -232,9 +179,37 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     fold the live hazard in (``FaultOptions.hazard_aware``).  Disabled
     options (the default instance) are treated exactly like ``None`` —
     the dispatch trace stays bit-identical."""
+    cfg = resolve_run_config(config, dict(
+        task_level=task_level,
+        sequential_stage_groups=sequential_stage_groups,
+        scheduling=scheduling, feedback=feedback,
+        admission=admission, faults=faults), "simulate()")
+    task_level = cfg.task_level
+    sequential_stage_groups = cfg.sequential_stage_groups
+    scheduling = cfg.scheduling
+    feedback = cfg.feedback
+    admission = cfg.admission
+    faults = cfg.faults
+
     rng = random.Random(options.seed)
+    stream: "WorkflowStream | None" = None
+    if isinstance(dag, WorkflowStream):
+        closed = dag.closed_campaign
+        if closed is not None:
+            dag = closed  # a closed stream IS its campaign — same path
+        else:
+            stream = dag
+            stream.reset()
     view: "CampaignView | None" = None
-    if isinstance(dag, Campaign):
+    arrived_entries: "list" = []
+    if stream is not None:
+        if mode != "async":
+            raise ValueError("streams execute asynchronously "
+                             "(mode='async')")
+        arrived_entries = list(stream.take_until(0.0))
+        view = prefix_view(arrived_entries, stream.name)
+        g = view.dag
+    elif isinstance(dag, Campaign):
         if mode != "async":
             raise ValueError("campaigns execute asynchronously "
                              "(mode='async')")
@@ -263,7 +238,8 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     # ---- expand task sets into tasks -------------------------------------
     engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
                          feedback=feedback, campaign=view,
-                         admission=admission, faults=faults)
+                         admission=admission, faults=faults,
+                         elastic=cfg.elastic)
     faults = engine.faults  # disabled options normalized to None
     schedule = (FailureSchedule(faults,
                                 [(k, p.num_nodes)
@@ -271,15 +247,24 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
                                 [p.name for p in engine.pools])
                 if faults is not None else None)
     order = engine.order
-    wf_of = view.workflow_of if view is not None else {}
+    # live for streams (add_workflow extends it); a superset-correct copy
+    # of view.workflow_of for closed campaigns
+    wf_of = engine.workflow_of if view is not None else {}
     durations: dict[tuple[str, int], float] = {}
-    for name in order:
-        ts = g.node(name)
-        for i in range(ts.num_tasks):
-            d = sample_base(ts)
-            if options.straggler_prob and rng.random() < options.straggler_prob:
-                d *= options.straggler_factor
-            durations[(name, i)] = d * overhead
+
+    def sample_durations(names: "Sequence[str]") -> None:
+        """Pre-sample every task of ``names`` in set order (RNG draw order
+        is part of the trace contract — see the bit-identity tests)."""
+        for name in names:
+            ts = g.node(name)
+            for i in range(ts.num_tasks):
+                d = sample_base(ts)
+                if (options.straggler_prob
+                        and rng.random() < options.straggler_prob):
+                    d *= options.straggler_factor
+                durations[(name, i)] = d * overhead
+
+    sample_durations(order)
 
     # ---- event loop -------------------------------------------------------
     # Ready bookkeeping is PER SET inside the engine: all tasks of a set
@@ -515,6 +500,19 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
         for t in sorted({w.arrival for w in view.entries if w.arrival > 0}):
             heapq.heappush(events, (t, seq, _ARRIVAL, -1, False, 0))
             seq += 1
+    # open stream: one in-flight sentinel at the next unconsumed arrival
+    # (the handler re-pushes; it also keeps the loop alive through lulls
+    # where nothing is running)
+    if stream is not None:
+        nxt = stream.next_arrival()
+        if nxt is not None:
+            heapq.heappush(events, (nxt, seq, _STREAM, -1, False, 0))
+            seq += 1
+    # elastic capacity: periodic control event (lease grant/expiry)
+    if engine.elastic is not None:
+        heapq.heappush(events, (engine.elastic.check_interval, seq,
+                                _ELASTIC, -1, False, 0))
+        seq += 1
 
     try_start()
     schedule_scan()
@@ -538,6 +536,33 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
             engine.repredict(now, running)  # the new workflow is visible
             try_start()
             schedule_scan()
+            continue
+        if name is _STREAM:
+            new_names: list[str] = []
+            for w in stream.take_until(now):
+                arrived_entries.append(w)
+                new_names.extend(engine.add_workflow(w, now=now))
+            sample_durations(new_names)
+            nxt = stream.next_arrival()
+            if nxt is not None:
+                heapq.heappush(events, (nxt, seq, _STREAM, -1, False, 0))
+                seq += 1
+            engine.repredict(now, running)  # the arrivals are visible
+            try_start()
+            schedule_scan()
+            continue
+        if name is _ELASTIC:
+            if engine.elastic_pass(now):
+                engine.repredict(now, running)  # capacity changed
+                try_start()
+                schedule_scan()
+            if (not engine.done()
+                    or (stream is not None
+                        and stream.next_arrival() is not None)):
+                heapq.heappush(events,
+                               (now + engine.elastic.check_interval,
+                                seq, _ELASTIC, -1, False, 0))
+                seq += 1
             continue
         if name is _FAIL:
             fk, fn = payload.pop(sq)
@@ -623,6 +648,10 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
     makespan = max((r.end for r in records), default=0.0)
     cpu_area = sum(r.duration * r.cpus for r in records)
     gpu_area = sum(r.duration * r.gpus for r in records)
+    if stream is not None:
+        # final per-workflow stats span everything that arrived (the
+        # re-merged view names sets exactly as add_workflow did)
+        view = prefix_view(arrived_entries, stream.name)
     return SimResult(
         makespan=makespan,
         records=records,
@@ -648,4 +677,9 @@ def simulate(dag: "DAG | Campaign", pool: "PoolSpec | Allocation",
         recoveries_rerun=engine.recoveries_rerun,
         replications=engine.replications,
         fault_log=engine.fault_log,
+        admission_revocations=engine.admission_revocations,
+        leases_granted=engine.leases_granted,
+        leases_expired=engine.leases_expired,
+        lease_log=engine.lease_log,
+        stream=(engine.stream_accounting() if stream is not None else None),
     )

@@ -1,0 +1,242 @@
+"""Open-ended workflow arrival streams: the service-tenancy source.
+
+A :class:`~repro.core.workflow.Campaign` is a *closed* set of workflows
+known up front; a production service (the RHAPSODY service-ification of
+the paper's execution model) faces an unbounded arrival process where
+the scheduler never sees "the whole DAG".  :class:`WorkflowStream` is
+the source abstraction both substrates consume *incrementally*: the
+engine only ever holds the arrived prefix
+(:meth:`~repro.core.sched_engine.SchedEngine.add_workflow` merges each
+arrival into the live state), and admission / prediction / metrics all
+operate on what has actually arrived.
+
+Two concrete sources:
+
+- :class:`GeneratedStream` — seeded arrival-process generators over
+  *templated* workflows (:class:`StreamTemplate`): ``poisson`` (memoryless
+  arrivals at a constant rate), ``diurnal`` (sinusoidal rate modulation
+  via thinning — the day/night load swing elastic capacity follows), and
+  ``bursty`` (Poisson burst epochs each spawning a clump of arrivals).
+  Optional ``periodic`` templates emit fixed-cadence jobs (e.g. the
+  recurring training runs of a serving fleet) on top of the stochastic
+  process.  All arrivals are drawn eagerly at construction from one
+  ``random.Random(seed)`` so a stream is reproducible and substrate
+  independent.
+- :class:`CampaignStream` — the adapter that wraps any closed
+  ``Campaign`` as a stream, making existing callers a special case.
+  Substrates detect :attr:`WorkflowStream.closed_campaign` and route to
+  the closed-campaign path *verbatim*, so wrapping is bit-identical to
+  passing the campaign directly (the closed path's predictions may peek
+  at not-yet-arrived entries — that lookahead is exactly what an open
+  stream forbids and what keeps the committed baselines byte-stable).
+
+The driving workload is the repo's serving stack: `launch/serve.py` /
+`examples/serve_batch.py` shape the inference templates
+(`benchmarks/bench_streaming.py` models their batch-decode jobs), and
+`examples/stream_tenancy.py` is the end-to-end quickstart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Sequence
+
+from .dag import DAG
+from .workflow import Campaign, CampaignView, WorkflowEntry
+
+__all__ = ["WorkflowStream", "CampaignStream", "GeneratedStream",
+           "StreamTemplate", "prefix_view"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamTemplate:
+    """One workflow *shape* a :class:`GeneratedStream` instantiates.
+
+    ``dag`` may be a DAG (shared by every instance — instances are
+    namespaced by the campaign merge, the template DAG is never mutated)
+    or a zero-argument factory returning one.  ``deadline_slack`` turns
+    each arrival into an SLO: ``deadline = arrival + deadline_slack``.
+    ``share`` weights the seeded template choice for stochastic
+    arrivals."""
+
+    name: str
+    dag: "DAG | Callable[[], DAG]"
+    priority: int = 0
+    weight: float = 1.0
+    #: per-arrival SLO: deadline = arrival + slack (None = no deadline)
+    deadline_slack: "float | None" = None
+    #: dedicated single-tenant makespan (slowdown denominator)
+    reference_makespan: "float | None" = None
+    #: relative frequency among the stream's stochastic templates
+    share: float = 1.0
+
+    def build_dag(self) -> DAG:
+        return self.dag() if callable(self.dag) else self.dag
+
+    def instantiate(self, k: int, arrival: float) -> WorkflowEntry:
+        deadline = (arrival + self.deadline_slack
+                    if self.deadline_slack is not None else None)
+        return WorkflowEntry(
+            f"{self.name}-{k:04d}", self.build_dag(),
+            priority=self.priority, arrival=arrival, deadline=deadline,
+            weight=self.weight, reference_makespan=self.reference_makespan)
+
+
+class WorkflowStream:
+    """Base class: an ordered source of :class:`WorkflowEntry` arrivals.
+
+    Consumption protocol (both substrates):
+
+    - :meth:`next_arrival` — the arrival time of the earliest
+      *unconsumed* entry (``None`` when the stream is exhausted);
+    - :meth:`take_until` — pop every entry with ``arrival <= t``, in
+      arrival order (each entry is returned exactly once).
+
+    :attr:`closed_campaign` is the adapter escape hatch: when it returns
+    a ``Campaign``, substrates run the closed-campaign path unchanged
+    instead of consuming incrementally."""
+
+    name = "stream"
+
+    def __init__(self, entries: Sequence[WorkflowEntry], name: str = "stream"):
+        self.name = name
+        self._entries = sorted(entries, key=lambda e: (e.arrival, e.name))
+        self._next = 0
+
+    @property
+    def closed_campaign(self) -> "Campaign | None":
+        """The wrapped closed campaign, or ``None`` for open streams."""
+        return None
+
+    @property
+    def entries(self) -> "tuple[WorkflowEntry, ...]":
+        """Every entry the stream will ever emit (generators draw their
+        whole horizon eagerly), regardless of consumption state."""
+        return tuple(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def next_arrival(self) -> "float | None":
+        if self._next >= len(self._entries):
+            return None
+        return self._entries[self._next].arrival
+
+    def take_until(self, t: float) -> "list[WorkflowEntry]":
+        out = []
+        while (self._next < len(self._entries)
+               and self._entries[self._next].arrival <= t):
+            out.append(self._entries[self._next])
+            self._next += 1
+        return out
+
+    def reset(self) -> None:
+        """Rewind consumption (a stream object is otherwise single-use)."""
+        self._next = 0
+
+
+class CampaignStream(WorkflowStream):
+    """A closed :class:`Campaign` viewed as a stream (finite, known up
+    front).  Substrates short-circuit on :attr:`closed_campaign`, so
+    running ``simulate(CampaignStream(c), ...)`` is bit-identical to
+    ``simulate(c, ...)``; the incremental protocol is still implemented
+    for generic stream consumers (tests, conservation checks)."""
+
+    def __init__(self, campaign: Campaign):
+        super().__init__(campaign.workflows, name=campaign.name)
+        self._campaign = campaign
+
+    @property
+    def closed_campaign(self) -> Campaign:
+        return self._campaign
+
+
+class GeneratedStream(WorkflowStream):
+    """Seeded arrival-process generator over workflow templates.
+
+    ``kind``:
+
+    - ``"poisson"`` — exponential inter-arrivals at ``rate`` (1/s);
+    - ``"diurnal"`` — inhomogeneous Poisson by thinning: the rate swings
+      sinusoidally between ``rate`` and ``rate * peak_ratio`` with
+      period ``period`` (peak at t = period/4);
+    - ``"bursty"`` — burst epochs arrive Poisson at ``rate /
+      burst_size``; each epoch spawns ``burst_size`` arrivals spread by
+      Exp(mean ``burst_spread``) offsets (mean arrival rate stays
+      ``rate``).
+
+    Stochastic arrivals pick a template by seeded weighted ``share``
+    choice.  ``periodic`` adds deterministic fixed-cadence instances:
+    each ``(template, every)`` pair emits at ``every, 2*every, ...`` up
+    to the horizon.  All randomness comes from ``random.Random(seed)``
+    at construction — the arrival schedule is a pure function of the
+    arguments."""
+
+    def __init__(self, templates: Sequence[StreamTemplate], rate: float,
+                 horizon: float, *, seed: int = 0, kind: str = "poisson",
+                 period: float = 1800.0, peak_ratio: float = 4.0,
+                 burst_size: int = 4, burst_spread: float = 30.0,
+                 periodic: "Sequence[tuple[StreamTemplate, float]]" = (),
+                 name: str = "stream"):
+        if kind not in ("poisson", "diurnal", "bursty"):
+            raise ValueError(f"unknown arrival kind {kind!r}")
+        if rate <= 0 and not periodic:
+            raise ValueError("stream needs rate > 0 or periodic templates")
+        rng = random.Random(seed)
+        times: list[float] = []
+        if rate > 0:
+            if kind == "poisson":
+                t = rng.expovariate(rate)
+                while t < horizon:
+                    times.append(t)
+                    t += rng.expovariate(rate)
+            elif kind == "diurnal":
+                # thinning against the peak rate; the accepted process
+                # has instantaneous rate lam(t)
+                lam_max = rate * peak_ratio
+                t = rng.expovariate(lam_max)
+                while t < horizon:
+                    phase = 0.5 * (1.0 + math.sin(2.0 * math.pi * t / period))
+                    lam = rate * (1.0 + (peak_ratio - 1.0) * phase)
+                    if rng.random() < lam / lam_max:
+                        times.append(t)
+                    t += rng.expovariate(lam_max)
+            else:  # bursty
+                t = rng.expovariate(rate / burst_size)
+                while t < horizon:
+                    for _ in range(burst_size):
+                        a = t + rng.expovariate(1.0 / burst_spread)
+                        if a < horizon:
+                            times.append(a)
+                    t += rng.expovariate(rate / burst_size)
+                times.sort()
+        shares = [max(0.0, tp.share) for tp in templates]
+        entries: list[WorkflowEntry] = []
+        counts: dict[str, int] = {}
+        for t in times:
+            tp = rng.choices(list(templates), weights=shares)[0]
+            k = counts[tp.name] = counts.get(tp.name, 0) + 1
+            entries.append(tp.instantiate(k - 1, t))
+        for tp, every in periodic:
+            if every <= 0:
+                raise ValueError(f"{tp.name}: periodic cadence must be > 0")
+            t = every
+            while t < horizon:
+                k = counts[tp.name] = counts.get(tp.name, 0) + 1
+                entries.append(tp.instantiate(k - 1, t))
+                t += every
+        super().__init__(entries, name=name)
+        self.kind = kind
+        self.horizon = horizon
+
+
+def prefix_view(entries: Sequence[WorkflowEntry],
+                name: str = "stream") -> CampaignView:
+    """The merged engine-facing view of an arrived prefix.  Identical to
+    ``Campaign(entries).view()`` but tolerates an *empty* prefix (an
+    open stream may start with nothing arrived at t = 0)."""
+    if entries:
+        return Campaign(entries, name=name).view()
+    return CampaignView(name, DAG(), {}, {}, {}, {}, ())

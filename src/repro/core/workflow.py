@@ -313,6 +313,11 @@ class CampaignView:
     #: merged set name -> the workflow's fairness weight
     weight_of: "dict[str, float]"
     entries: "tuple[WorkflowEntry, ...]"
+    #: merged set name -> the workflow's deadline (None = no SLO); a
+    #: late field with a default so positional constructions predating
+    #: deadline-aware admission keep working
+    deadline_of: "dict[str, float | None]" = (
+        dataclasses.field(default_factory=dict))
 
 
 class Campaign:
@@ -357,6 +362,7 @@ class Campaign:
         arrival_of: dict[str, float] = {}
         priority_of: dict[str, int] = {}
         weight_of: dict[str, float] = {}
+        deadline_of: "dict[str, float | None]" = {}
         for w in self.workflows:
             for ts in w.dag.nodes.values():
                 merged = f"{w.name}{WORKFLOW_SEP}{ts.name}"
@@ -365,11 +371,13 @@ class Campaign:
                 arrival_of[merged] = w.arrival
                 priority_of[merged] = w.priority
                 weight_of[merged] = w.weight
+                deadline_of[merged] = w.deadline
             for u, v in w.dag.edges():
                 g.add_edge(f"{w.name}{WORKFLOW_SEP}{u}",
                            f"{w.name}{WORKFLOW_SEP}{v}")
         return CampaignView(self.name, g, workflow_of, arrival_of,
-                            priority_of, weight_of, tuple(self.workflows))
+                            priority_of, weight_of, tuple(self.workflows),
+                            deadline_of)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,6 +6,11 @@ Implements the production serving loop in miniature: a request queue is
 batched, prefilled (one sharded forward over the prompt), then decoded
 step-by-step with a persistent sharded cache.  On TPU the same loop runs
 the full config on the production mesh.
+
+At fleet scale these serving jobs are the arrival process of the
+streaming-tenancy scheduler: `core/stream.py` models an open stream of
+them (`examples/stream_tenancy.py`, `benchmarks/bench_streaming.py`)
+with per-arrival SLOs, deadline-aware admission, and elastic capacity.
 """
 
 from __future__ import annotations

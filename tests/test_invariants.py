@@ -715,3 +715,116 @@ def test_disabled_faults_bit_identity(policy, g, seed):
     assert off.makespan == plain.makespan
     assert off.node_failures == 0 and off.task_failures == 0
     assert off.recoveries_restart == 0 and off.recoveries_rerun == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming tenancy (PR 8): open streams, revocation, elastic leases
+from repro.core import (CampaignStream, ElasticOptions, GeneratedStream,
+                       RunConfig, StreamTemplate)
+
+
+@st.composite
+def random_streams(draw):
+    """Seeded generated streams over small random-template workflows."""
+    kind = draw(st.sampled_from(["poisson", "diurnal", "bursty"]))
+    tmpls = []
+    for t in range(draw(st.integers(1, 2))):
+        g = draw(random_dags(max_nodes=3, max_tasks=3))
+        tmpls.append(StreamTemplate(
+            f"T{t}", g, priority=draw(st.integers(0, 2)),
+            deadline_slack=draw(st.sampled_from([None, 300.0, 900.0])),
+            reference_makespan=100.0))
+    return GeneratedStream(tmpls, rate=1 / 80.0,
+                           horizon=float(draw(st.integers(200, 600))),
+                           seed=draw(st.integers(0, 9)), kind=kind)
+
+
+@settings(max_examples=10, deadline=None)
+@given(stream=random_streams(), seed=st.integers(0, 3),
+       revoke=st.booleans())
+def test_stream_conservation_and_exactly_once(stream, seed, revoke):
+    """Open-stream runs conserve work: arrived == finished at the end,
+    the stream partition sums, every arrived workflow's tasks run exactly
+    once — revocation (which re-defers queued workflows) included."""
+    stream.reset()
+    r = simulate(stream, make_pool("node_level"),
+                 options=SimOptions(seed=seed),
+                 config=RunConfig(admission=AdmissionOptions(
+                     deadline_aware=True, revoke=revoke)))
+    s = r.stream
+    assert s["arrived"] == len(stream.entries)
+    assert s["arrived"] == (s["finished"] + s["admitted"]
+                            + s["deferred"] + s["queued"])
+    assert s["finished"] == s["arrived"]
+    seen = {}
+    for rec in r.records:
+        key = (rec.workflow, rec.set_name, rec.index)
+        seen[key] = seen.get(key, 0) + 1
+    assert all(n == 1 for n in seen.values())
+    for e in stream.entries:
+        want = sum(ts.num_tasks for ts in e.dag.nodes.values())
+        got = sum(1 for (wf, _n, _i) in seen if wf == e.name)
+        assert got == want, e.name
+
+
+@settings(max_examples=8, deadline=None)
+@given(stream=random_streams(), seed=st.integers(0, 3))
+def test_closed_stream_adapter_bit_identity(stream, seed):
+    """Wrapping the same entries as a closed campaign and streaming it
+    through ``CampaignStream`` reproduces the direct-campaign run
+    bit-identically (records, makespan, per-workflow stats)."""
+    entries = stream.entries
+    if not entries:
+        return
+    camp = Campaign(entries, name="c")
+    a = simulate(camp, make_pool("node_level"),
+                 options=SimOptions(seed=seed),
+                 config=RunConfig(admission=AdmissionOptions()))
+    b = simulate(CampaignStream(camp), make_pool("node_level"),
+                 options=SimOptions(seed=seed),
+                 config=RunConfig(admission=AdmissionOptions()))
+    assert a.records == b.records
+    assert a.makespan == b.makespan
+    assert a.workflows == b.workflows
+
+
+@settings(max_examples=8, deadline=None)
+@given(stream=random_streams(), seed=st.integers(0, 3),
+       lease_term=st.sampled_from([120.0, 400.0]))
+def test_elastic_leases_never_strand_or_lose_work(stream, seed, lease_term):
+    """Under elastic capacity every arrived workflow still finishes
+    (drain-before-retire: expiry never kills a placed task) and the lease
+    ledger is consistent (expired <= granted, log events balanced)."""
+    stream.reset()
+    r = simulate(stream, make_pool("node_level"),
+                 options=SimOptions(seed=seed),
+                 config=RunConfig(
+                     admission=AdmissionOptions(),
+                     elastic=ElasticOptions(max_lease_nodes=2,
+                                            lease_term=lease_term,
+                                            grow_threshold=1.0,
+                                            check_interval=40.0)))
+    assert r.stream["finished"] == r.stream["arrived"]
+    assert r.leases_expired <= r.leases_granted
+    kinds = [ev for _t, ev, _n in r.lease_log]
+    assert kinds.count("expire") == r.leases_expired
+    assert kinds.count("grant") == r.leases_granted
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=4, deadline=None)
+@given(g=random_dags(max_nodes=5), seed=st.integers(0, 3))
+def test_runconfig_bit_identical_to_legacy_kwargs(policy, g, seed):
+    """The RunConfig call form is purely mechanical sugar: legacy kwargs
+    and the equivalent config produce bit-identical runs."""
+    import warnings as _w
+    opts = straggler_opts(seed)
+    fb = _feedback("feedback")
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", DeprecationWarning)
+        a = simulate(g, make_pool("node_level"), "async", options=opts,
+                     scheduling=policy, feedback=fb)
+    b = simulate(g, make_pool("node_level"), "async", options=opts,
+                 config=RunConfig(scheduling=policy, feedback=fb))
+    assert a.records == b.records
+    assert a.makespan == b.makespan

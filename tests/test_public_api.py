@@ -1,0 +1,71 @@
+"""Snapshot of the curated public API (``repro.core.__all__``).
+
+The core package used to export "whatever ``dir()`` found", so surface
+changes were invisible in review.  ``__all__`` is now an explicit,
+curated list; this snapshot makes any addition or removal show up as a
+one-line test diff.  Additions are deliberate API growth (update the
+snapshot); removals are breaking changes (think twice)."""
+
+import repro.core as core
+
+EXPECTED = {
+    # structure + workloads
+    "DAG", "TaskSet", "Pipeline", "Stage", "pipelines_to_dag",
+    "fig2a_chain", "fig2b_fork", "fig2b_with_paper_tx", "fig2d_independent",
+    "deepdrivemd_dag", "cdg_dag", "ddmd_stage_tx", "cdg_sequential_stage_tx",
+    "ddmd_sequential_stage_groups", "DDMD_TABLE1", "CDG_TABLE2",
+    "CDG_SEQUENTIAL_GROUPS",
+    # resources
+    "Resources", "NodeSpec", "NodeState", "PoolSpec", "Allocation",
+    "ElasticOptions", "as_allocation", "node_states", "summit_pool",
+    "hybrid_pool", "tpu_pod_pool", "doa_res", "wla",
+    # analytic model + prediction
+    "ENTK_OVERHEAD", "ASYNC_OVERHEAD", "Prediction", "predict",
+    "async_ttx", "sequential_ttx", "sequential_ttx_grouped",
+    "staggered_async_ttx", "relative_improvement", "maskable_stages",
+    "tx_lookup_fn", "BatchEqns", "jax_available",
+    "staggered_async_ttx_batch", "MakespanPrediction", "MakespanPredictor",
+    # scheduling engine
+    "SchedEngine", "SchedulingPolicy", "SCHEDULING_POLICIES",
+    "get_scheduling_policy", "SetInfo", "FifoBackfill", "LargestTxFirst",
+    "GpuAwareBestFit", "LocalityAware", "NodePackTopology",
+    "CampaignPriority", "AdmissionOptions", "FailureEvent",
+    # estimator / feedback
+    "TxEstimator", "SetEstimate", "FeedbackOptions",
+    # faults
+    "FaultOptions", "FailureSchedule",
+    # tenancy: campaigns + streams
+    "Campaign", "CampaignView", "WorkflowEntry", "WorkflowStats",
+    "campaign_stats", "weighted_slowdown", "WorkflowStream",
+    "CampaignStream", "GeneratedStream", "StreamTemplate", "prefix_view",
+    # run API (both substrates)
+    "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
+    "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
+    "RealExecutor", "ExecResult",
+    # execution policies / comparison
+    "ExecutionPolicy", "async_policy", "sequential_policy",
+    "adaptive_policy", "adaptive_observed_policy", "arbitrated_policy",
+    "priority_policy", "lpt_policy", "gpu_bestfit_policy",
+    "locality_policy", "nodepack_policy", "PolicyComparison",
+    "compare_policies",
+}
+
+
+def test_public_api_snapshot():
+    got = set(core.__all__)
+    added = sorted(got - EXPECTED)
+    removed = sorted(EXPECTED - got)
+    assert not added and not removed, (
+        f"public API changed — added {added}, removed {removed}; "
+        f"update tests/test_public_api.py if deliberate")
+
+
+def test_public_api_resolves():
+    for name in core.__all__:
+        assert getattr(core, name, None) is not None, name
+
+
+def test_results_are_runresults():
+    from repro.core import ExecResult, RunResult, SimResult
+    assert issubclass(SimResult, RunResult)
+    assert issubclass(ExecResult, RunResult)

@@ -1,0 +1,402 @@
+"""Streaming service tenancy: open arrival streams, SLO-aware admission,
+preemptive revocation, elastic capacity leases, and the unified RunConfig
+run API.
+
+Invariants locked down here:
+
+- stream conservation: every arrived workflow is exactly one of
+  finished / admitted / deferred / queued at the end of a run, and a
+  run-to-completion finishes everything that arrived;
+- revocation never un-admits a workflow with a launched task;
+- lease expiry never strands a placed task: busy lease nodes drain and
+  retire only on their last release, with the incremental indexes
+  consistent (``check_index_integrity``) across grow / drain / retire;
+- a closed campaign wrapped as a ``CampaignStream`` is bit-identical to
+  passing the campaign directly, on both substrates;
+- a legacy-kwarg call and its ``RunConfig`` equivalent are bit-identical,
+  and mixing the two forms raises ``TypeError``;
+- ``GeneratedStream`` is a pure function of its arguments.
+"""
+
+import warnings
+
+import pytest
+
+from repro.core import (AdmissionOptions, Campaign, CampaignStream, DAG,
+                        ElasticOptions, GeneratedStream, NodeSpec, PoolSpec,
+                        RealExecutor, RunConfig, SchedEngine, SimOptions,
+                        StreamTemplate, TaskSet, WorkflowEntry, prefix_view,
+                        simulate)
+
+
+def two_stage(n_sim=3, tx=40.0, gpus=1):
+    g = DAG()
+    g.add(TaskSet("sim", n_sim, 2, 0, tx, tx_sigma=0.0))
+    g.add(TaskSet("train", 1, 2, gpus, tx, tx_sigma=0.0))
+    g.add_edge("sim", "train")
+    return g
+
+
+def node_pool(num_nodes=4):
+    return PoolSpec("p", num_nodes, NodeSpec(cpus=32, gpus=4),
+                    node_level=True)
+
+
+def open_stream(seed=0, rate=1 / 90.0, horizon=1200.0, **kw):
+    tmpl = StreamTemplate("inf", two_stage, deadline_slack=500.0,
+                          reference_makespan=130.0)
+    return GeneratedStream([tmpl], rate=rate, horizon=horizon, seed=seed,
+                           **kw)
+
+
+# ---------------------------------------------------------------------------
+# stream sources
+def test_generated_stream_deterministic():
+    for kind in ("poisson", "diurnal", "bursty"):
+        a = open_stream(seed=7, kind=kind)
+        b = open_stream(seed=7, kind=kind)
+        assert [(e.name, e.arrival) for e in a.entries] \
+            == [(e.name, e.arrival) for e in b.entries]
+        assert all(0.0 < e.arrival < 1200.0 for e in a.entries)
+        assert a.entries != open_stream(seed=8, kind=kind).entries
+
+
+def test_generated_stream_periodic_and_deadlines():
+    t_train = StreamTemplate("train", lambda: two_stage(1), priority=-1)
+    st = GeneratedStream([StreamTemplate("inf", two_stage,
+                                         deadline_slack=300.0)],
+                        rate=1 / 200.0, horizon=1000.0, seed=1,
+                        periodic=[(t_train, 400.0)])
+    trains = [e for e in st.entries if e.name.startswith("train")]
+    assert [e.arrival for e in trains] == [400.0, 800.0]
+    infs = [e for e in st.entries if e.name.startswith("inf")]
+    assert all(e.deadline == e.arrival + 300.0 for e in infs)
+    assert all(e.deadline is None for e in trains)
+
+
+def test_stream_consumption_protocol():
+    st = open_stream(seed=3)
+    n = len(st)
+    assert n > 0
+    first = st.next_arrival()
+    assert st.take_until(first - 1e-9) == []
+    got = st.take_until(float("inf"))
+    assert len(got) == n and st.next_arrival() is None
+    st.reset()
+    assert st.next_arrival() == first
+
+
+def test_prefix_view_empty_and_merge():
+    v = prefix_view([], "s")
+    assert len(v.workflow_of) == 0
+    e = WorkflowEntry("w0", two_stage(), arrival=5.0, deadline=50.0)
+    v = prefix_view([e], "s")
+    assert v.workflow_of["w0/sim"] == "w0"
+    assert v.deadline_of["w0/train"] == 50.0
+
+
+# ---------------------------------------------------------------------------
+# open-stream runs: conservation
+def test_open_stream_conservation_simulator():
+    st = open_stream(seed=11)
+    r = simulate(st, node_pool(),
+                 config=RunConfig(admission=AdmissionOptions()))
+    s = r.stream
+    assert s["arrived"] == len(st.entries)
+    assert s["arrived"] == (s["finished"] + s["admitted"]
+                            + s["deferred"] + s["queued"])
+    assert s["finished"] == s["arrived"]  # run to completion drains all
+    assert len(r.workflows) == s["arrived"]
+    # every workflow's tasks all completed exactly once
+    per_wf = {}
+    for rec in r.records:
+        per_wf[rec.workflow] = per_wf.get(rec.workflow, 0) + 1
+    assert all(n == 4 for n in per_wf.values())  # 3 sim + 1 train
+    assert r.slo_attainment() is not None
+
+
+def test_open_stream_conservation_executor():
+    st = open_stream(seed=11, rate=1 / 150.0, horizon=600.0)
+    ex = RealExecutor(node_pool(2), tx_scale=0.002)
+    r = ex.run(st, config=RunConfig(admission=AdmissionOptions()))
+    s = r.stream
+    assert s["arrived"] == len(st.entries)
+    assert s["finished"] == s["arrived"]
+    assert len(r.workflows) == s["arrived"]
+
+
+def test_open_stream_without_admission():
+    # streams work with the admission controller off too
+    st = open_stream(seed=2, rate=1 / 300.0, horizon=900.0)
+    r = simulate(st, node_pool(), config=RunConfig())
+    assert r.stream["finished"] == r.stream["arrived"] == len(st.entries)
+
+
+# ---------------------------------------------------------------------------
+# closed adapter + run API equivalence
+def small_campaign():
+    c = Campaign(name="c")
+    c.add("w0", two_stage(), arrival=0.0, reference_makespan=130.0)
+    c.add("w1", two_stage(2), arrival=60.0, priority=1,
+          reference_makespan=90.0)
+    c.add("w2", two_stage(4), arrival=120.0, reference_makespan=170.0)
+    return c
+
+
+def test_campaign_stream_bit_identical_simulator():
+    camp = small_campaign()
+    a = simulate(camp, node_pool(),
+                 config=RunConfig(admission=AdmissionOptions()))
+    b = simulate(CampaignStream(camp), node_pool(),
+                 config=RunConfig(admission=AdmissionOptions()))
+    assert a.records == b.records
+    assert a.makespan == b.makespan
+    assert a.workflows == b.workflows
+    assert b.stream is None  # closed path: no open-stream accounting
+
+
+def test_campaign_stream_bit_identical_executor():
+    camp = small_campaign()
+    ex = RealExecutor(node_pool(2), tx_scale=0.002)
+    a = ex.run(camp, config=RunConfig(admission=AdmissionOptions()))
+    b = ex.run(CampaignStream(camp),
+               config=RunConfig(admission=AdmissionOptions()))
+    # wall-clock substrate: the schedule (placements, per-task pools) must
+    # agree even though wall timestamps jitter
+    key = lambda r: (r.set_name, r.index)
+    pa = {key(r): (r.pool, r.workflow) for r in a.records}
+    pb = {key(r): (r.pool, r.workflow) for r in b.records}
+    assert pa == pb
+    assert sorted(a.workflows) == sorted(b.workflows)
+
+
+def test_runconfig_equals_legacy_kwargs_simulator():
+    camp = small_campaign()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a = simulate(camp, node_pool(), scheduling="lpt",
+                     admission=AdmissionOptions())
+    b = simulate(camp, node_pool(),
+                 config=RunConfig(scheduling="lpt",
+                                  admission=AdmissionOptions()))
+    assert a.records == b.records and a.makespan == b.makespan
+
+
+def test_runconfig_equals_legacy_kwargs_executor():
+    g = two_stage()
+    ex = RealExecutor(node_pool(2), tx_scale=0.002)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a = ex.run(g, scheduling="lpt")
+    b = ex.run(g, config=RunConfig(scheduling="lpt"))
+    key = lambda r: (r.set_name, r.index)
+    assert ({key(r): r.pool for r in a.records}
+            == {key(r): r.pool for r in b.records})
+
+
+def test_mixing_config_and_legacy_raises():
+    camp = small_campaign()
+    with pytest.raises(TypeError, match="not both"):
+        simulate(camp, node_pool(), config=RunConfig(),
+                 admission=AdmissionOptions())
+    with pytest.raises(TypeError, match="not both"):
+        RealExecutor(node_pool(2)).run(two_stage(), config=RunConfig(),
+                                       scheduling="lpt")
+
+
+def test_legacy_kwargs_warn_once():
+    import repro.core.runconfig as rc
+    old = rc._warned
+    try:
+        rc._warned = False
+        with pytest.warns(DeprecationWarning, match="RunConfig"):
+            simulate(small_campaign(), node_pool(),
+                     admission=AdmissionOptions())
+    finally:
+        rc._warned = old
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission + revocation
+def test_deadline_aware_admission_admits_at_risk_workflow():
+    # saturate the pool with a big workflow, then stream in a
+    # deadline-carrying workflow whose slack is tight: the deadline-blind
+    # controller defers it (strict floor, no aging), the deadline-aware
+    # one must override the defer once the slack is within the margin
+    def scenario(adm):
+        c = Campaign(name="c")
+        # bulk outranks urgent so the priority fast-path cannot admit it
+        c.add("bulk", two_stage(24, tx=80.0), arrival=0.0, priority=1)
+        c.add("urgent", two_stage(2, tx=30.0), arrival=10.0,
+              deadline=260.0, reference_makespan=95.0)
+        return simulate(c, node_pool(1), config=RunConfig(admission=adm))
+
+    strict = dict(i_floor=0.99, hold_ratio=0.0, backfill_fraction=0.0,
+                  max_defer_time=1e9)
+    blind = scenario(AdmissionOptions(**strict))
+    aware = scenario(AdmissionOptions(**strict, deadline_aware=True,
+                                      deadline_margin=5.0))
+    assert aware.workflows["urgent"].met_deadline
+    # the deadline override actually changed the schedule: urgent starts
+    # strictly earlier than under the blind controller
+    assert (aware.workflows["urgent"].start
+            < blind.workflows["urgent"].start)
+
+
+def test_revocation_engine_level():
+    # engine-level: a started workflow is never revocable, a queued one is
+    c = Campaign(name="c")
+    c.add("lo", two_stage(24), arrival=0.0, priority=0)
+    c.add("hi", two_stage(2), arrival=0.0, priority=5)
+    view = c.view()
+    eng = SchedEngine(view.dag, node_pool(1), campaign=view,
+                      admission=AdmissionOptions(revoke=True))
+    launched = eng.startable(0.0)
+    started_wfs = {eng.workflow_of[n] for n, _i, _k in launched}
+    assert "hi" in started_wfs  # priority order: hi launches first
+    for wf in started_wfs:
+        assert eng.revoke_workflow(wf, 1.0) is False
+    not_started = {"lo", "hi"} - started_wfs
+    for wf in sorted(not_started):
+        assert eng.revoke_workflow(wf, 1.0) is True
+        for m in eng.order:
+            if eng.workflow_of[m] == wf:
+                assert m in eng.deferred and m not in eng.admitted
+    assert eng.admission_revocations == len(not_started)
+    st = eng.stream_accounting()
+    assert st["arrived"] == 2
+    assert st["revoked"] == len(not_started)
+
+
+def test_revocation_in_stream_run_never_touches_started():
+    # integration: drive a loaded stream with revocation on; every revoked
+    # workflow must still finish (revocation defers, never cancels) and
+    # conservation must hold
+    tmpl_lo = StreamTemplate("batch", lambda: two_stage(6, tx=60.0),
+                             priority=0, share=3.0,
+                             reference_makespan=200.0)
+    tmpl_hi = StreamTemplate("rt", lambda: two_stage(1, tx=20.0),
+                             priority=4, deadline_slack=90.0,
+                             reference_makespan=50.0, share=1.0)
+    st = GeneratedStream([tmpl_lo, tmpl_hi], rate=1 / 45.0, horizon=900.0,
+                         seed=13, kind="bursty")
+    r = simulate(st, node_pool(1),
+                 config=RunConfig(admission=AdmissionOptions(
+                     i_floor=0.6, max_defer_time=600.0,
+                     deadline_aware=True, revoke=True)))
+    s = r.stream
+    assert s["arrived"] == len(st.entries)
+    assert s["finished"] == s["arrived"]  # revocation loses no work
+    per_wf_tasks = {}
+    for rec in r.records:
+        per_wf_tasks.setdefault(rec.workflow, set()).add(
+            (rec.set_name, rec.index))
+    # every arrived workflow ran all its tasks exactly once
+    for e in st.entries:
+        n = 7 if e.name.startswith("batch") else 2  # 6+1 / 1+1 tasks
+        assert len(per_wf_tasks[e.name]) == n, e.name
+
+
+# ---------------------------------------------------------------------------
+# elastic capacity
+def test_elastic_engine_grow_drain_retire_integrity():
+    c = Campaign(name="c")
+    for i in range(6):
+        c.add(f"w{i}", two_stage(8, tx=100.0), arrival=0.0)
+    view = c.view()
+    eng = SchedEngine(view.dag, node_pool(1), campaign=view,
+                      elastic=ElasticOptions(max_lease_nodes=2,
+                                             lease_term=300.0,
+                                             grow_threshold=0.5,
+                                             check_interval=50.0))
+    launched = list(eng.startable(0.0))
+    eng.check_index_integrity()
+    assert eng.elastic_pass(50.0) is True  # queued demand -> grant
+    eng.check_index_integrity()
+    assert eng.leases_granted == 1
+    leased = eng.lease_log[-1][2]
+    more = list(eng.startable(50.0))
+    assert any(k == 0 for _n, _i, k in more)
+    eng.check_index_integrity()
+    # some placements land on the leased node while it is up
+    on_lease = [(n, i) for n, i, _k in more
+                if eng.node_placement(n, i) == leased]
+    # expire while busy: the node must drain, not die
+    eng.elastic_pass(400.0)
+    eng.check_index_integrity()
+    if on_lease:
+        assert eng.leases_expired == 0  # still draining
+        assert (400.0, "drain", leased) in eng.lease_log
+    # completing everything releases the node -> retire on last release
+    for n, i, _k in launched + more:
+        eng.complete(n, i)
+    eng.check_index_integrity()
+    if on_lease:
+        assert eng.leases_expired == 1
+        assert eng.lease_log[-1] == (eng._now, "expire", leased)
+    # a retired node is never offered again
+    eng.elastic_pass(500.0)
+    eng.check_index_integrity()
+
+
+def test_elastic_stream_run_no_stranded_tasks():
+    tmpl = StreamTemplate("inf", lambda: two_stage(6, tx=80.0),
+                          deadline_slack=700.0, reference_makespan=250.0)
+    st = GeneratedStream([tmpl], rate=1 / 60.0, horizon=1200.0, seed=5,
+                         kind="diurnal", period=1200.0, peak_ratio=6.0)
+    r = simulate(st, node_pool(2),
+                 config=RunConfig(
+                     admission=AdmissionOptions(),
+                     elastic=ElasticOptions(max_lease_nodes=3,
+                                            lease_term=300.0,
+                                            grow_threshold=1.0,
+                                            check_interval=60.0)))
+    assert r.leases_granted > 0  # the load swing actually grew the pool
+    assert r.leases_expired > 0  # ... and leases lapsed again
+    assert r.stream["finished"] == r.stream["arrived"]  # nothing stranded
+    base = simulate(st, node_pool(2),
+                    config=RunConfig(admission=AdmissionOptions()))
+    # elastic capacity must not slow the stream down
+    assert r.makespan <= base.makespan * 1.0001
+
+
+def test_elastic_rejects_faults_and_aggregate_pools():
+    from repro.runtime.fault import FaultOptions
+    g = two_stage()
+    with pytest.raises(ValueError, match="fault"):
+        SchedEngine(g, node_pool(1),
+                    elastic=ElasticOptions(max_lease_nodes=1),
+                    faults=FaultOptions(node_failure_rate=1e-4))
+    agg = PoolSpec("agg", 2, NodeSpec(cpus=32, gpus=4))
+    with pytest.raises(ValueError, match="node_level"):
+        SchedEngine(g, agg, elastic=ElasticOptions(max_lease_nodes=1))
+
+
+def test_elastic_disabled_options_noop():
+    g = two_stage()
+    eng = SchedEngine(g, node_pool(1),
+                      elastic=ElasticOptions(max_lease_nodes=0))
+    assert eng.elastic is None
+    assert eng.elastic_pass(100.0) is False
+
+
+# ---------------------------------------------------------------------------
+# per-workflow predicted finishes in the trace
+def test_prediction_trace_has_workflow_finishes():
+    c = Campaign(name="c")
+    for i in range(5):
+        c.add(f"w{i}", two_stage(3), arrival=30.0 * i,
+              reference_makespan=130.0)
+    from repro.core import FeedbackOptions
+    r = simulate(c, node_pool(2),
+                 config=RunConfig(
+                     feedback=FeedbackOptions(),
+                     admission=AdmissionOptions()))
+    with_wf = [p for p in r.predictions if p.wf_finish]
+    assert with_wf, "no prediction carried per-workflow finishes"
+    for p in with_wf:
+        fins = dict(p.wf_finish)
+        assert all(f >= 0.0 for f in fins.values())
+        for wf, f in fins.items():
+            assert p.predicted_finish(wf) == f
+        assert p.predicted_finish("nonexistent") is None

@@ -39,6 +39,13 @@ Failure conditions:
      that file are machine-dependent and are NOT drift-compared (none
      of its keys contain ``makespan``); only the fresh headline flags
      gate;
+   - streaming tenancy still pays off (``streaming.json``: per-seed
+     deadline-aware + elastic SLO attainment >= deadline-blind static
+     and P99 weighted slowdown <=, elastic leases both granted and
+     expired on every seed while the static arm stays static,
+     preemptive revocation exercised across the seeds, and the
+     streaming run API — ``CampaignStream`` + ``RunConfig`` — stays
+     bit-identical to the committed closed-campaign baselines);
    - priced recovery arbitration still matches-or-beats both pure
      recovery arms on every seed of the c-DG2 failure storm
      (``faults.json``: per-seed arbitrated <= min(always-rerun,
@@ -199,6 +206,41 @@ def check_headlines(name, fresh, problems):
             problems.append(
                 f"{name}: incremental and brute-force-scan arms no longer "
                 f"emit identical dispatch sequences")
+    if name == "streaming.json":
+        st = fresh.get("streaming", {})
+        per_seed = st.get("per_seed", {})
+        if not per_seed:
+            problems.append(f"{name}: streaming section missing")
+        for seed, r in per_seed.items():
+            a, b = r.get("aware", {}), r.get("blind", {})
+            slo_a, slo_b = a.get("slo"), b.get("slo")
+            if slo_a is None or slo_b is None \
+                    or slo_a * 1.0001 < slo_b:
+                problems.append(
+                    f"{name}: seed {seed}: deadline-aware + elastic SLO "
+                    f"attainment ({slo_a!r}) lost to deadline-blind "
+                    f"static ({slo_b!r})")
+            p99_a, p99_b = a.get("p99_slowdown"), b.get("p99_slowdown")
+            if p99_a is None or p99_b is None or p99_a > p99_b * 1.0001:
+                problems.append(
+                    f"{name}: seed {seed}: deadline-aware + elastic P99 "
+                    f"weighted slowdown ({p99_a!r}) lost to "
+                    f"deadline-blind static ({p99_b!r})")
+            if not a.get("leases_granted") or not a.get("leases_expired"):
+                problems.append(
+                    f"{name}: seed {seed}: elastic leases not exercised "
+                    f"(granted={a.get('leases_granted')!r}, "
+                    f"expired={a.get('leases_expired')!r})")
+            if b.get("leases_granted"):
+                problems.append(
+                    f"{name}: seed {seed}: the static arm leased nodes "
+                    f"({b.get('leases_granted')!r}) — it must stay static")
+        if not st.get("revocations_total"):
+            problems.append(
+                f"{name}: preemptive revocation never fired across the "
+                f"seeds (revocations_total="
+                f"{st.get('revocations_total')!r})")
+        check_identity(name, fresh, problems, "streaming run API")
     if name == "faults.json":
         rec = fresh.get("recovery", {})
         arms = rec.get("arms", {})

@@ -7,7 +7,12 @@ Verifies that README.md and DESIGN.md only reference things that exist:
    to at least one real file/directory;
 2. every scheduling-policy name in `SCHEDULING_POLICIES` is documented in
    BOTH files, and every policy name the DESIGN.md policy table lists is
-   actually registered (docs and registry cannot drift).
+   actually registered (docs and registry cannot drift);
+3. the run-API knob dataclasses (`RunConfig`, `ElasticOptions`,
+   `AdmissionOptions`, `FaultOptions`, `FeedbackOptions`, `SimOptions`)
+   stay documented field-by-field: every field must be mentioned in
+   README.md or DESIGN.md, so adding a knob without documenting it
+   fails CI.
 
 Exits non-zero with a list of problems; run by CI on every push.
 """
@@ -111,6 +116,32 @@ def main() -> int:
                 f"DESIGN.md: policy table lists {row_name!r} which is not "
                 f"in SCHEDULING_POLICIES")
 
+    # 3. run-API knob dataclasses <-> docs agreement: every field of the
+    # public options classes must be documented somewhere
+    n_knobs = 0
+    try:
+        import dataclasses as _dc
+
+        from repro.core import (AdmissionOptions, ElasticOptions,
+                                FaultOptions, FeedbackOptions, RunConfig,
+                                SimOptions)
+        knob_classes = (RunConfig, ElasticOptions, AdmissionOptions,
+                        FaultOptions, FeedbackOptions, SimOptions)
+    except Exception as e:  # pragma: no cover - import environment broken
+        problems.append(f"cannot import run-API knob classes: {e}")
+        knob_classes = ()
+    everywhere = "\n".join(texts.values())
+    for cls in knob_classes:
+        if f"`{cls.__name__}" not in everywhere:
+            problems.append(f"run-API class {cls.__name__!r} is public "
+                            f"but undocumented in README.md/DESIGN.md")
+        for field in _dc.fields(cls):
+            n_knobs += 1
+            if f"`{field.name}" not in everywhere:
+                problems.append(
+                    f"{cls.__name__}.{field.name}: knob is public but "
+                    f"undocumented in README.md/DESIGN.md")
+
     if problems:
         print("docs-check: FAILED")
         for p in problems:
@@ -119,7 +150,8 @@ def main() -> int:
     n_refs = sum(1 for t in texts.values() for tok in PATH_RE.findall(t)
                  if looks_like_path(tok))
     print(f"docs-check: OK ({n_refs} path references, "
-          f"{len(registered)} policies cross-checked)")
+          f"{len(registered)} policies, {n_knobs} run-API knobs "
+          f"cross-checked)")
     return 0
 
 
