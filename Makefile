@@ -3,8 +3,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test-fast test-all test-cov bench-policies bench-feedback \
         bench-predictor bench-topology bench-admission \
-        bench-engine-scale bench-faults bench-streaming bench-check \
-        bench-paper docs-check lint format-check
+        bench-engine-scale bench-faults bench-streaming \
+        bench-stream-scale bench-check bench-paper docs-check lint \
+        format-check profile
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -64,6 +65,18 @@ bench-faults:
 ## API's bit-identity to the committed closed-campaign baselines
 bench-streaming:
 	$(PY) benchmarks/bench_streaming.py
+
+## trace-scale hot loop: epoch-throttled + coalesced + summary arm's
+## >= 5x end-to-end arrivals/sec over the unthrottled arm on the
+## ~1e5-arrival diurnal stream, throttled-prediction dispatch identity,
+## and O(1)-amortized summary metric queries
+bench-stream-scale:
+	$(PY) benchmarks/bench_stream_scale.py
+
+## cProfile any RunConfig scenario: top-20 cumulative hot spots
+## (tools/profile_run.py --help for the knobs)
+profile:
+	$(PY) tools/profile_run.py
 
 ## benchmark-regression gate: fresh benchmarks/out/*.json vs the
 ## committed benchmarks/baseline/*.json (>10% makespan drift or a lost

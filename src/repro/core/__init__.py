@@ -10,8 +10,8 @@ from .resources import (Allocation, NodeSpec, NodeState, PoolSpec, Resources,
 from .sched_engine import (SCHEDULING_POLICIES, AdmissionOptions,
                            CampaignPriority, FailureEvent, FifoBackfill,
                            GpuAwareBestFit, LargestTxFirst, LocalityAware,
-                           NodePackTopology, SchedEngine, SchedulingPolicy,
-                           SetInfo, get_scheduling_policy)
+                           NodePackTopology, PredictOptions, SchedEngine,
+                           SchedulingPolicy, SetInfo, get_scheduling_policy)
 from ..runtime.fault import FailureSchedule, FaultOptions
 from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     maskable_stages, predict, relative_improvement,
@@ -19,8 +19,9 @@ from .model import (ENTK_OVERHEAD, ASYNC_OVERHEAD, Prediction, async_ttx,
                     staggered_async_ttx, tx_lookup_fn)
 from .model_batch import (BatchEqns, jax_available,
                           staggered_async_ttx_batch)
+from .metrics import QuantileSketch, StreamMetrics
 from .predictor import MakespanPrediction, MakespanPredictor
-from .results import RunResult, per_pool_task_counts
+from .results import PerfCounters, RunResult, per_pool_task_counts
 from .runconfig import RunConfig, resolve_run_config
 from .simulator import SimOptions, SimResult, TaskRecord, simulate
 from .executor import ExecResult, RealExecutor
@@ -64,7 +65,7 @@ __all__ = [
     "SchedEngine", "SchedulingPolicy", "SCHEDULING_POLICIES",
     "get_scheduling_policy", "SetInfo", "FifoBackfill", "LargestTxFirst",
     "GpuAwareBestFit", "LocalityAware", "NodePackTopology",
-    "CampaignPriority", "AdmissionOptions", "FailureEvent",
+    "CampaignPriority", "AdmissionOptions", "FailureEvent", "PredictOptions",
     # estimator / feedback
     "TxEstimator", "SetEstimate", "FeedbackOptions",
     # faults
@@ -76,7 +77,9 @@ __all__ = [
     # run API (both substrates)
     "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
     "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
-    "RealExecutor", "ExecResult",
+    "RealExecutor", "ExecResult", "PerfCounters",
+    # streaming metric sketches (bounded-memory summaries)
+    "QuantileSketch", "StreamMetrics",
     # execution policies / comparison
     "ExecutionPolicy", "async_policy", "sequential_policy",
     "adaptive_policy", "adaptive_observed_policy", "arbitrated_policy",

@@ -118,6 +118,12 @@ class RealExecutor:
         feedback = cfg.feedback
         admission = cfg.admission
         faults = cfg.faults
+        if cfg.record_policy != "full":
+            # the executor's records ARE its measurement (wall-clock
+            # spans); only the simulator can trade them for sketches
+            raise ValueError(
+                f"record_policy={cfg.record_policy!r} is simulator-only "
+                f"(RealExecutor always keeps the full trace)")
 
         stream: "WorkflowStream | None" = None
         if isinstance(dag, WorkflowStream):
@@ -149,7 +155,8 @@ class RealExecutor:
         engine = SchedEngine(g, self.pool, policy=scheduling,
                              task_level=task_level, feedback=feedback,
                              campaign=view, admission=admission,
-                             faults=faults, elastic=cfg.elastic)
+                             faults=faults, elastic=cfg.elastic,
+                             predict=cfg.predict)
         # live for streams (add_workflow extends it); a superset-correct
         # copy of view.workflow_of for closed campaigns
         wf_of = engine.workflow_of if view is not None else {}
@@ -373,6 +380,8 @@ class RealExecutor:
         def stream_pending() -> bool:
             return stream is not None and stream.next_arrival() is not None
 
+        #: engine snapshot behind the newest prediction (idle-wakeup guard)
+        last_stamp = None
         with ThreadPoolExecutor(max_workers=self.max_workers) as ex:
             with cv:
                 while not engine.done() or stream_pending():
@@ -487,8 +496,16 @@ class RealExecutor:
                                       spec_gen.get((rn2, ri2), 0), cost,
                                       engine.tx_estimate(rn2, pool=dst),
                                       True)
-                    # online makespan re-prediction (core/predictor.py)
-                    engine.repredict(now, modelled)
+                    # online makespan re-prediction (core/predictor.py).
+                    # The dispatcher's poll loop wakes on a timeout even
+                    # when nothing happened; an idle wakeup (no running
+                    # tasks, no engine state moved since the last
+                    # snapshot) would append one identical prediction per
+                    # poll — skip those, re-predict on everything else
+                    if (modelled or not engine.predictions
+                            or engine.predict_stamp() != last_stamp):
+                        engine.repredict(now, modelled)
+                        last_stamp = engine.predict_stamp()
 
         makespan = max((r.end for r in records), default=0.0)
         if stream is not None:

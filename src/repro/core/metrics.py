@@ -1,0 +1,214 @@
+"""Streaming metric accumulators for trace-scale runs.
+
+``RunResult``'s steady-state metrics (``slo_attainment``,
+``slowdown_percentile``, ``window_stats``) are computed from the full
+per-workflow stats dict, which grows with the stream: a million-arrival
+replay keeps a million ``WorkflowStats`` (and a million task records)
+alive just to answer "what was the P99".  This module is the bounded
+alternative behind ``RunConfig.record_policy="summary"``: the simulator
+folds each workflow into a :class:`StreamMetrics` the moment it
+finishes and drops the per-task trace, so memory stays O(sketch size +
+windows) and every metric query is O(1)-amortized in the record count.
+
+:class:`QuantileSketch` is a weighted online quantile summary with an
+exact small-population fallback: below ``2 * max_points`` entries it
+stores the raw ``(value, weight)`` points and its ``query`` walk is
+*bit-identical* to ``RunResult.slowdown_percentile`` over the same
+population (the exact-fallback tests pin this).  Past that it compacts
+by merging adjacent sorted pairs into weighted-mean centroids, always
+keeping the extreme points exact — so ``q=0``/``q=1`` stay the true
+min/max, and the quantile *rank* error is bounded by the largest
+centroid's weight share of the total mass (``<= 2/max_points`` of the
+mass under uniform weights, since a centroid never absorbs more than
+two points per compaction round against a doubling population).
+"""
+
+from __future__ import annotations
+
+import bisect
+
+__all__ = ["QuantileSketch", "StreamMetrics"]
+
+
+class QuantileSketch:
+    """Weighted online quantile summary (adjacent-pair compaction).
+
+    ``add(value, weight)`` streams points in; ``query(q)`` returns the
+    smallest value at which the cumulative weight reaches ``q`` of the
+    total — the same weight-respecting definition as
+    ``RunResult.slowdown_percentile``.  Exact until ``2 * max_points``
+    points are held; bounded-error beyond (module docstring)."""
+
+    def __init__(self, max_points: int = 512):
+        if max_points < 2:
+            raise ValueError("max_points must be >= 2")
+        self.max_points = max_points
+        #: (value, weight) points / centroids (unordered between queries)
+        self._pts: list[tuple[float, float]] = []
+        #: memoized (sorted points, cumulative weights) query view
+        self._view: "tuple[list, list] | None" = None
+        self.compactions = 0
+        self.n_added = 0
+
+    def __len__(self) -> int:
+        return len(self._pts)
+
+    @property
+    def exact(self) -> bool:
+        """True while no compaction has happened: every query is exact."""
+        return self.compactions == 0
+
+    def total_weight(self) -> float:
+        return sum(w for _v, w in self._pts)
+
+    def add(self, value: float, weight: float = 1.0) -> None:
+        if weight <= 0:
+            return
+        self._pts.append((value, weight))
+        self._view = None
+        self.n_added += 1
+        if len(self._pts) >= 2 * self.max_points:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Halve the population: sort, keep both extremes exact, merge
+        the interior in adjacent pairs into weight-preserving centroids
+        (a centroid sits between its parents, so the result is sorted)."""
+        pts = sorted(self._pts)
+        interior = pts[1:-1]
+        out = [pts[0]]
+        for j in range(0, len(interior) - 1, 2):
+            (v1, w1), (v2, w2) = interior[j], interior[j + 1]
+            w = w1 + w2
+            out.append(((v1 * w1 + v2 * w2) / w, w))
+        if len(interior) % 2:
+            out.append(interior[-1])
+        out.append(pts[-1])
+        self._pts = out
+        self._view = None
+        self.compactions += 1
+
+    def _query_view(self) -> "tuple[list, list]":
+        view = self._view
+        if view is None:
+            pts = sorted(self._pts)
+            cum: list[float] = []
+            acc = 0.0
+            for _v, w in pts:
+                acc += w
+                cum.append(acc)
+            view = self._view = (pts, cum)
+        return view
+
+    def query(self, q: float) -> "float | None":
+        """Smallest value whose cumulative weight reaches ``q * total``
+        (None when empty).  Mirrors ``RunResult.slowdown_percentile``'s
+        walk — including its ``1e-12`` cumulative-mass tolerance — so
+        the exact fallback agrees bit-for-bit."""
+        pts, cum = self._query_view()
+        if not pts:
+            return None
+        idx = bisect.bisect_left(cum, q * cum[-1] - 1e-12)
+        if idx >= len(pts):
+            return pts[-1][0]
+        return pts[idx][0]
+
+
+class _WindowAcc:
+    """One finish-time window's incremental accumulators."""
+
+    __slots__ = ("finished", "slo_total", "slo_met", "sketch")
+
+    def __init__(self, max_points: int):
+        self.finished = 0
+        self.slo_total = 0
+        self.slo_met = 0
+        self.sketch = QuantileSketch(max_points)
+
+
+class StreamMetrics:
+    """Incremental replacement for the per-workflow stats dict.
+
+    Feed each finished workflow's ``WorkflowStats`` (duck-typed: any
+    object with ``weight`` / ``deadline`` / ``met_deadline`` /
+    ``slowdown`` / ``tasks`` / ``finish``) through
+    :meth:`observe_workflow`; query the same steady-state surface
+    ``RunResult`` exposes.  The sliding-window width is fixed at
+    construction (``RunConfig.slo_window``) — summary mode cannot
+    re-bucket after the fact, that is the memory trade."""
+
+    def __init__(self, window: float = 900.0, max_points: int = 512):
+        if window <= 0:
+            raise ValueError("window must be > 0")
+        self.window = window
+        self.max_points = max_points
+        self.workflows = 0
+        self.slo_total = 0
+        self.slo_met = 0
+        self._ws_num = 0.0
+        self._ws_den = 0.0
+        self.sketch = QuantileSketch(max_points)
+        self._windows: dict[int, _WindowAcc] = {}
+        #: memoized ``window_stats`` list, dropped on the next observation
+        #: — repeated queries stay O(1) even with thousands of windows
+        self._window_view: "list[dict] | None" = None
+
+    def observe_workflow(self, w) -> None:
+        """Fold one workflow's final stats in (call once per workflow)."""
+        self.workflows += 1
+        self._window_view = None
+        met = None
+        if w.deadline is not None:
+            met = w.met_deadline
+            self.slo_total += 1
+            if met:
+                self.slo_met += 1
+        sd = w.slowdown
+        if sd is not None:
+            self._ws_num += w.weight * sd
+            self._ws_den += w.weight
+            if w.weight > 0:
+                self.sketch.add(sd, w.weight)
+        if w.tasks <= 0:
+            return  # never started — window_stats skips those too
+        acc = self._windows.get(int(w.finish // self.window))
+        if acc is None:
+            acc = self._windows[int(w.finish // self.window)] = \
+                _WindowAcc(self.max_points)
+        acc.finished += 1
+        if w.deadline is not None:
+            acc.slo_total += 1
+            if met:
+                acc.slo_met += 1
+        if sd is not None and w.weight > 0:
+            acc.sketch.add(sd, w.weight)
+
+    # -- the RunResult metric surface, O(1)-amortized -----------------------
+    def slo_attainment(self) -> "float | None":
+        if not self.slo_total:
+            return None
+        return self.slo_met / self.slo_total
+
+    def weighted_slowdown(self) -> "float | None":
+        if not self._ws_den:
+            return None
+        return self._ws_num / self._ws_den
+
+    def slowdown_percentile(self, q: float) -> "float | None":
+        return self.sketch.query(q)
+
+    def window_stats(self) -> "list[dict]":
+        if self._window_view is not None:
+            return self._window_view
+        out = []
+        for b in sorted(self._windows):
+            acc = self._windows[b]
+            out.append(dict(
+                t0=b * self.window, t1=(b + 1) * self.window,
+                finished=acc.finished,
+                slo_attainment=(acc.slo_met / acc.slo_total
+                                if acc.slo_total else None),
+                p50_slowdown=acc.sketch.query(0.50),
+                p99_slowdown=acc.sketch.query(0.99)))
+        self._window_view = out
+        return out

@@ -171,6 +171,20 @@ class MakespanPredictor:
         #: what keeps single-workflow aggregate runs bit-identical.
         self.workflow_of = dict(workflow_of or {})
         self._order = dag.topological_order()
+        #: sets retired by the engine (fully finished, set-level runs):
+        #: their residual / work / DP terms are exact zeros, so the
+        #: prediction loops skip them — see :meth:`retire`
+        self._retired: set[str] = set()
+        self._retired_pending = 0
+        #: ``_order`` minus (lazily-compacted) retired sets — what the
+        #: prediction loops walk, so per-prediction cost tracks the live
+        #: frontier instead of everything that ever arrived
+        self._live_order: list[str] = self._order
+        #: extend ``_order`` by appending arrivals instead of re-deriving
+        #: the whole topological order per ``add_sets`` (valid because
+        #: arrivals are dependency-disconnected); opt-in — the engine
+        #: enables it for throttled (``PredictOptions``) runs
+        self.incremental_order = False
         self._slots = {n: self._set_slots(dag.node(n)) for n in self._order}
         # resource classes the work bound may use: skip a class as soon as
         # any pool oversubscribes it (its capacity is then not a bound)
@@ -289,12 +303,45 @@ class MakespanPredictor:
         valid because an arriving workflow is dependency-disconnected
         from everything already in the graph."""
         self.workflow_of.update(workflow_of or {})
-        self._order = self.g.topological_order()
+        if self.incremental_order:
+            # arrivals are dependency-disconnected from every merged set,
+            # so appending keeps the order topologically valid — O(new)
+            # instead of re-deriving O(all) per arrival.  Opt-in (engine
+            # throttled runs): the re-derived order can interleave sets
+            # differently, and float summation order feeds the admission
+            # prices the committed streaming baseline pins.
+            if self._live_order is self._order:
+                # de-alias once so the in-place extends stay independent
+                self._live_order = list(self._order)
+            self._order.extend(names)
+            self._live_order.extend(names)
+        else:
+            self._order = self.g.topological_order()
+            self._live_order = (
+                [n for n in self._order if n not in self._retired]
+                if self._retired else self._order)
         for n in names:
             self._slots[n] = self._set_slots(self.g.node(n))
             self._related[n] = self._related_sets(n)
         self._batch_eqns = None
         self.invalidate()
+
+    def retire(self, name: str) -> None:
+        """Drop a fully-finished set from the prediction loops (the
+        engine calls this from ``complete`` on set-level runs).  Exact:
+        a finished set has zero pending and zero running tasks, so its
+        residual and work terms are exactly ``0.0`` and — set-level
+        dependencies meaning every ancestor of a finished set is
+        finished — its critical-path entry is too.  ``_live_order``
+        compacts lazily once half of it is retired, keeping retirement
+        O(1) amortized."""
+        self._retired.add(name)
+        self._residual_memo.pop(name, None)
+        self._retired_pending += 1
+        if self._retired_pending * 2 >= len(self._live_order):
+            self._live_order = [n for n in self._live_order
+                                if n not in self._retired]
+            self._retired_pending = 0
 
     # -- Eqns. 2-6 on live TXs ---------------------------------------------
     def live_model(self, tx: TxFn) -> tuple[float, float, float]:
@@ -431,8 +478,8 @@ class MakespanPredictor:
         #: workflow's sets cannot hold more GPUs than exist no matter how
         #: much rank-unexpanded pending demand they stack up
         per_wf: dict[str, int] = {}
-        for m in self._order:
-            if m in self._related[name]:
+        for m in self._live_order:
+            if m in self._retired or m in self._related[name]:
                 continue
             if not (pending.get(m, 0) or run_count.get(m, 0)):
                 continue
@@ -488,7 +535,12 @@ class MakespanPredictor:
         residual: dict[str, float] = {}
         cpu_work = gpu_work = 0.0
         held = gpu_held or {}
-        for n in self._order:
+        # the live frontier only (``retire``): a retired set's residual
+        # and work terms are exact zeros, and the DP below reads absent
+        # ancestors as 0.0 — bit-identical to walking the full order
+        for n in self._live_order:
+            if n in self._retired:
+                continue
             ts = self.g.node(n)
             t = tx(n)
             if hazard:
@@ -522,8 +574,11 @@ class MakespanPredictor:
 
         # longest residual dependency path (finished sets weigh 0)
         best: dict[str, float] = {}
-        for n in self._order:
-            base = max((best[p] for p in self.g.parents(n)), default=0.0)
+        for n in self._live_order:
+            if n in self._retired:
+                continue
+            base = max((best.get(p, 0.0) for p in self.g.parents(n)),
+                       default=0.0)
             best[n] = base + residual[n]
         remaining = max(best.values(), default=0.0)
 
@@ -539,7 +594,9 @@ class MakespanPredictor:
         # runs only — single-workflow snapshots keep the empty default)
         wf_fin: dict[str, float] = {}
         if self.workflow_of:
-            for n in self._order:
+            for n in self._live_order:
+                if n in self._retired:
+                    continue
                 if not (pending.get(n, 0) or run_count.get(n, 0)):
                     continue
                 wf = self.workflow_of.get(n)

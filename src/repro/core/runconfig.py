@@ -24,7 +24,7 @@ import warnings
 from ..runtime.fault import FaultOptions
 from .estimator import FeedbackOptions
 from .resources import ElasticOptions
-from .sched_engine import AdmissionOptions, SchedulingPolicy
+from .sched_engine import AdmissionOptions, PredictOptions, SchedulingPolicy
 
 __all__ = ["RunConfig", "resolve_run_config"]
 
@@ -59,6 +59,23 @@ class RunConfig:
     #: sliding-window width (modelled s) for ``RunResult.window_stats``
     #: consumers; recorded on the config for benchmarks to share
     slo_window: "float | None" = None
+    #: prediction-epoch throttling of ``SchedEngine.repredict``
+    #: (``PredictOptions``; None = re-evaluate on every scheduling pass).
+    #: Placement-neutral by construction — predictions inform the trace
+    #: and the mitigation arbiter's inputs are computed separately — so
+    #: throttling thins the prediction *trace* without moving a task.
+    predict: "PredictOptions | None" = None
+    #: drain all same-timestamp heap events (arrival batches, completion
+    #: bursts) into one scheduling pass + one repredict instead of N
+    coalesce_events: bool = False
+    #: "full" keeps the per-task ``TaskRecord`` trace and per-workflow
+    #: stats dict; "summary" (simulator-only) streams finished workflows
+    #: into bounded ``core/metrics.StreamMetrics`` sketches instead,
+    #: capping memory on million-task runs
+    record_policy: str = "full"
+    #: collect ``RunResult.perf`` hot-loop wall-time attribution
+    #: (pure-Python timers; zero overhead when False)
+    perf_counters: bool = False
 
 
 _warned = False

@@ -551,6 +551,37 @@ class _FitClass:
     nodes: "set[int] | None" = None
     #: names of the task sets with this footprint on this pool
     sets: list = dataclasses.field(default_factory=list)
+    #: the subset of ``sets`` currently parked in the engine's blocked
+    #: set — what an unfit -> fit transition actually has to wake, so
+    #: the unblock stays O(blocked-on-this-class) instead of re-scanning
+    #: every set the class ever held (``sets`` only ever grows)
+    blocked: set = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictOptions:
+    """Prediction-epoch throttling of :meth:`SchedEngine.repredict`
+    (``RunConfig.predict``).
+
+    By default the substrates re-evaluate the paper's Eqns. 2-6 on
+    nearly every heap event; at trace scale the prediction becomes the
+    hot loop.  These knobs gate re-evaluation on *material* state
+    change instead: ``dirty_only`` skips when the engine's prediction
+    stamp (the admission-pricing epoch plus every counter a prediction
+    input can move through — launches, migrations, speculations,
+    failures, recoveries, leases) is unchanged since the last evaluated
+    prediction, and ``min_interval`` adds a modelled-seconds floor
+    between evaluations.  A throttled call returns the last prediction
+    *without* appending to the trace.  Throttling is placement-neutral:
+    the trace is only read by result construction, the mitigation
+    arbiter prices from the estimator's statistics, and admission
+    pricing predicts through its own epoch cache — the invariant suite
+    pins dispatch-sequence identity across policies and pool modes."""
+
+    #: modelled-seconds floor between evaluated predictions (0 = none)
+    min_interval: float = 0.0
+    #: skip re-evaluation while the prediction stamp is unchanged
+    dirty_only: bool = True
 
 
 class SchedEngine:
@@ -580,7 +611,8 @@ class SchedEngine:
                  admission: "AdmissionOptions | None" = None,
                  faults: "FaultOptions | None" = None,
                  elastic: "ElasticOptions | None" = None,
-                 incremental: bool = True):
+                 incremental: bool = True,
+                 predict: "PredictOptions | None" = None):
         self.g = g
         self.alloc = as_allocation(pool)
         # -- fault tolerance (runtime/fault.py) ----------------------------
@@ -714,6 +746,29 @@ class SchedEngine:
             if feedback is not None or admission is not None
             or faults is not None else None)
         self.predictions: list[MakespanPrediction] = []
+        # -- prediction epochs (trace-scale hot loop) ----------------------
+        self.predict_opts = predict
+        #: launches so far — part of the prediction stamp (len(launched)
+        #: alone can stay equal across a simultaneous finish + start)
+        self._starts = 0
+        #: predictions actually evaluated (throttled/deduped calls excluded)
+        self._pred_evals = 0
+        self._last_pred_key: "tuple | None" = None
+        self._last_pred: "MakespanPrediction | None" = None
+        self._last_pred_now = float("-inf")
+        if (predict is not None and self.predictor is not None
+                and admission is None):
+            # throttled runs also stop re-deriving the whole topological
+            # order per arrival (arrivals are dependency-disconnected, so
+            # appending preserves topological validity).  NOT with
+            # admission control: the appended order changes the float
+            # summation order inside ``predictor.predict``, and admission
+            # *decisions* read those floats (``_admission_price``) — an
+            # ulp there could move a placement, which would break the
+            # throttle's placement-neutrality guarantee.  Without
+            # admission, predictor floats only reach the prediction
+            # trace, never a decision.
+            self.predictor.incremental_order = True
 
         # -- fault-tolerance state (all dormant when ``faults is None``) ---
         #: failure-site count for the empirical hazard estimate
@@ -788,6 +843,15 @@ class SchedEngine:
                     self._remaining[(name, i)] = cnt
 
         self.ready: dict[str, deque] = {n: deque() for n in order}
+        #: sets with tasks still outstanding (``_set_remaining > 0``) —
+        #: the iteration domain of every whole-state scan whose result is
+        #: order-independent (repredict pending maps, admission pricing,
+        #: elastic pressure); finished sets only ever contribute zeros
+        #: there, so scans stay proportional to the *live* frontier on
+        #: long streams instead of everything that ever arrived
+        self._live: set[str] = set(order)
+        #: finished sets not yet compacted out of ``_infos``/``priority``
+        self._retired_sets = 0
         self.launched: set[tuple[str, int]] = set()
         self.finished: set[tuple[str, int]] = set()
         self.pool_of: dict[tuple[str, int], int] = {}
@@ -916,6 +980,7 @@ class SchedEngine:
                 self._set_pools[m] = entries
         if self.predictor is not None:
             self.predictor.add_sets(names, {m: entry.name for m in names})
+        self._live.update(names)
         self._adm_epoch += 1
         self._now = max(self._now, now)
         return names
@@ -1007,8 +1072,9 @@ class SchedEngine:
         for ent in self._classes[k].values():
             if ns.fits(ent.need_c, ent.need_g):
                 if node not in ent.nodes:
-                    if not ent.nodes and self._blocked:
-                        self._blocked.difference_update(ent.sets)
+                    if not ent.nodes and ent.blocked:
+                        self._blocked.difference_update(ent.blocked)
+                        ent.blocked.clear()
                     ent.nodes.add(node)
                     ent.fits = True
             elif node in ent.nodes:
@@ -1024,8 +1090,9 @@ class SchedEngine:
         for ent in self._classes[k].values():
             if not ent.fits and ent.need_c <= fc and ent.need_g <= fg:
                 ent.fits = True
-                if self._blocked:
-                    self._blocked.difference_update(ent.sets)
+                if ent.blocked:
+                    self._blocked.difference_update(ent.blocked)
+                    ent.blocked.clear()
 
     def _mark_blocked(self, name: str) -> None:
         """Record that set ``name`` found no candidate pool: sync its
@@ -1036,6 +1103,7 @@ class SchedEngine:
             if ent.nodes is None:
                 ent.fits = (ent.need_c <= self.free_cpus[k]
                             and ent.need_g <= self.free_gpus[k])
+            ent.blocked.add(name)
         self._blocked.add(name)
 
     def _spread_choose(self, k: int, need_c: int, need_g: int,
@@ -1181,7 +1249,7 @@ class SchedEngine:
                 >= opts.max_lease_nodes:
             return False
         queued_c = queued_g = tasks = 0
-        for n in self.order:
+        for n in self._live:
             q = self.ready[n]
             if not q or not self._dispatchable(n):
                 continue
@@ -1306,8 +1374,9 @@ class SchedEngine:
                        (-ns.free_gpus, -ns.free_cpus, node, 0))
         for ent in self._classes[k].values():
             if ns.fits(ent.need_c, ent.need_g):
-                if not ent.nodes and self._blocked:
-                    self._blocked.difference_update(ent.sets)
+                if not ent.nodes and ent.blocked:
+                    self._blocked.difference_update(ent.blocked)
+                    ent.blocked.clear()
                 ent.nodes.add(node)
                 ent.fits = True
 
@@ -1737,7 +1806,7 @@ class SchedEngine:
         # *dispatchable* work counts: admission-deferred sets are held
         # back ahead of migrating running tasks, so their queues are free
         pressure = any(self.ready[n] and self._dispatchable(n)
-                       for n in self.order)
+                       for n in self._live)
         d_mig = (pred.mitigation_delta(self.tx_estimate(name, pool=mig[0]),
                                        mig[1], base)
                  if mig is not None else None)
@@ -1911,7 +1980,7 @@ class SchedEngine:
         possible placement (full-capacity fit on a surviving node / pool)
         if (pool k, node) went down?  A failure that strands work is
         refused — failed must never become lost."""
-        for n in self.order:
+        for n in self._live:
             if self._set_remaining[n] <= 0:
                 continue
             ts = self.g.node(n)
@@ -2177,6 +2246,20 @@ class SchedEngine:
         return dst, cost
 
     # -- online makespan re-prediction (core/predictor.py) ------------------
+    def predict_stamp(self) -> tuple:
+        """Monotonic fingerprint of every engine-side input a prediction
+        can move through: the admission epoch (completions, TX
+        observations, arrivals, admissions, leases) plus the counters it
+        does not cover (launches change ``running``/``gpu_held``;
+        migrations/speculations/failures/recoveries move placements and
+        the hazard estimate).  An unchanged stamp at an unchanged clock
+        means :meth:`repredict` would recompute the same snapshot."""
+        return (self._adm_epoch, self._starts, self.migrations,
+                self.speculations, self.node_failures, self.task_failures,
+                self.replications, self.recoveries_restart,
+                self.recoveries_rerun, self.leases_granted,
+                self.leases_expired)
+
     def repredict(self, now: float,
                   running: "dict[tuple[str, int], float]"
                   ) -> "MakespanPrediction | None":
@@ -2184,16 +2267,49 @@ class SchedEngine:
         estimates and the current progress; appends to (and returns the
         newest entry of) ``self.predictions``.  ``running`` maps (set,
         index) -> start time on the caller's clock, exactly as for
-        :meth:`stragglers`."""
+        :meth:`stragglers`.
+
+        Two fast paths guard the evaluation.  *Dedupe* (always on): a
+        call at the same clock (event ``now`` and scheduling-pass
+        ``_now`` — the hazard estimate reads the latter) with an
+        unchanged :meth:`predict_stamp` would recompute the identical
+        snapshot, so the previous prediction object is re-appended — the
+        trace keeps its length and values bit-identical while the
+        recomputation is skipped (the back-to-back same-timestamp pass
+        the substrates' event loops otherwise pay twice).  *Throttle*
+        (``PredictOptions``): skips the evaluation entirely — nothing is
+        appended and the last prediction is returned — while the stamp
+        is clean (``dirty_only``) or the modelled-seconds floor
+        (``min_interval``) has not elapsed; the first call always
+        evaluates."""
         if self.predictor is None:
             return None
+        stamp = self.predict_stamp()
+        # the scheduling-pass clock ``_now`` reaches the prediction only
+        # through the hazard estimate, which is dead without faults — so
+        # it only disambiguates the key on fault runs (otherwise a
+        # same-instant sentinel pair, e.g. arrival + watchdog, would
+        # never dedupe: the pass between them moves ``_now``)
+        key = (now, self._now if self.faults is not None else 0.0, stamp)
+        last_key = self._last_pred_key
+        opts = self.predict_opts
+        if opts is not None and last_key is not None:
+            if opts.dirty_only and stamp == last_key[2]:
+                return self._last_pred
+            if now - self._last_pred_now < opts.min_interval:
+                return self._last_pred
+        if last_key is not None and last_key == key:
+            self.predictions.append(self._last_pred)
+            return self._last_pred
         elapsed = {k: now - start for k, start in running.items()
                    if k not in self.finished}
         run_per_set: dict[str, int] = {}
         for (n, _i) in elapsed:
             run_per_set[n] = run_per_set.get(n, 0) + 1
+        # the live frontier only: finished sets contribute exact zeros to
+        # every term the predictor derives from ``pending``
         pending = {n: max(0, self._set_remaining[n] - run_per_set.get(n, 0))
-                   for n in self.order}
+                   for n in self._live}
         # live GPU holdings per set (speculative duplicates included):
         # what the node-level occupancy accounting actually charged, so
         # the contention term prices the GPUs concurrent sets truly hold
@@ -2219,12 +2335,16 @@ class SchedEngine:
             # per-workflow Eqn. 2-5 snapshots for the prediction trace —
             # batched through BatchEqns once enough workflows are in
             # flight for the one-matrix evaluation to beat scalar loops
-            wfs = {self.workflow_of[n] for n in self.order
+            wfs = {self.workflow_of[n] for n in self._live
                    if self._set_remaining[n] > 0 and n in self.workflow_of}
             if len(wfs) >= 4:
                 p = dataclasses.replace(
                     p, wf_models=self.predictor.workflow_models(
                         self.tx_estimate, wfs))
+        self._last_pred_key = key
+        self._last_pred = p
+        self._last_pred_now = now
+        self._pred_evals += 1
         self.predictions.append(p)
         return p
 
@@ -2430,10 +2550,10 @@ class SchedEngine:
         wf = self.workflow_of.get(name)
         active = {self.workflow_of.get(m) for m in self.admitted
                   if self._set_remaining[m] > 0}
-        base_pending = {m: self._set_remaining[m] for m in self.order
+        base_pending = {m: self._set_remaining[m] for m in self._live
                         if self._set_remaining[m] > 0
                         and self.workflow_of.get(m) in active}
-        cand_pending = {m: self._set_remaining[m] for m in self.order
+        cand_pending = {m: self._set_remaining[m] for m in self._live
                         if self._set_remaining[m] > 0
                         and self.workflow_of.get(m) == wf}
         with_pending = dict(base_pending)
@@ -2624,6 +2744,7 @@ class SchedEngine:
                 self.node_of[(name, i)] = (node_alloc[0]
                                            if node_alloc is not None else -1)
                 self.launched.add((name, i))
+                self._starts += 1
                 self.pool_of[(name, i)] = k
                 wf = self.workflow_of.get(name)
                 if wf is not None:
@@ -2685,6 +2806,27 @@ class SchedEngine:
         self._n_done += 1
         self._set_remaining[name] -= 1
         self._adm_epoch += 1  # set remainders are admission-pricing inputs
+        if self._set_remaining[name] == 0:
+            # the set is drained: drop it from every live-frontier scan.
+            # Set-level retirement in the predictor is exact (a finished
+            # set's residual, work and DP contributions are all 0.0, and
+            # every ancestor of a finished set is finished — task-level
+            # children can outrun parents, so that mode keeps the full
+            # order).  The policy walk compacts lazily once half of
+            # ``_infos`` is retired: a stable re-sort of the live subset
+            # equals the live subsequence of the full sort, so pruning
+            # never reorders dispatch.
+            self._live.discard(name)
+            if self.predictor is not None and not self.task_level:
+                self.predictor.retire(name)
+            if self.incremental:
+                self._retired_sets += 1
+                if self._retired_sets * 2 >= len(self._infos):
+                    self._infos = [si for si in self._infos
+                                   if self._set_remaining[si.name] > 0]
+                    self.priority = [n for n in self.priority
+                                     if self._set_remaining[n] > 0]
+                    self._retired_sets = 0
         if self.task_level:
             for (cn, ci) in self._child_waiters.get((name, i), ()):
                 self._remaining[(cn, ci)] -= 1

@@ -44,16 +44,19 @@ import dataclasses
 import heapq
 import math
 import random
+import time
 from typing import Literal, Sequence
 
 from .dag import DAG, TaskSet
 from .estimator import FeedbackOptions
+from .metrics import StreamMetrics
 from .resources import Allocation, PoolSpec, as_allocation
-from .results import RunResult, TaskRecord, per_pool_task_counts  # noqa: F401
+from .results import (PerfCounters, RunResult, TaskRecord,  # noqa: F401
+                      per_pool_task_counts)
 from .runconfig import _LEGACY, RunConfig, resolve_run_config
 from .sched_engine import AdmissionOptions, SchedEngine, SchedulingPolicy
 from .stream import WorkflowStream, prefix_view
-from .workflow import Campaign, CampaignView, campaign_stats
+from .workflow import Campaign, CampaignView, WorkflowStats, campaign_stats
 from ..runtime.fault import FailureSchedule, FaultOptions
 
 Mode = Literal["async", "sequential"]
@@ -190,6 +193,12 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
     feedback = cfg.feedback
     admission = cfg.admission
     faults = cfg.faults
+    if cfg.record_policy not in ("full", "summary"):
+        raise ValueError(f"unknown record_policy {cfg.record_policy!r}; "
+                         f"known: 'full', 'summary'")
+    summary = cfg.record_policy == "summary"
+    coalesce = cfg.coalesce_events
+    perf = PerfCounters() if cfg.perf_counters else None
 
     rng = random.Random(options.seed)
     stream: "WorkflowStream | None" = None
@@ -239,7 +248,7 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
     engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
                          feedback=feedback, campaign=view,
                          admission=admission, faults=faults,
-                         elastic=cfg.elastic)
+                         elastic=cfg.elastic, predict=cfg.predict)
     faults = engine.faults  # disabled options normalized to None
     schedule = (FailureSchedule(faults,
                                 [(k, p.num_nodes)
@@ -301,6 +310,51 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
     #: _TASKFAIL time (re-pushed instead of a completion on gen bumps)
     fail_at: dict[tuple[str, int], float] = {}
 
+    # ---- streaming-summary state (record_policy="summary") ---------------
+    # instead of growing ``records`` one TaskRecord per task, fold each
+    # completion into scalar accumulators and each finished workflow into
+    # bounded StreamMetrics sketches the moment its last task completes —
+    # the ``campaign_stats`` fold, computed online
+    metrics = (StreamMetrics(window=cfg.slo_window or 900.0)
+               if summary else None)
+    n_records = 0
+    makespan_acc = 0.0
+    cpu_area_acc = gpu_area_acc = 0.0
+    #: workflow -> [min start, max end, completed count] (in-flight only)
+    wf_agg: dict[str, list] = {}
+    #: workflow -> its WorkflowEntry, dropped once folded into metrics
+    wf_entry: dict = {}
+    #: workflow -> total task count (fold trigger)
+    wf_expected: dict[str, int] = {}
+    #: per-set durations feed only the legacy mitigation scan — skip the
+    #: O(#tasks) growth on summary runs that don't use it
+    track_durations = not summary or options.mitigate_stragglers
+
+    def note_entries(entries) -> None:
+        for w in entries:
+            wf_entry[w.name] = w
+            wf_expected[w.name] = sum(ts.num_tasks
+                                      for ts in w.dag.nodes.values())
+
+    if summary and view is not None:
+        note_entries(view.entries)
+
+    def emit_workflow(wf: str) -> None:
+        """Fold one workflow's final stats into the streaming sketches
+        (exactly the values ``campaign_stats`` would compute for it)."""
+        w = wf_entry.pop(wf)
+        a = wf_agg.pop(wf, None)
+        t0 = time.perf_counter() if perf is not None else 0.0
+        metrics.observe_workflow(WorkflowStats(
+            name=w.name, arrival=w.arrival,
+            start=a[0] if a else w.arrival,
+            finish=a[1] if a else w.arrival,
+            tasks=a[2] if a else 0,
+            priority=w.priority, weight=w.weight, deadline=w.deadline,
+            reference_makespan=w.reference_makespan))
+        if perf is not None:
+            perf.metrics_s += time.perf_counter() - t0
+
     def try_start() -> None:
         nonlocal seq
         for name, i, pool_k in engine.startable(now):
@@ -359,14 +413,37 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
         start = first_start.pop((name, i), attempt_start)
         end_of.pop((name, i), None)
         spec_end.pop((name, i), None)
-        records.append(TaskRecord(name, i, start, now,
-                                  ts.cpus_per_task, ts.gpus_per_task,
-                                  duplicate=won_by_dup,
-                                  pool=engine.pool_name(k),
-                                  migrated=(name, i) in mig_tasks,
-                                  node=node,
-                                  workflow=wf_of.get(name, "")))
-        set_durations.setdefault(name, []).append(now - attempt_start)
+        if summary:
+            nonlocal n_records, makespan_acc, cpu_area_acc, gpu_area_acc
+            n_records += 1
+            if now > makespan_acc:
+                makespan_acc = now
+            dur = now - start
+            cpu_area_acc += dur * ts.cpus_per_task
+            gpu_area_acc += dur * ts.gpus_per_task
+            wf = wf_of.get(name, "")
+            if wf:
+                a = wf_agg.get(wf)
+                if a is None:
+                    a = wf_agg[wf] = [start, now, 0]
+                else:
+                    if start < a[0]:
+                        a[0] = start
+                    if now > a[1]:
+                        a[1] = now
+                a[2] += 1
+                if a[2] == wf_expected[wf]:
+                    emit_workflow(wf)
+        else:
+            records.append(TaskRecord(name, i, start, now,
+                                      ts.cpus_per_task, ts.gpus_per_task,
+                                      duplicate=won_by_dup,
+                                      pool=engine.pool_name(k),
+                                      migrated=(name, i) in mig_tasks,
+                                      node=node,
+                                      workflow=wf_of.get(name, "")))
+        if track_durations:
+            set_durations.setdefault(name, []).append(now - attempt_start)
         engine.observe(name, now - attempt_start, pool=k)
 
     def mitigate_scan() -> None:
@@ -494,6 +571,55 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
             seq += 1
             watchdog_pending = True
 
+    # ---- hot-loop attribution (RunConfig.perf_counters) ------------------
+    # rebind the pass entry points through timers; Python resolves the
+    # closure names at call time, so every call site below is covered.
+    # With perf off the originals run unwrapped — zero added cost.
+    repredict = engine.repredict
+    if perf is not None:
+        def repredict(t, r, _rp=engine.repredict):
+            t0 = time.perf_counter()
+            out = _rp(t, r)
+            perf.predict_s += time.perf_counter() - t0
+            return out
+
+        def try_start(_ts=try_start):
+            t0 = time.perf_counter()
+            _ts()
+            perf.engine_s += time.perf_counter() - t0
+            perf.passes += 1
+
+    # ---- coalesced event passes (RunConfig.coalesce_events) --------------
+    # every event branch ends in the same epilogue: an optional repredict
+    # plus one try_start/schedule_scan pass.  ``tail`` runs it inline by
+    # default (bit-identical to the historical per-event passes); under
+    # coalescing it only raises flags, and ``flush`` runs ONE combined
+    # epilogue once the heap's next event is strictly later — arrival
+    # batches and completion bursts at one timestamp collapse into a
+    # single scheduling pass + a single repredict instead of N.
+    pred_due = False
+    pass_due = False
+
+    def tail(pred: bool) -> None:
+        nonlocal pred_due, pass_due
+        if coalesce:
+            pred_due = pred_due or pred
+            pass_due = True
+            return
+        if pred:
+            repredict(now, running)
+        try_start()
+        schedule_scan()
+
+    def flush() -> None:
+        nonlocal pred_due, pass_due
+        if pred_due:
+            repredict(now, running)
+        if pass_due:
+            try_start()
+            schedule_scan()
+        pred_due = pass_due = False
+
     # campaign arrivals: a dispatch pass must run when a workflow arrives
     # (its sets become eligible), even with nothing completing right then
     if view is not None:
@@ -514,48 +640,57 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
                                 _ELASTIC, -1, False, 0))
         seq += 1
 
+    t_loop0 = time.perf_counter()
     try_start()
     schedule_scan()
     push_next_failure()
-    engine.repredict(now, running)   # prior-based prediction at t = 0
+    repredict(now, running)   # prior-based prediction at t = 0
     event_count = 0
-    while events:
+    while True:
+        if not events:
+            # a deferred flush may launch work (and so push new events)
+            if pred_due or pass_due:
+                flush()
+                if events:
+                    continue
+            break
+        if (pred_due or pass_due) and events[0][0] > now:
+            flush()  # timestamp batch drained: one combined epilogue
+            continue
         now_, sq, name, i, dup, g_ = heapq.heappop(events)
         now = now_
+        if perf is not None:
+            perf.events += 1
         if name is _WATCHDOG:
             watchdog_pending = False
             if migrating:
                 mitigate_scan()
             if replicating:
                 replicate_scan()
-            engine.repredict(now, running)
-            try_start()
-            schedule_scan()
+            tail(True)
             continue
         if name is _ARRIVAL:
-            engine.repredict(now, running)  # the new workflow is visible
-            try_start()
-            schedule_scan()
+            tail(True)  # the new workflow is visible
             continue
         if name is _STREAM:
             new_names: list[str] = []
+            new_entries: list = []
             for w in stream.take_until(now):
                 arrived_entries.append(w)
+                new_entries.append(w)
                 new_names.extend(engine.add_workflow(w, now=now))
             sample_durations(new_names)
+            if summary:
+                note_entries(new_entries)
             nxt = stream.next_arrival()
             if nxt is not None:
                 heapq.heappush(events, (nxt, seq, _STREAM, -1, False, 0))
                 seq += 1
-            engine.repredict(now, running)  # the arrivals are visible
-            try_start()
-            schedule_scan()
+            tail(True)  # the arrivals are visible
             continue
         if name is _ELASTIC:
             if engine.elastic_pass(now):
-                engine.repredict(now, running)  # capacity changed
-                try_start()
-                schedule_scan()
+                tail(True)  # capacity changed
             if (not engine.done()
                     or (stream is not None
                         and stream.next_arrival() is not None)):
@@ -576,16 +711,13 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
                             events, (now + faults.node_recovery_time,
                                      seq, _RECOVER, -1, False, 0))
                         seq += 1
-                    engine.repredict(now, running)
-                    try_start()
-                    schedule_scan()
+                    tail(True)
             push_next_failure()
             continue
         if name is _RECOVER:
             rk, rn = payload.pop(sq)
             if engine.recover_node(rk, rn, now=now):
-                try_start()
-                schedule_scan()
+                tail(False)
             continue
         if name is _TASKFAIL:
             tn, ti, g0 = payload.pop(sq)
@@ -596,9 +728,7 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
                                   elapsed=now - running.get((tn, ti), now))
             if ev is not None:
                 apply_failure_event(ev)
-                engine.repredict(now, running)
-                try_start()
-                schedule_scan()
+                tail(True)
             continue
         if (name, i) in engine.finished:
             continue  # a duplicate already finished this task
@@ -638,17 +768,30 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
         # O(running); amortise them on big workloads (every 16
         # completions) — the periodic watchdog above covers the gaps.
         scan_every = 16 if engine.tasks_total >= 1024 else 1
-        if event_count % scan_every == 0:
-            if migrating:
-                mitigate_scan()
-            engine.repredict(now, running)
-        try_start()
-        schedule_scan()
+        due = event_count % scan_every == 0
+        if due and migrating:
+            mitigate_scan()
+        tail(due)
 
-    makespan = max((r.end for r in records), default=0.0)
-    cpu_area = sum(r.duration * r.cpus for r in records)
-    gpu_area = sum(r.duration * r.gpus for r in records)
-    if stream is not None:
+    if perf is not None:
+        perf.total_s = time.perf_counter() - t_loop0
+        perf.events_s = max(0.0, perf.total_s - perf.engine_s
+                            - perf.predict_s - perf.metrics_s)
+        perf.predicts = engine._pred_evals
+    if summary:
+        # flush workflows still in flight (or never started) with the
+        # same defaults campaign_stats applies, in a deterministic order
+        for wf in sorted(wf_entry):
+            emit_workflow(wf)
+        makespan = makespan_acc
+        cpu_area, gpu_area = cpu_area_acc, gpu_area_acc
+        n_total = n_records
+    else:
+        makespan = max((r.end for r in records), default=0.0)
+        cpu_area = sum(r.duration * r.cpus for r in records)
+        gpu_area = sum(r.duration * r.gpus for r in records)
+        n_total = len(records)
+    if stream is not None and not summary:
         # final per-workflow stats span everything that arrived (the
         # re-merged view names sets exactly as add_workflow did)
         view = prefix_view(arrived_entries, stream.name)
@@ -662,14 +805,16 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
                          if makespan and total.cpus else 0.0),
         gpu_utilization=(gpu_area / (total.gpus * makespan)
                          if makespan and total.gpus else 0.0),
-        tasks_total=len(records),
+        tasks_total=n_total,
         duplicates=duplicates,
         policy=engine.policy.name,
         migrations=engine.migrations,
         speculations=engine.speculations,
         predictions=engine.predictions,
         workflows=(campaign_stats(view, records)
-                   if view is not None else None),
+                   if view is not None and not summary else None),
+        metrics=metrics,
+        perf=perf,
         admission_deferrals=engine.admission_deferrals,
         node_failures=engine.node_failures,
         task_failures=engine.task_failures,

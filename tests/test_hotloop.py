@@ -1,0 +1,346 @@
+"""Trace-scale hot loop: prediction epochs, coalesced event passes,
+streaming-summary record policy, and perf attribution.
+
+The contracts locked down here:
+
+- ``SchedEngine.repredict`` dedupes back-to-back calls at an identical
+  clock + state (trace length and values preserved, evaluation skipped)
+  and ``PredictOptions`` throttling *thins* the trace without ever
+  moving a placement (seeded port of the hypothesis invariant, so it
+  runs in tier-1 even without hypothesis installed);
+- ``coalesce_events=True`` drains same-timestamp heap batches into one
+  scheduling pass and is bit-identical on collision-free streams;
+- ``record_policy="summary"`` reproduces the full-trace metric surface
+  from bounded sketches (SLO attainment and percentiles exact below
+  sketch capacity);
+- ``perf_counters=True`` fills ``RunResult.perf``; off costs nothing
+  and leaves it None.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (AdmissionOptions, DAG, ElasticOptions,
+                        FeedbackOptions, GeneratedStream, MakespanPredictor,
+                        NodeSpec, PoolSpec, PredictOptions, RealExecutor,
+                        RunConfig, SchedEngine, SimOptions, StreamTemplate,
+                        TaskSet, simulate)
+
+
+def two_stage(n_sim=3, tx=40.0, sigma=0.0):
+    g = DAG()
+    g.add(TaskSet("sim", n_sim, 2, 0, tx, tx_sigma=sigma))
+    g.add(TaskSet("train", 1, 2, 1, tx, tx_sigma=sigma))
+    g.add_edge("sim", "train")
+    return g
+
+
+def node_pool(num_nodes=4):
+    return PoolSpec("p", num_nodes, NodeSpec(cpus=32, gpus=4),
+                    node_level=True)
+
+
+def agg_pool(cpus=64, gpus=8):
+    return PoolSpec("agg", 1, NodeSpec(cpus=cpus, gpus=gpus))
+
+
+def open_stream(seed=0, rate=1 / 60.0, horizon=900.0, sigma=0.0, **kw):
+    tmpl = StreamTemplate("inf", lambda: two_stage(sigma=sigma),
+                          deadline_slack=500.0, reference_makespan=130.0)
+    return GeneratedStream([tmpl], rate=rate, horizon=horizon, seed=seed,
+                           **kw)
+
+
+def record_key(r):
+    return (r.set_name, r.index, r.start, r.end, r.pool, r.node,
+            r.workflow, r.duplicate, r.migrated)
+
+
+# ---------------------------------------------------------------------------
+# repredict dedupe (engine level) + call-count spy
+# ---------------------------------------------------------------------------
+
+def predict_spy(monkeypatch):
+    calls = {"n": 0}
+    orig = MakespanPredictor.predict
+
+    def spy(self, *a, **k):
+        calls["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(MakespanPredictor, "predict", spy)
+    return calls
+
+
+def test_repredict_dedupes_identical_instant(monkeypatch):
+    calls = predict_spy(monkeypatch)
+    eng = SchedEngine(two_stage(), node_pool(), feedback=FeedbackOptions())
+    eng.startable(0.0)
+    before = calls["n"]
+    p1 = eng.repredict(10.0, {})
+    p2 = eng.repredict(10.0, {})  # same clock, same state: no re-eval
+    assert calls["n"] == before + 1
+    assert p2 is p1
+    # ... but the trace keeps both entries (length and values identical
+    # to the pre-dedupe behaviour)
+    assert eng.predictions[-2:] == [p1, p1]
+    # any state movement re-evaluates, even at the same clock
+    eng.complete("sim", 0)
+    p3 = eng.repredict(10.0, {})
+    assert calls["n"] == before + 2 and p3 is not p1
+    # a later clock with untouched state re-evaluates too (dedupe only
+    # guards the identical instant; time itself moves the model)
+    eng.repredict(50.0, {})
+    assert calls["n"] == before + 3
+
+
+def test_simulator_dedupes_same_timestamp_passes(monkeypatch):
+    """Watchdog + campaign-arrival sentinels colliding on one timestamp
+    used to trigger two full predictor evaluations; the dedupe guard
+    collapses them (trace length unchanged — strictly fewer evaluations
+    than trace entries proves the guard fired)."""
+    calls = predict_spy(monkeypatch)
+    from repro.core import Campaign
+    c = Campaign(name="c")
+    # w0's sim wave saturates the node (16 x 2 cpus), so w1's arrival at
+    # t=100 — the same instant as the watchdog — can launch nothing: the
+    # two sentinels hit repredict with an identical clock and stamp
+    c.add("w0", two_stage(16, tx=150.0), arrival=0.0)
+    c.add("w1", two_stage(16, tx=150.0), arrival=100.0)
+    r = simulate(c, node_pool(1), "async",
+                 options=SimOptions(seed=0, sample_tx=False,
+                                    launch_latency=0.0),
+                 config=RunConfig(feedback=FeedbackOptions(
+                     speculate=True, watchdog_interval=100.0)))
+    assert r.tasks_total == 34
+    assert calls["n"] < len(r.predictions)
+
+
+# ---------------------------------------------------------------------------
+# PredictOptions throttle semantics (engine level)
+# ---------------------------------------------------------------------------
+
+def test_throttle_min_interval_and_dirty_gating(monkeypatch):
+    calls = predict_spy(monkeypatch)
+    eng = SchedEngine(two_stage(), node_pool(), feedback=FeedbackOptions(),
+                      predict=PredictOptions(min_interval=100.0))
+    p1 = eng.repredict(0.0, {})  # first call always evaluates
+    assert calls["n"] == 1 and len(eng.predictions) == 1
+    eng.startable(0.0)  # dirties the stamp
+    p2 = eng.repredict(50.0, {})  # dirty, but inside min_interval
+    assert p2 is p1 and calls["n"] == 1
+    assert len(eng.predictions) == 1  # throttled: nothing appended
+    p3 = eng.repredict(150.0, {})  # dirty and interval elapsed
+    assert p3 is not p1 and calls["n"] == 2 and len(eng.predictions) == 2
+    p4 = eng.repredict(400.0, {})  # clean stamp: dirty_only holds it
+    assert p4 is p3 and calls["n"] == 2 and len(eng.predictions) == 2
+    eng.complete("sim", 0)
+    p5 = eng.repredict(500.0, {})  # dirty again, interval elapsed
+    assert p5 is not p3 and calls["n"] == 3
+
+
+def test_throttle_dirty_only_off_reevaluates_on_interval():
+    eng = SchedEngine(two_stage(), node_pool(), feedback=FeedbackOptions(),
+                      predict=PredictOptions(min_interval=100.0,
+                                             dirty_only=False))
+    p1 = eng.repredict(0.0, {})
+    p2 = eng.repredict(250.0, {})  # clean state, but interval elapsed
+    assert p2 is not p1 and len(eng.predictions) == 2
+
+
+# ---------------------------------------------------------------------------
+# placement neutrality (seeded port of the hypothesis invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("node_level", [False, True])
+@pytest.mark.parametrize("policy", ["fifo", "lpt", "gpu_bestfit",
+                                    "priority"])
+def test_throttle_is_placement_neutral(policy, node_level):
+    st = open_stream(seed=3, sigma=6.0)
+    pool = node_pool() if node_level else agg_pool()
+    fb = FeedbackOptions(migrate=False)
+    base = simulate(st, pool, options=SimOptions(seed=1),
+                    config=RunConfig(scheduling=policy, feedback=fb))
+    thr = simulate(st, pool, options=SimOptions(seed=1),
+                   config=RunConfig(scheduling=policy, feedback=fb,
+                                    predict=PredictOptions(
+                                        min_interval=200.0)))
+    assert [record_key(r) for r in thr.records] \
+        == [record_key(r) for r in base.records]
+    assert thr.makespan == base.makespan
+    assert thr.workflows == base.workflows
+    # the whole point: the throttled trace is actually thinner
+    assert len(thr.predictions) < len(base.predictions)
+
+
+def test_throttle_neutral_under_admission_and_elastic():
+    st = open_stream(seed=5, rate=1 / 45.0)
+    cfg = RunConfig(admission=AdmissionOptions(deadline_aware=True),
+                    feedback=FeedbackOptions(migrate=False),
+                    elastic=ElasticOptions(max_lease_nodes=2,
+                                           lease_term=300.0,
+                                           grow_threshold=1.0,
+                                           check_interval=60.0))
+    base = simulate(st, node_pool(2), options=SimOptions(seed=2), config=cfg)
+    thr = simulate(st, node_pool(2), options=SimOptions(seed=2),
+                   config=dataclasses.replace(
+                       cfg, predict=PredictOptions(min_interval=150.0)))
+    assert thr.records == base.records
+    assert thr.makespan == base.makespan
+    assert (thr.leases_granted, thr.leases_expired) \
+        == (base.leases_granted, base.leases_expired)
+    assert thr.stream == base.stream
+
+
+# ---------------------------------------------------------------------------
+# coalesced event passes
+# ---------------------------------------------------------------------------
+
+def test_coalesce_bit_identical_on_continuous_stream():
+    """Sampled (continuous) durations: same-timestamp collisions are
+    measure-zero, so draining per-timestamp batches in one pass must
+    reproduce the per-event dispatch sequence bit for bit."""
+    st = open_stream(seed=7, sigma=8.0)
+    for coalesce_cfg in (
+            RunConfig(admission=AdmissionOptions(),
+                      feedback=FeedbackOptions(migrate=False)),
+            RunConfig()):
+        base = simulate(st, node_pool(), options=SimOptions(seed=3),
+                        config=coalesce_cfg)
+        co = simulate(st, node_pool(), options=SimOptions(seed=3),
+                      config=dataclasses.replace(coalesce_cfg,
+                                                 coalesce_events=True))
+        assert co.records == base.records
+        assert co.makespan == base.makespan
+        assert co.workflows == base.workflows
+        assert co.stream == base.stream
+
+
+def test_coalesce_conserves_under_timestamp_collisions():
+    """Deterministic durations make completion bursts genuinely
+    simultaneous — the coalesced pass may legitimately reorder intra-batch
+    dispatch, but conservation and totals must hold."""
+    st = open_stream(seed=9, sigma=0.0, rate=1 / 40.0)
+    base = simulate(st, node_pool(), options=SimOptions(seed=0),
+                    config=RunConfig(admission=AdmissionOptions()))
+    co = simulate(st, node_pool(), options=SimOptions(seed=0),
+                  config=RunConfig(admission=AdmissionOptions(),
+                                   coalesce_events=True))
+    assert co.stream["finished"] == co.stream["arrived"] \
+        == base.stream["arrived"]
+    assert co.tasks_total == base.tasks_total
+    assert {(r.workflow, r.set_name, r.index) for r in co.records} \
+        == {(r.workflow, r.set_name, r.index) for r in base.records}
+
+
+# ---------------------------------------------------------------------------
+# record_policy="summary"
+# ---------------------------------------------------------------------------
+
+def test_summary_mode_reproduces_full_metric_surface():
+    st = open_stream(seed=11)
+    cfg = RunConfig(admission=AdmissionOptions(), slo_window=300.0)
+    full = simulate(st, node_pool(), options=SimOptions(seed=4), config=cfg)
+    summ = simulate(st, node_pool(), options=SimOptions(seed=4),
+                    config=dataclasses.replace(cfg,
+                                               record_policy="summary"))
+    assert summ.records == [] and summ.workflows is None
+    assert summ.metrics is not None
+    assert summ.metrics.workflows == len(full.workflows)
+    assert summ.makespan == full.makespan
+    assert summ.tasks_total == full.tasks_total
+    assert summ.cpu_utilization == pytest.approx(full.cpu_utilization,
+                                                 rel=1e-12)
+    assert summ.stream == full.stream
+    assert summ.slo_attainment() == full.slo_attainment()
+    # below sketch capacity the percentile walk is bit-identical
+    for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+        assert summ.slowdown_percentile(q) == full.slowdown_percentile(q)
+    assert summ.weighted_slowdown() == pytest.approx(
+        full.weighted_slowdown(), rel=1e-12)
+    assert summ.window_stats(300.0) == full.window_stats(300.0)
+    with pytest.raises(ValueError, match="window"):
+        summ.window_stats(250.0)
+
+
+def test_summary_mode_same_dispatch_as_full():
+    """Dropping the trace must not change what the engine does: a full
+    run and a summary run share the dispatch sequence (pinned through
+    identical makespan / totals / stream accounting / prediction trace,
+    since the summary run keeps no records to compare)."""
+    st = open_stream(seed=13, sigma=5.0)
+    cfg = RunConfig(feedback=FeedbackOptions(migrate=False))
+    full = simulate(st, node_pool(), options=SimOptions(seed=5), config=cfg)
+    summ = simulate(st, node_pool(), options=SimOptions(seed=5),
+                    config=dataclasses.replace(cfg,
+                                               record_policy="summary"))
+    assert summ.makespan == full.makespan
+    assert summ.tasks_total == full.tasks_total
+    assert summ.stream == full.stream
+    assert len(summ.predictions) == len(full.predictions)
+    assert [p.total for p in summ.predictions] \
+        == [p.total for p in full.predictions]
+
+
+def test_record_policy_validation():
+    with pytest.raises(ValueError, match="record_policy"):
+        simulate(two_stage(), node_pool(),
+                 config=RunConfig(record_policy="bogus"))
+    with pytest.raises(ValueError, match="simulator-only"):
+        RealExecutor(node_pool(1), tx_scale=0.002).run(
+            two_stage(), config=RunConfig(record_policy="summary"))
+
+
+# ---------------------------------------------------------------------------
+# perf counters + executor integration
+# ---------------------------------------------------------------------------
+
+def test_perf_counters_populated():
+    st = open_stream(seed=2)
+    cfg = RunConfig(feedback=FeedbackOptions(migrate=False),
+                    perf_counters=True, coalesce_events=True,
+                    predict=PredictOptions(min_interval=120.0))
+    r = simulate(st, node_pool(), options=SimOptions(seed=0), config=cfg)
+    p = r.perf
+    assert p is not None
+    assert p.total_s > 0.0 and p.passes > 0 and p.events > 0
+    assert p.predicts >= 1
+    assert p.predicts <= len(r.predictions)
+    # the buckets partition the loop
+    assert p.engine_s + p.predict_s + p.metrics_s + p.events_s \
+        == pytest.approx(p.total_s, rel=1e-6)
+    off = simulate(st, node_pool(), options=SimOptions(seed=0),
+                   config=dataclasses.replace(cfg, perf_counters=False))
+    assert off.perf is None
+
+
+def test_executor_accepts_predict_options():
+    g = two_stage()
+    ex = RealExecutor(node_pool(2), tx_scale=0.002)
+    r = ex.run(g, config=RunConfig(
+        feedback=FeedbackOptions(migrate=False),
+        predict=PredictOptions(min_interval=5.0)))
+    assert len({(rec.set_name, rec.index) for rec in r.records}) == 4
+    assert len(r.predictions) >= 1
+
+
+# ---------------------------------------------------------------------------
+# tools/profile_run.py smoke (satellite: CI / tooling)
+# ---------------------------------------------------------------------------
+
+def test_profile_run_smoke(capsys):
+    import os
+    import sys
+    tools = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools")
+    sys.path.insert(0, tools)
+    try:
+        from profile_run import main
+    finally:
+        sys.path.remove(tools)
+    assert main(["--horizon", "120", "--predict-interval", "60",
+                 "--coalesce", "--summary", "--top", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "arrivals" in out and "perf:" in out
+    assert "cumulative" in out  # the pstats table made it to stdout

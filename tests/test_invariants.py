@@ -811,6 +811,40 @@ def test_elastic_leases_never_strand_or_lose_work(stream, seed, lease_term):
     assert kinds.count("grant") == r.leases_granted
 
 
+# ---------------------------------------------------------------------------
+# trace-scale hot loop (PR 9): the repredict throttle is placement-neutral
+from repro.core import PredictOptions  # noqa: E402
+
+
+@pytest.mark.parametrize("mode", POOL_MODES)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=4, deadline=None)
+@given(stream=random_streams(), seed=st.integers(0, 2),
+       min_interval=st.sampled_from([60.0, 500.0]),
+       admission=st.booleans())
+def test_prediction_throttle_is_placement_neutral(policy, mode, stream, seed,
+                                                  min_interval, admission):
+    """``PredictOptions`` throttling thins the prediction *trace* only:
+    across every policy x pool mode (admission on/off, stragglers +
+    speculation active), the dispatch sequence, makespan and per-workflow
+    stats are bit-identical to the unthrottled run."""
+    adm = AdmissionOptions() if admission else None
+    fb = FeedbackOptions(straggler_k=2.0, min_samples=2, speculate=True)
+    opts = straggler_opts(seed)
+    base = simulate(stream, make_pool(mode), options=opts,
+                    config=RunConfig(scheduling=policy, feedback=fb,
+                                     admission=adm))
+    thr = simulate(stream, make_pool(mode), options=opts,
+                   config=RunConfig(scheduling=policy, feedback=fb,
+                                    admission=adm,
+                                    predict=PredictOptions(
+                                        min_interval=min_interval)))
+    assert thr.records == base.records
+    assert thr.makespan == base.makespan
+    assert thr.workflows == base.workflows
+    assert len(thr.predictions) <= len(base.predictions)
+
+
 @pytest.mark.parametrize("policy", ALL_POLICIES)
 @settings(max_examples=4, deadline=None)
 @given(g=random_dags(max_nodes=5), seed=st.integers(0, 3))

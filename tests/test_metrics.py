@@ -1,0 +1,211 @@
+"""Streaming metric sketches (``core/metrics.py``) and the
+``RunResult`` metric-surface edge cases they must agree with.
+
+The contract under test: below its compaction threshold the sketch is
+*bit-identical* to ``RunResult.slowdown_percentile`` over the same
+weighted population; past it, quantile rank error stays within the
+largest centroid's weight share; the extremes (q=0 / q=1) are exact
+forever."""
+
+import random
+
+import pytest
+
+from repro.core import QuantileSketch, RunResult, StreamMetrics
+from repro.core.workflow import WorkflowStats
+
+
+def full_result(stats):
+    return RunResult(makespan=0.0, records=[],
+                     workflows={w.name: w for w in stats})
+
+
+def wf(name, finish, *, ref=1.0, weight=1.0, deadline=None, arrival=0.0,
+       tasks=1):
+    return WorkflowStats(name=name, arrival=arrival, start=arrival,
+                         finish=finish, tasks=tasks, weight=weight,
+                         deadline=deadline, reference_makespan=ref)
+
+
+# -- QuantileSketch ---------------------------------------------------------
+
+def test_sketch_empty_and_validation():
+    s = QuantileSketch()
+    assert s.query(0.5) is None
+    assert s.exact and len(s) == 0
+    with pytest.raises(ValueError):
+        QuantileSketch(max_points=1)
+
+
+def test_sketch_ignores_nonpositive_weight():
+    s = QuantileSketch()
+    s.add(5.0, 0.0)
+    s.add(7.0, -1.0)
+    assert len(s) == 0 and s.n_added == 0
+    s.add(3.0)
+    assert s.query(0.5) == 3.0
+
+
+def test_sketch_exact_fallback_matches_runresult_bitwise():
+    rng = random.Random(7)
+    pop = [(rng.uniform(1.0, 40.0), rng.choice([0.5, 1.0, 2.0, 4.0]))
+           for _ in range(300)]
+    s = QuantileSketch(max_points=512)  # 300 < 2*512 -> never compacts
+    stats = []
+    for i, (v, w) in enumerate(pop):
+        s.add(v, w)
+        stats.append(wf(f"w{i}", finish=v, ref=1.0, weight=w))
+    assert s.exact
+    r = full_result(stats)
+    for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0]:
+        assert s.query(q) == r.slowdown_percentile(q)
+
+
+def test_sketch_extremes_exact_after_compaction():
+    rng = random.Random(11)
+    vals = [rng.uniform(0.0, 100.0) for _ in range(5000)]
+    s = QuantileSketch(max_points=32)
+    for v in vals:
+        s.add(v)
+    assert not s.exact and s.compactions > 0
+    assert len(s) <= 2 * s.max_points
+    assert s.query(0.0) == min(vals)
+    assert s.query(1.0) == max(vals)
+    assert s.total_weight() == pytest.approx(len(vals))
+
+
+def test_sketch_rank_error_within_documented_bound():
+    """Documented bound: the rank of ``query(q)`` is within the largest
+    centroid's weight share of ``q`` (module docstring)."""
+    rng = random.Random(3)
+    vals = sorted(rng.lognormvariate(0.0, 1.0) for _ in range(8000))
+    s = QuantileSketch(max_points=64)
+    for v in vals:
+        s.add(v)
+    assert not s.exact
+    bound = max(w for _v, w in s._pts) / s.total_weight()
+    n = len(vals)
+    for q in [0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99]:
+        got = s.query(q)
+        # exact rank interval of the returned value in the population
+        lo = sum(1 for v in vals if v < got) / n
+        hi = sum(1 for v in vals if v <= got) / n
+        assert lo - bound <= q <= hi + bound, (q, got, lo, hi, bound)
+
+
+def test_sketch_weighted_mass_pulls_quantile():
+    s = QuantileSketch()
+    s.add(1.0, 9.0)
+    s.add(100.0, 1.0)
+    assert s.query(0.5) == 1.0
+    assert s.query(0.95) == 100.0
+
+
+# -- StreamMetrics ----------------------------------------------------------
+
+def make_population(seed, n=400):
+    rng = random.Random(seed)
+    stats = []
+    for i in range(n):
+        finish = rng.uniform(0.0, 5000.0)
+        stats.append(WorkflowStats(
+            name=f"w{i}", arrival=finish - rng.uniform(1.0, 50.0),
+            start=finish - rng.uniform(0.5, 20.0), finish=finish,
+            tasks=rng.choice([0, 1, 3]),
+            weight=rng.choice([0.5, 1.0, 2.0]),
+            deadline=(finish + rng.uniform(-5.0, 5.0)
+                      if rng.random() < 0.6 else None),
+            reference_makespan=(rng.uniform(0.5, 10.0)
+                                if rng.random() < 0.8 else None)))
+    return stats
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_stream_metrics_parity_with_full_result(seed):
+    stats = make_population(seed)
+    m = StreamMetrics(window=900.0)
+    for w in stats:
+        m.observe_workflow(w)
+    r = full_result(stats)
+    assert m.workflows == len(stats)
+    assert m.slo_attainment() == r.slo_attainment()
+    assert m.weighted_slowdown() == pytest.approx(
+        r.weighted_slowdown(), rel=1e-12)
+    for q in [0.0, 0.5, 0.9, 0.99, 1.0]:  # below capacity -> bit-exact
+        assert m.slowdown_percentile(q) == r.slowdown_percentile(q)
+    assert m.window_stats() == r.window_stats(900.0)
+
+
+def test_stream_metrics_empty_and_validation():
+    m = StreamMetrics()
+    assert m.slo_attainment() is None
+    assert m.weighted_slowdown() is None
+    assert m.slowdown_percentile(0.5) is None
+    assert m.window_stats() == []
+    with pytest.raises(ValueError):
+        StreamMetrics(window=0.0)
+
+
+# -- RunResult metric edge cases (satellite: results coverage) --------------
+
+def test_runresult_empty_records():
+    r = RunResult(makespan=0.0, records=[])
+    assert r.slo_attainment() is None
+    assert r.weighted_slowdown() is None
+    assert r.slowdown_percentile(0.5) is None
+    assert r.window_stats(900.0) == []
+    assert r.throughput() == 0.0
+    assert r.per_pool_task_counts() == {}
+
+
+def test_runresult_all_zero_weights():
+    stats = [wf(f"w{i}", finish=10.0 * i, ref=2.0, weight=0.0)
+             for i in range(1, 4)]
+    r = full_result(stats)
+    # zero-weight workflows carry no percentile mass ...
+    assert r.slowdown_percentile(0.5) is None
+    # ... and no weighted-mean mass either
+    assert r.weighted_slowdown() is None
+
+
+def test_runresult_single_record_window():
+    r = full_result([wf("only", finish=950.0, ref=10.0)])
+    ws = r.window_stats(900.0)
+    assert len(ws) == 1
+    (w,) = ws
+    assert w["t0"] == 900.0 and w["t1"] == 1800.0 and w["finished"] == 1
+    sd = 950.0 / 10.0
+    assert w["p50_slowdown"] == sd and w["p99_slowdown"] == sd
+    assert w["slo_attainment"] is None  # no deadline carried
+
+
+def test_runresult_percentile_endpoints():
+    stats = [wf("a", finish=2.0), wf("b", finish=5.0), wf("c", finish=9.0)]
+    r = full_result(stats)
+    assert r.slowdown_percentile(0.0) == 2.0
+    assert r.slowdown_percentile(1.0) == 9.0
+    with pytest.raises(ValueError):
+        r.window_stats(0.0)
+
+
+def test_runresult_metric_queries_are_memoized():
+    stats = make_population(5)
+    r = full_result(stats)
+    r.slowdown_percentile(0.5)
+    view = r.__dict__["_slow_view"]
+    r.slowdown_percentile(0.99)
+    assert r.__dict__["_slow_view"] is view  # sorted once, reused
+    first = r.window_stats(900.0)
+    assert r.window_stats(900.0) is first  # memoized per window
+    assert r.window_stats(600.0) is not first
+
+
+def test_summary_result_rejects_foreign_window():
+    m = StreamMetrics(window=900.0)
+    m.observe_workflow(wf("w", finish=10.0))
+    r = RunResult(makespan=0.0, records=[], metrics=m)
+    assert r.window_stats(900.0) == m.window_stats()
+    with pytest.raises(ValueError):
+        r.window_stats(600.0)
+    assert r.slowdown_percentile(0.5) == m.slowdown_percentile(0.5)
+    assert r.weighted_slowdown() == m.weighted_slowdown()

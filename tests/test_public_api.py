@@ -29,7 +29,7 @@ EXPECTED = {
     "SchedEngine", "SchedulingPolicy", "SCHEDULING_POLICIES",
     "get_scheduling_policy", "SetInfo", "FifoBackfill", "LargestTxFirst",
     "GpuAwareBestFit", "LocalityAware", "NodePackTopology",
-    "CampaignPriority", "AdmissionOptions", "FailureEvent",
+    "CampaignPriority", "AdmissionOptions", "FailureEvent", "PredictOptions",
     # estimator / feedback
     "TxEstimator", "SetEstimate", "FeedbackOptions",
     # faults
@@ -41,7 +41,9 @@ EXPECTED = {
     # run API (both substrates)
     "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
     "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
-    "RealExecutor", "ExecResult",
+    "RealExecutor", "ExecResult", "PerfCounters",
+    # streaming metric sketches
+    "QuantileSketch", "StreamMetrics",
     # execution policies / comparison
     "ExecutionPolicy", "async_policy", "sequential_policy",
     "adaptive_policy", "adaptive_observed_policy", "arbitrated_policy",

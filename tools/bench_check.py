@@ -46,6 +46,15 @@ Failure conditions:
      preemptive revocation exercised across the seeds, and the
      streaming run API — ``CampaignStream`` + ``RunConfig`` — stays
      bit-identical to the committed closed-campaign baselines);
+   - the trace-scale hot loop still pays off (``stream_scale.json``:
+     >= 5x end-to-end simulated arrivals/sec on the ~1e5-arrival
+     diurnal stream for the epoch-throttled + coalesced + summary arm
+     over the unthrottled prefix arm, throttled predictions leave the
+     dispatch sequence bit-identical on every seed, and repeated
+     summary metric queries stay O(1)-amortized — per-query latency at
+     ~1e5 workflows within 3x of ~1e4).  Wall-clock values in that
+     file are machine-dependent and are NOT drift-compared; the
+     deterministic per-seed ``makespan_throttled`` values are;
    - priced recovery arbitration still matches-or-beats both pure
      recovery arms on every seed of the c-DG2 failure storm
      (``faults.json``: per-seed arbitrated <= min(always-rerun,
@@ -206,6 +215,22 @@ def check_headlines(name, fresh, problems):
             problems.append(
                 f"{name}: incremental and brute-force-scan arms no longer "
                 f"emit identical dispatch sequences")
+    if name == "stream_scale.json":
+        hl = fresh.get("headlines", {})
+        speedup = hl.get("speedup")
+        if speedup is None or speedup < 5.0:
+            problems.append(
+                f"{name}: hot-loop arm end-to-end arrivals/sec speedup is "
+                f"{speedup!r} over the unthrottled arm (needs >= 5x)")
+        if not hl.get("dispatch_identity"):
+            problems.append(
+                f"{name}: throttled predictions no longer leave the "
+                f"dispatch sequence bit-identical to the unthrottled arm")
+        if not hl.get("metric_query_sublinear"):
+            problems.append(
+                f"{name}: summary metric queries no longer O(1)-amortized "
+                f"(per-query latency grew {hl.get('latency_ratio')!r}x "
+                f"from ~1e4 to ~1e5 workflows, needs <= 3x)")
     if name == "streaming.json":
         st = fresh.get("streaming", {})
         per_seed = st.get("per_seed", {})

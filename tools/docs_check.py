@@ -123,10 +123,11 @@ def main() -> int:
         import dataclasses as _dc
 
         from repro.core import (AdmissionOptions, ElasticOptions,
-                                FaultOptions, FeedbackOptions, RunConfig,
-                                SimOptions)
+                                FaultOptions, FeedbackOptions,
+                                PredictOptions, RunConfig, SimOptions)
         knob_classes = (RunConfig, ElasticOptions, AdmissionOptions,
-                        FaultOptions, FeedbackOptions, SimOptions)
+                        FaultOptions, FeedbackOptions, PredictOptions,
+                        SimOptions)
     except Exception as e:  # pragma: no cover - import environment broken
         problems.append(f"cannot import run-API knob classes: {e}")
         knob_classes = ()

@@ -1,0 +1,108 @@
+"""cProfile any simulated run: `make profile` / `python
+tools/profile_run.py [knobs]`.
+
+Builds the stream-scale benchmark's diurnal open-stream scenario (small
+2-CPU jobs on an aggregate slice whose diurnal peak overruns capacity),
+runs it once under ``cProfile`` with the requested ``RunConfig`` knobs,
+and prints the top cumulative hot spots — the first place to look when
+simulated-arrivals/sec regress.  Every hot-loop knob is a flag, so the
+throttled and unthrottled arms can be profiled side by side:
+
+    python tools/profile_run.py --horizon 4000
+    python tools/profile_run.py --horizon 4000 --predict-interval 900 \\
+        --coalesce --summary
+
+Exits 0; the report goes to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import os
+import pstats
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core import (DAG, FeedbackOptions, GeneratedStream,  # noqa: E402
+                        NodeSpec, PoolSpec, PredictOptions, RunConfig,
+                        SimOptions, StreamTemplate, TaskSet, simulate)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="cProfile a simulated open-stream run")
+    ap.add_argument("--horizon", type=float, default=2000.0,
+                    help="stream horizon in modelled seconds")
+    ap.add_argument("--rate", type=float, default=0.4,
+                    help="trough arrival rate (1/s); diurnal peak is 5x")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--cpus", type=int, default=96,
+                    help="aggregate pool width")
+    ap.add_argument("--scheduling", default="fifo",
+                    help="scheduling policy name")
+    ap.add_argument("--predict-interval", type=float, default=None,
+                    metavar="S", help="enable PredictOptions with this "
+                    "min_interval (modelled seconds)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="coalesce same-timestamp event passes")
+    ap.add_argument("--summary", action="store_true",
+                    help='record_policy="summary" (bounded memory)')
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows of the profile to print")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=["cumulative", "tottime", "ncalls"])
+    return ap
+
+
+def build_config(args) -> RunConfig:
+    return RunConfig(
+        scheduling=args.scheduling,
+        feedback=FeedbackOptions(migrate=False),
+        predict=(PredictOptions(min_interval=args.predict_interval)
+                 if args.predict_interval is not None else None),
+        coalesce_events=args.coalesce,
+        record_policy="summary" if args.summary else "full",
+        slo_window=1800.0, perf_counters=True)
+
+
+def build_scenario(args):
+    g = DAG()
+    g.add(TaskSet("job", 1, 2, 0, tx_mean=30.0, tx_sigma=6.0))
+    tmpl = StreamTemplate("job", lambda: g, deadline_slack=600.0,
+                          reference_makespan=30.0)
+    stream = GeneratedStream([tmpl], rate=args.rate, horizon=args.horizon,
+                             seed=args.seed, kind="diurnal", period=3600.0,
+                             peak_ratio=5.0, name="profile")
+    pool = PoolSpec("profile", 1, NodeSpec(cpus=args.cpus, gpus=0))
+    return stream, pool
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    stream, pool = build_scenario(args)
+    config = build_config(args)
+    holder = {}
+    pr = cProfile.Profile()
+    pr.enable()
+    holder["r"] = simulate(stream, pool, options=SimOptions(seed=args.seed),
+                           config=config)
+    pr.disable()
+    r = holder["r"]
+    print(f"profile_run: {r.stream['arrived']} arrivals, "
+          f"makespan {r.makespan:.1f} modelled s, "
+          f"{len(r.predictions)} predictions")
+    if r.perf is not None:
+        p = r.perf
+        print(f"  perf: engine {p.engine_s:.2f}s  predict "
+              f"{p.predict_s:.2f}s  events {p.events_s:.2f}s  metrics "
+              f"{p.metrics_s:.2f}s  ({p.passes} passes, "
+              f"{p.predicts} predicts)")
+    pstats.Stats(pr).sort_stats(args.sort).print_stats(args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
