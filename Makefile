@@ -4,8 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: test-fast test-all test-cov bench-policies bench-feedback \
         bench-predictor bench-topology bench-admission \
         bench-engine-scale bench-faults bench-streaming \
-        bench-stream-scale bench-check bench-paper docs-check lint \
-        format-check profile
+        bench-stream-scale bench-scenarios bench-check bench-paper \
+        docs-check lint format-check profile
 
 ## tier-1: everything except the slow subprocess multi-device runs
 test-fast:
@@ -72,6 +72,13 @@ bench-streaming:
 ## and O(1)-amortized summary metric queries
 bench-stream-scale:
 	$(PY) benchmarks/bench_stream_scale.py
+
+## scenario matrix: every policy x admission x feedback over the named
+## SCENARIOS (service mixes, adversarial compositions, SWF replay) —
+## the policy-selection table, adversarial separation, and the scenario
+## engine's bit-identity to the committed baseline
+bench-scenarios:
+	$(PY) benchmarks/bench_scenarios.py
 
 ## cProfile any RunConfig scenario: top-20 cumulative hot spots
 ## (tools/profile_run.py --help for the knobs)

@@ -1,0 +1,197 @@
+"""Scenario matrix: policy selection over trace replay + adversarial
+generation (``core/scenarios.py``).
+
+Sweeps every scheduling policy x admission(on/off) x feedback(on/off)
+over the named :data:`repro.core.SCENARIOS` matrix — the three service
+mixes, the three adversarial compositions, and the committed HPC2N SWF
+replay — at two seeds each, and emits the policy-selection table: which
+policy wins each scenario, by how much, and whether the winner is
+stable across seeds.
+
+The point of the matrix is that no single policy wins everywhere: the
+adversarial scenarios are built to separate the field (fragmentation
+rewards packing-aware placement, heavy tails reward size-aware orders),
+so the table is the reproduction's answer to "which knobs for which
+workload".  Headlines gated by ``make bench-check``:
+
+- every scenario ran the full 6 x 2 x 2 arm grid at both seeds with
+  finite metrics and stream/campaign conservation;
+- the policy spread on the adversarial scenarios is real (best arm
+  materially beats the worst arm);
+- scenario runs stay bit-identical to the committed baseline
+  (``baseline_identity`` rows — the scenario engine's determinism
+  contract, same spec + seed => same makespan, held across commits).
+
+Per-arm ``makespan`` values are drift-gated (10%, one-sided) like every
+other baseline; they are deterministic here, so any drift is a real
+behaviour change.  Writes ``benchmarks/out/scenarios.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from repro.core import SCENARIOS, ScenarioGenerator
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baseline")
+
+POLICIES = ("fifo", "lpt", "gpu_bestfit", "locality", "nodepack",
+            "priority")
+#: (admission, feedback) toggles — the full cross
+COMBOS = ((False, False), (True, False), (False, True), (True, True))
+SEEDS = (1, 2)
+
+
+def arm_key(policy: str, admission: bool, feedback: bool) -> str:
+    return policy + ("+adm" if admission else "") \
+        + ("+fb" if feedback else "")
+
+
+def run_arm(scenario: str, policy: str, admission: bool, feedback: bool,
+            seed: int) -> dict:
+    r = ScenarioGenerator(scenario, seed).run(
+        policy=policy, admission=admission, feedback=feedback)
+    if r.stream is not None:  # open arrivals: conservation must hold
+        assert r.stream["finished"] == r.stream["arrived"], \
+            (scenario, policy, seed, r.stream)
+    ws = r.weighted_slowdown()
+    assert math.isfinite(r.makespan), (scenario, policy, seed)
+    out = dict(makespan=round(r.makespan, 1))
+    if ws is not None:
+        assert math.isfinite(ws), (scenario, policy, seed)
+        out["ws"] = round(ws, 4)
+    return out
+
+
+def sweep() -> dict:
+    """The policy-selection table: scenario -> arm -> per-seed metrics.
+
+    The selection metric is fairness-weighted slowdown when the scenario
+    carries reference makespans (all of them do), with raw makespan kept
+    alongside for the drift gate."""
+    table: dict = {}
+    for scenario in SCENARIOS:
+        arms: dict = {}
+        for policy in POLICIES:
+            for admission, feedback in COMBOS:
+                per_seed = {s: run_arm(scenario, policy, admission,
+                                       feedback, s) for s in SEEDS}
+                key = "ws" if "ws" in per_seed[SEEDS[0]] else "makespan"
+                arms[arm_key(policy, admission, feedback)] = dict(
+                    metric=key, per_seed=per_seed,
+                    mean=round(sum(r[key] for r in per_seed.values())
+                               / len(SEEDS), 4))
+        table[scenario] = arms
+    return table
+
+
+def winners(table: dict) -> dict:
+    """Per scenario: the arm with the best (lowest) mean metric, its
+    margin over the worst arm, and per-seed winner stability."""
+    out = {}
+    for scenario, arms in table.items():
+        means = {k: a["mean"] for k, a in arms.items()}
+        best = min(means, key=means.get)
+        worst = max(means, key=means.get)
+        per_seed_best = {
+            s: min(arms, key=lambda k: arms[k]["per_seed"][s][
+                arms[k]["metric"]]) for s in SEEDS}
+        out[scenario] = dict(
+            winner=best, mean=means[best],
+            worst=worst, worst_mean=means[worst],
+            spread=round(means[worst] / means[best], 3)
+            if means[best] > 0 else None,
+            per_seed_winner={s: per_seed_best[s] for s in SEEDS},
+            winner_policy_stable=len(
+                {per_seed_best[s].split("+")[0] for s in SEEDS}) == 1)
+    return out
+
+
+def run_baseline_identity() -> dict:
+    """Scenario-engine determinism across commits: fresh single runs of
+    three scenario/seed pairs must reproduce the makespans committed in
+    ``benchmarks/baseline/scenarios.json`` bit-exactly (on the first
+    generation, before a baseline exists, the fresh value seeds the
+    row)."""
+    committed: dict = {}
+    path = os.path.join(BASELINE_DIR, "scenarios.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            committed = json.load(f).get("baseline_identity", {})
+    rows = {"swf_replay_seed1": ("swf-hpc2n", 1),
+            "bursty_heavytail_seed2": ("bursty-heavytail", 2),
+            "failure_storm_seed1": ("failure-storm", 1)}
+    out = {}
+    for key, (scenario, seed) in rows.items():
+        fresh = round(ScenarioGenerator(scenario, seed).run().makespan, 1)
+        comm = committed.get(key, {}).get("committed", fresh)
+        out[key] = dict(fresh=fresh, committed=comm,
+                        identical=fresh == comm)
+    return out
+
+
+def headlines(table: dict, win: dict) -> dict:
+    adversarial = [n for n, s in SCENARIOS.items()
+                   if "adversarial" in s.description]
+    full_grid = all(
+        len(table[s]) == len(POLICIES) * len(COMBOS)
+        and all(len(a["per_seed"]) == len(SEEDS)
+                for a in table[s].values())
+        for s in SCENARIOS)
+    spreads = {n: win[n]["spread"] for n in adversarial}
+    return dict(
+        scenarios=len(table), adversarial=adversarial,
+        full_grid=full_grid,
+        # the adversarial compositions must actually separate the field
+        adversarial_spread_min=min(spreads.values()),
+        adversarial_separation=all(sp is not None and sp >= 1.2
+                                   for sp in spreads.values()),
+        winner_policy_stable_count=sum(
+            1 for w in win.values() if w["winner_policy_stable"]),
+        single_policy_sweep=len({w["winner"].split("+")[0]
+                                 for w in win.values()}) == 1)
+
+
+def main() -> dict:
+    print(f"== policy-selection sweep: {len(SCENARIOS)} scenarios x "
+          f"{len(POLICIES)} policies x {len(COMBOS)} admission/feedback "
+          f"combos x {len(SEEDS)} seeds ==")
+    table = sweep()
+    win = winners(table)
+    for scenario, w in win.items():
+        metric = table[scenario][w["winner"]]["metric"]
+        stable = "stable" if w["winner_policy_stable"] else "UNSTABLE"
+        print(f"  {scenario:24s} winner {w['winner']:16s} "
+              f"{metric}={w['mean']:<9g} spread {w['spread']:.2f}x "
+              f"({stable} across seeds)")
+    hl = headlines(table, win)
+    assert hl["full_grid"], "sweep grid incomplete"
+    print(f"  adversarial spread >= {hl['adversarial_spread_min']:.2f}x "
+          f"on {hl['adversarial']}")
+    print(f"  winner policy stable on {hl['winner_policy_stable_count']}"
+          f"/{hl['scenarios']} scenarios; single policy sweeps all: "
+          f"{hl['single_policy_sweep']}")
+
+    print("== scenario engine determinism vs committed baseline ==")
+    ident = run_baseline_identity()
+    for which, r in ident.items():
+        print(f"  {which:26s} fresh={r['fresh']} "
+              f"committed={r['committed']} identical={r['identical']}")
+        assert r["identical"], (which, ident)
+
+    out = {"policies": list(POLICIES), "seeds": list(SEEDS),
+           "selection": table, "winners": win, "headlines": hl,
+           "baseline_identity": ident}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "scenarios.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"  scenarios: OK (wrote {os.path.relpath(path)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -22,8 +22,13 @@ from .model_batch import (BatchEqns, jax_available,
 from .metrics import QuantileSketch, StreamMetrics
 from .predictor import MakespanPrediction, MakespanPredictor
 from .results import PerfCounters, RunResult, per_pool_task_counts
-from .runconfig import RunConfig, resolve_run_config
+from .runconfig import (RunConfig, reset_legacy_warnings,
+                        resolve_run_config)
 from .simulator import SimOptions, SimResult, TaskRecord, simulate
+from .swf import (SWFJob, SWFMapOptions, SWFTrace, load_swf, parse_swf,
+                  swf_campaign, swf_entries, swf_stream)
+from .scenarios import (SCENARIOS, Scenario, ScenarioGenerator,
+                        run_scenario)
 from .executor import ExecResult, RealExecutor
 from .scheduler import (ExecutionPolicy, adaptive_observed_policy,
                         adaptive_policy, arbitrated_policy, async_policy,
@@ -74,8 +79,13 @@ __all__ = [
     "Campaign", "CampaignView", "WorkflowEntry", "WorkflowStats",
     "campaign_stats", "weighted_slowdown", "WorkflowStream",
     "CampaignStream", "GeneratedStream", "StreamTemplate", "prefix_view",
+    # trace replay + scenario engine
+    "SWFJob", "SWFTrace", "SWFMapOptions", "parse_swf", "load_swf",
+    "swf_entries", "swf_campaign", "swf_stream", "Scenario",
+    "ScenarioGenerator", "SCENARIOS", "run_scenario",
     # run API (both substrates)
-    "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
+    "RunConfig", "resolve_run_config", "reset_legacy_warnings",
+    "RunResult", "TaskRecord",
     "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
     "RealExecutor", "ExecResult", "PerfCounters",
     # streaming metric sketches (bounded-memory summaries)

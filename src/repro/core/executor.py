@@ -156,7 +156,8 @@ class RealExecutor:
                              task_level=task_level, feedback=feedback,
                              campaign=view, admission=admission,
                              faults=faults, elastic=cfg.elastic,
-                             predict=cfg.predict)
+                             predict=cfg.predict,
+                             incremental=cfg.incremental)
         # live for streams (add_workflow extends it); a superset-correct
         # copy of view.workflow_of for closed campaigns
         wf_of = engine.workflow_of if view is not None else {}

@@ -9,11 +9,14 @@ bundles them — plus the streaming-tenancy knobs this PR adds
 ``executor.run(dag, config=RunConfig(...))``.
 
 Legacy kwargs keep working through :func:`resolve_run_config`: the shim
-emits one :class:`DeprecationWarning` per process the first time any
-legacy kwarg is used, and *forbids mixing* the kwarg and config forms in
-one call (silently preferring either would make the other a no-op).
-Resolution is purely mechanical — a legacy call and its ``RunConfig``
-equivalent produce bit-identical runs.
+emits one :class:`DeprecationWarning` per process *per call site* (the
+``where`` string — ``simulate()`` and ``RealExecutor.run()`` each warn
+once) the first time that site sees a legacy kwarg, and *forbids
+mixing* the kwarg and config forms in one call (silently preferring
+either would make the other a no-op).  Resolution is purely mechanical
+— a legacy call and its ``RunConfig`` equivalent produce bit-identical
+runs.  Tests reset the warn-once state with
+:func:`reset_legacy_warnings`.
 """
 
 from __future__ import annotations
@@ -26,7 +29,7 @@ from .estimator import FeedbackOptions
 from .resources import ElasticOptions
 from .sched_engine import AdmissionOptions, PredictOptions, SchedulingPolicy
 
-__all__ = ["RunConfig", "resolve_run_config"]
+__all__ = ["RunConfig", "resolve_run_config", "reset_legacy_warnings"]
 
 #: sentinel distinguishing "kwarg not passed" from an explicit None/default
 #: (passing ``scheduling="fifo"`` explicitly still counts as legacy usage)
@@ -76,20 +79,35 @@ class RunConfig:
     #: collect ``RunResult.perf`` hot-loop wall-time attribution
     #: (pure-Python timers; zero overhead when False)
     perf_counters: bool = False
+    #: engine pass structures: the indexed fast path (default) vs the
+    #: brute-force scans (``core/sched_engine.py``); dispatch-identical
+    #: by the engine's invariant suite — exposed here so determinism
+    #: tests (and A/B runs) can flip it through the public run API
+    incremental: bool = True
 
 
-_warned = False
+#: call sites (``where`` strings) that have already warned this process.
+#: Keyed per site — one module-level bool silenced every call site after
+#: the first, so whichever entry point a test module happened to exercise
+#: first stole the warning from the others (test order decided which
+#: ``pytest.warns`` assertion saw it).
+_warned_sites: "set[str]" = set()
+
+
+def reset_legacy_warnings() -> None:
+    """Forget which call sites have warned (test hook: lets a test assert
+    the warn-once behaviour without depending on process history)."""
+    _warned_sites.clear()
 
 
 def _warn_legacy(where: str, names: "list[str]") -> None:
-    global _warned
-    if _warned:
+    if where in _warned_sites:
         return
-    _warned = True
+    _warned_sites.add(where)
     warnings.warn(
         f"{where}: passing {', '.join(sorted(names))} as separate keyword "
         f"arguments is deprecated — bundle them in config=RunConfig(...) "
-        f"(this warning is emitted once per process)",
+        f"(this warning is emitted once per call site per process)",
         DeprecationWarning, stacklevel=4)
 
 
@@ -100,7 +118,8 @@ def resolve_run_config(config: "RunConfig | None", legacy: dict,
     ``legacy`` maps kwarg name -> passed value, with the module-level
     ``_LEGACY`` sentinel marking "not passed".  Mixing any legacy kwarg
     with ``config=`` raises ``TypeError``; pure-legacy calls warn once
-    per process and resolve to the equivalent config."""
+    per call site (``where``) per process and resolve to the equivalent
+    config."""
     used = {k: v for k, v in legacy.items() if v is not _LEGACY}
     if config is not None:
         if used:

@@ -248,7 +248,8 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
     engine = SchedEngine(g, alloc, policy=scheduling, task_level=task_level,
                          feedback=feedback, campaign=view,
                          admission=admission, faults=faults,
-                         elastic=cfg.elastic, predict=cfg.predict)
+                         elastic=cfg.elastic, predict=cfg.predict,
+                         incremental=cfg.incremental)
     faults = engine.faults  # disabled options normalized to None
     schedule = (FailureSchedule(faults,
                                 [(k, p.num_nodes)
@@ -600,12 +601,42 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
     pred_due = False
     pass_due = False
 
+    def drain_stream() -> None:
+        """Admit every stream arrival due at (exactly) the current
+        timestamp before a scheduling pass runs.
+
+        Arrival-boundary contract (shared with the executor's
+        dispatcher): a pass at time ``t`` must see every arrival with
+        ``arrival <= t`` — the executor always drains
+        ``stream.take_until(now)`` before ``engine.startable(now)`` in
+        the same loop iteration.  Without this, an arrival landing
+        exactly on a completion's timestamp could be admitted only
+        *after* the completion's pass handed the freed capacity to
+        already-queued work (the ``_STREAM`` sentinel popping second at
+        an equal heap timestamp), diverging from both the executor and
+        the coalesced path.  For non-colliding arrivals the sentinel
+        still pops strictly first, so this is a no-op and the dispatch
+        trace is unchanged."""
+        nxt = stream.next_arrival() if stream is not None else None
+        if nxt is None or nxt > now:
+            return
+        new_names: list[str] = []
+        new_entries: list = []
+        for w in stream.take_until(now):
+            arrived_entries.append(w)
+            new_entries.append(w)
+            new_names.extend(engine.add_workflow(w, now=now))
+        sample_durations(new_names)
+        if summary:
+            note_entries(new_entries)
+
     def tail(pred: bool) -> None:
         nonlocal pred_due, pass_due
         if coalesce:
             pred_due = pred_due or pred
             pass_due = True
             return
+        drain_stream()
         if pred:
             repredict(now, running)
         try_start()
@@ -673,15 +704,10 @@ def simulate(dag: "DAG | Campaign | WorkflowStream",
             tail(True)  # the new workflow is visible
             continue
         if name is _STREAM:
-            new_names: list[str] = []
-            new_entries: list = []
-            for w in stream.take_until(now):
-                arrived_entries.append(w)
-                new_entries.append(w)
-                new_names.extend(engine.add_workflow(w, now=now))
-            sample_durations(new_names)
-            if summary:
-                note_entries(new_entries)
+            # a preceding same-timestamp pass may already have drained
+            # this sentinel's arrivals (see drain_stream); the sentinel
+            # then only re-arms itself and runs the visibility pass
+            drain_stream()
             nxt = stream.next_arrival()
             if nxt is not None:
                 heapq.heappush(events, (nxt, seq, _STREAM, -1, False, 0))

@@ -120,11 +120,22 @@ class WorkflowStream:
         return len(self._entries)
 
     def next_arrival(self) -> "float | None":
+        """Arrival time of the next unconsumed entry (None when
+        drained).  Never consumes."""
         if self._next >= len(self._entries):
             return None
         return self._entries[self._next].arrival
 
     def take_until(self, t: float) -> "list[WorkflowEntry]":
+        """Consume and return every entry with ``arrival <= t``.
+
+        The boundary is INCLUSIVE, and consumers must honour it at
+        exact timestamp collisions: a workflow arriving at time ``t``
+        is schedulable in the *same* dispatch pass as any task
+        completion at ``t`` — both substrates drain the stream up to
+        ``now`` before allocating freed capacity (the collision
+        regression in ``tests/test_streaming.py`` pins this for the
+        simulator's re-pushed stream sentinel)."""
         out = []
         while (self._next < len(self._entries)
                and self._entries[self._next].arrival <= t):

@@ -1,0 +1,300 @@
+"""Standard Workload Format (SWF) trace replay: real cluster logs as
+campaigns and arrival streams.
+
+Every committed baseline runs the paper's three synthetic drivers; the
+Parallel Workloads Archive's SWF traces (the accasim exemplar drives its
+whole simulator from ``HPC2N-2002-2.2.1-cln.swf``) are how pilot-job
+systems are validated against decades of real arrival processes.  This
+module parses SWF and maps trace jobs onto the repo's source
+abstractions so the six policies x admission x faults x elastic knobs
+can be exercised on real workloads (``core/scenarios.py`` composes the
+result into the scenario matrix).
+
+SWF recap (v2.2): lines starting with ``;`` are header directives
+(``; MaxNodes: 120``); every other non-blank line is one job of 18
+whitespace-separated integer fields, with ``-1`` marking "unknown".
+The fields this loader consumes, and where they land:
+
+======  ==================  =============================================
+field   SWF meaning         mapped to
+======  ==================  =============================================
+1       job number          ``WorkflowEntry`` name (``job<N>``)
+2       submit time (s)     arrival (shifted so the first kept job
+                            arrives at 0, then / ``time_scale``)
+3       wait time (s)       optional per-job deadline slack
+                            (``deadline_slack`` knob)
+4       run time (s)        ``TaskSet.tx_mean`` — the TX prior the
+                            policies / ``TxEstimator`` start from
+5       allocated procs     task footprint over the target pool: procs
+                            become CPU cores, split into node-bounded
+                            tasks (``cpus_per_proc`` knob)
+8       requested procs     fallback when field 5 is ``-1``/0
+9       requested time      kept on :class:`SWFJob` (user's estimate)
+11      status              ``keep_statuses`` filter (1 = completed,
+                            0 = failed, 5 = cancelled, -1 = unknown)
+======  ==================  =============================================
+
+Degenerate jobs — zero/``-1`` runtimes (cancelled jobs), zero-width
+footprints — are *clamped or dropped at load time*
+(:attr:`SWFMapOptions.on_degenerate`): a replayed job can never reach
+``TxEstimator`` / ``MakespanPredictor`` as a zero-TX or zero-width set
+(``DAG.validate`` would reject it anyway; the loader enforces it with
+trace-aware semantics instead of a crash deep in the engine).
+
+Down-sampling is seeded and documented: with ``sample < 1`` each kept
+job is an independent ``random.Random(seed)`` Bernoulli draw *in trace
+order*, then ``max_jobs`` truncates — so a decades-long trace replays
+in bounded wall time while two runs with the same options replay the
+identical job subset.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import IO, Iterable, Sequence
+
+from .dag import DAG, TaskSet
+from .resources import Allocation, PoolSpec
+from .stream import WorkflowStream
+from .workflow import Campaign, WorkflowEntry
+
+__all__ = ["SWFJob", "SWFTrace", "SWFMapOptions", "parse_swf", "load_swf",
+           "swf_entries", "swf_campaign", "swf_stream"]
+
+#: SWF job status codes (field 11)
+SWF_COMPLETED = 1
+SWF_FAILED = 0
+SWF_CANCELLED = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class SWFJob:
+    """One parsed SWF trace record (raw field values, ``-1`` preserved)."""
+
+    job_id: int
+    submit: float
+    wait: float
+    run_time: float
+    procs: int
+    req_procs: int
+    req_time: float
+    status: int
+    user: int
+    group: int
+    queue: int
+    partition: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SWFTrace:
+    """A parsed trace: header directives + jobs, in file order."""
+
+    header: "tuple[tuple[str, str], ...]"
+    jobs: "tuple[SWFJob, ...]"
+
+    def directive(self, key: str, default: "str | None" = None
+                  ) -> "str | None":
+        """Header directive value by (case-insensitive) key."""
+        for k, v in self.header:
+            if k.lower() == key.lower():
+                return v
+        return default
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+
+def _num(tok: str) -> float:
+    try:
+        return float(tok)
+    except ValueError:
+        return -1.0
+
+
+def parse_swf(source: "Iterable[str] | IO[str]") -> SWFTrace:
+    """Parse SWF lines: ``; Key: value`` headers, 18-field job records.
+
+    Tolerant by design — archive traces carry short rows, stray comment
+    styles and out-of-spec status codes: rows shorter than 18 fields are
+    right-padded with ``-1``, non-numeric fields read as ``-1``, and
+    nothing is filtered here (mapping applies ``SWFMapOptions``)."""
+    header: list[tuple[str, str]] = []
+    jobs: list[SWFJob] = []
+    for line in source:
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith(";"):
+            body = line.lstrip("; \t")
+            if ":" in body:
+                k, _, v = body.partition(":")
+                if k.strip():
+                    header.append((k.strip(), v.strip()))
+            continue
+        f = [_num(tok) for tok in line.split()]
+        f += [-1.0] * (18 - len(f))
+        jobs.append(SWFJob(
+            job_id=int(f[0]), submit=f[1], wait=f[2], run_time=f[3],
+            procs=int(f[4]), req_procs=int(f[7]), req_time=f[8],
+            status=int(f[10]), user=int(f[11]), group=int(f[12]),
+            queue=int(f[14]), partition=int(f[15])))
+    return SWFTrace(header=tuple(header), jobs=tuple(jobs))
+
+
+def load_swf(path: str) -> SWFTrace:
+    """Parse the SWF trace file at ``path``."""
+    with open(path) as fh:
+        return parse_swf(fh)
+
+
+@dataclasses.dataclass(frozen=True)
+class SWFMapOptions:
+    """Knobs of the trace-job -> workflow mapping (all seeded draws come
+    from one ``random.Random(seed)``, so the mapping is a pure function
+    of (trace, pool, options))."""
+
+    #: seeded down-sampling: keep each job independently with this
+    #: probability, drawn in trace order (1.0 = keep every job)
+    sample: float = 1.0
+    #: seed of the down-sampling / GPU-mix draws
+    seed: int = 0
+    #: keep at most this many jobs after thinning (None = no cap)
+    max_jobs: "int | None" = None
+    #: divide all trace times (submit offsets, runtimes, waits) by this
+    #: factor — a months-long trace replays in bounded modelled time
+    time_scale: float = 1.0
+    #: SWF statuses to replay (None = all); default: completed jobs only
+    keep_statuses: "tuple[int, ...] | None" = (SWF_COMPLETED,)
+    #: degenerate jobs (runtime <= 0 or ``-1``, zero/``-1`` footprint):
+    #: ``"clamp"`` repairs them (runtime -> ``min_runtime``, footprint ->
+    #: 1 proc), ``"drop"`` skips them, ``"error"`` raises ``ValueError``
+    on_degenerate: str = "clamp"
+    #: clamp floor for degenerate runtimes, in trace seconds
+    #: (pre-``time_scale``); must be > 0 — zero-TX sets are unmappable
+    min_runtime: float = 1.0
+    #: modelled CPU cores per trace processor (footprint coarsening)
+    cpus_per_proc: float = 1.0
+    #: seeded fraction of jobs replayed as GPU jobs (a hybrid AI-HPC mix
+    #: on GPU pools): a GPU job's tasks also hold GPUs pro-rata to their
+    #: node share.  Ignored on pools without GPUs.
+    gpu_fraction: float = 0.0
+    #: per-job SLO from the trace's own queueing behaviour: deadline =
+    #: arrival + ``deadline_slack`` x (wait + run time) (None = no SLOs)
+    deadline_slack: "float | None" = None
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.sample <= 1.0:
+            raise ValueError(f"sample must be in (0, 1], got {self.sample}")
+        if self.time_scale <= 0:
+            raise ValueError("time_scale must be > 0")
+        if self.on_degenerate not in ("clamp", "drop", "error"):
+            raise ValueError(
+                f"unknown on_degenerate {self.on_degenerate!r}; "
+                f"known: 'clamp', 'drop', 'error'")
+        if self.min_runtime <= 0:
+            raise ValueError("min_runtime must be > 0 (zero-TX task sets "
+                             "cannot be estimated or predicted)")
+        if self.cpus_per_proc <= 0:
+            raise ValueError("cpus_per_proc must be > 0")
+
+
+def _target_pool(pool: "PoolSpec | Allocation") -> PoolSpec:
+    if isinstance(pool, Allocation):
+        # footprints are sized to the widest node so every job fits
+        # somewhere; placement across the pools stays the engine's call
+        return max(pool.pools, key=lambda p: p.node_cpu_capacity)
+    return pool
+
+
+def swf_entries(trace: SWFTrace, pool: "PoolSpec | Allocation",
+                options: SWFMapOptions = SWFMapOptions()
+                ) -> "list[WorkflowEntry]":
+    """Map trace jobs to arrival-ordered single-set workflow entries.
+
+    Each kept job becomes one ``WorkflowEntry`` named ``job<id>`` whose
+    DAG holds a single ``TaskSet``: the job's processors become
+    ``ceil(procs * cpus_per_proc)`` cores split into node-bounded tasks
+    over ``pool``, and its runtime becomes the set's ``tx_mean`` — the
+    TX prior every policy and the ``TxEstimator`` start from.  The
+    loader guarantees every emitted set has ``tx_mean > 0``,
+    ``num_tasks >= 1`` and ``cpus_per_task >= 1`` (degenerate trace
+    rows are clamped/dropped per :attr:`SWFMapOptions.on_degenerate`)."""
+    p = _target_pool(pool)
+    cap = p.node_cpu_capacity
+    if cap <= 0:
+        raise ValueError(f"pool {p.name!r} has no usable cores per node")
+    rng = random.Random(options.seed)
+    kept: list[SWFJob] = []
+    for job in trace.jobs:
+        # one Bernoulli draw PER TRACE JOB, filtered or not: the replayed
+        # subset at a given seed is stable under keep_statuses changes
+        take = options.sample >= 1.0 or rng.random() < options.sample
+        if (options.keep_statuses is not None
+                and job.status not in options.keep_statuses):
+            continue
+        if take:
+            kept.append(job)
+    if options.max_jobs is not None:
+        kept = kept[:options.max_jobs]
+    if not kept:
+        return []
+    t0 = min(j.submit for j in kept if j.submit >= 0)
+    entries: list[WorkflowEntry] = []
+    for job in kept:
+        run = job.run_time
+        procs = job.procs if job.procs > 0 else job.req_procs
+        if run <= 0 or procs <= 0:
+            if options.on_degenerate == "error":
+                raise ValueError(
+                    f"degenerate SWF job {job.job_id}: run_time="
+                    f"{job.run_time}, procs={job.procs} "
+                    f"(req {job.req_procs}) — zero-TX / zero-width sets "
+                    f"cannot be replayed (on_degenerate='error')")
+            if options.on_degenerate == "drop":
+                continue
+            run = max(run, options.min_runtime)
+            procs = max(procs, 1)
+        cores = max(1, math.ceil(procs * options.cpus_per_proc))
+        num_tasks = max(1, math.ceil(cores / cap))
+        cpus_per_task = max(1, math.ceil(cores / num_tasks))
+        gpus_per_task = 0
+        if options.gpu_fraction > 0 and p.node.gpus > 0:
+            if rng.random() < options.gpu_fraction:
+                gpus_per_task = max(
+                    1, round(cpus_per_task / cap * p.node.gpus))
+        tx = run / options.time_scale
+        arrival = max(0.0, (job.submit - t0)) / options.time_scale
+        wait = max(0.0, job.wait) / options.time_scale
+        deadline = None
+        if options.deadline_slack is not None:
+            deadline = arrival + options.deadline_slack * (wait + tx)
+        g = DAG()
+        g.add(TaskSet("job", num_tasks, cpus_per_task, gpus_per_task, tx,
+                      kind="swf"))
+        entries.append(WorkflowEntry(
+            f"job{job.job_id}", g, arrival=arrival, deadline=deadline,
+            reference_makespan=tx))
+    entries.sort(key=lambda e: (e.arrival, e.name))
+    return entries
+
+
+def swf_campaign(trace: SWFTrace, pool: "PoolSpec | Allocation",
+                 options: SWFMapOptions = SWFMapOptions(),
+                 name: str = "swf") -> Campaign:
+    """The trace as a *closed* campaign (arrival-gated, known up front)."""
+    entries = swf_entries(trace, pool, options)
+    if not entries:
+        raise ValueError("no SWF jobs survived filtering/down-sampling")
+    return Campaign(entries, name=name)
+
+
+def swf_stream(trace: SWFTrace, pool: "PoolSpec | Allocation",
+               options: SWFMapOptions = SWFMapOptions(),
+               name: str = "swf") -> WorkflowStream:
+    """The trace as an *open* arrival stream (consumed incrementally)."""
+    entries = swf_entries(trace, pool, options)
+    if not entries:
+        raise ValueError("no SWF jobs survived filtering/down-sampling")
+    return WorkflowStream(entries, name=name)

@@ -294,6 +294,15 @@ class WorkflowEntry:
             raise ValueError(f"{self.name}: negative arrival time")
         if self.weight <= 0:
             raise ValueError(f"{self.name}: weight must be positive")
+        if self.deadline is not None and self.deadline <= self.arrival:
+            raise ValueError(
+                f"{self.name}: deadline {self.deadline} must be after "
+                f"arrival {self.arrival}")
+        if self.reference_makespan is not None \
+                and self.reference_makespan <= 0:
+            raise ValueError(
+                f"{self.name}: reference_makespan must be positive "
+                f"(got {self.reference_makespan})")
 
 
 @dataclasses.dataclass(frozen=True)

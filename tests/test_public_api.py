@@ -38,8 +38,13 @@ EXPECTED = {
     "Campaign", "CampaignView", "WorkflowEntry", "WorkflowStats",
     "campaign_stats", "weighted_slowdown", "WorkflowStream",
     "CampaignStream", "GeneratedStream", "StreamTemplate", "prefix_view",
+    # trace replay + scenario engine
+    "SWFJob", "SWFTrace", "SWFMapOptions", "parse_swf", "load_swf",
+    "swf_entries", "swf_campaign", "swf_stream", "Scenario",
+    "ScenarioGenerator", "SCENARIOS", "run_scenario",
     # run API (both substrates)
-    "RunConfig", "resolve_run_config", "RunResult", "TaskRecord",
+    "RunConfig", "resolve_run_config", "reset_legacy_warnings",
+    "RunResult", "TaskRecord",
     "per_pool_task_counts", "simulate", "SimOptions", "SimResult",
     "RealExecutor", "ExecResult", "PerfCounters",
     # streaming metric sketches

@@ -1,0 +1,245 @@
+"""SWF trace loader: parsing, degenerate-job validation, footprint
+mapping, seeded down-sampling, and the predictor-side guarantees for
+what the loader can emit (``core/swf.py``).
+
+The committed fixture ``tests/data/hpc2n_head.swf`` is a truncated
+HPC2N-shaped trace that deliberately contains the archive's warts: -1
+sentinel fields, zero and -1 runtimes, cancelled/failed/unknown status
+codes, a short row, and jobs wider than one node."""
+
+import math
+import os
+
+import pytest
+
+from repro.core import (Campaign, FeedbackOptions, MakespanPredictor,
+                        NodeSpec, PoolSpec, RunConfig, SWFMapOptions,
+                        TxEstimator, WorkflowStream, load_swf, parse_swf,
+                        simulate, swf_campaign, swf_entries, swf_stream)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "hpc2n_head.swf")
+
+
+def pool(nodes=8, cpus=32, gpus=0, **kw):
+    return PoolSpec("p", nodes, NodeSpec(cpus=cpus, gpus=gpus), **kw)
+
+
+# ---------------------------------------------------------------------------
+# parsing
+def test_parse_fixture_header_and_jobs():
+    tr = load_swf(FIXTURE)
+    assert len(tr) == 32
+    assert tr.directive("MaxProcs") == "240"
+    assert tr.directive("maxnodes") == "120"  # case-insensitive
+    assert tr.directive("NoSuchKey", "dflt") == "dflt"
+    by_id = {j.job_id: j for j in tr.jobs}
+    assert by_id[1].submit == 0 and by_id[1].procs == 2
+    assert by_id[1].run_time == 4595
+    # -1 sentinels preserved at parse time
+    assert by_id[7].run_time == -1 and by_id[7].status == 0
+    assert by_id[17].procs == -1 and by_id[17].req_procs == 24
+    # zero-runtime cancelled job
+    assert by_id[4].run_time == 0 and by_id[4].status == 5
+    # short row right-padded with -1
+    assert by_id[28].partition == -1
+
+
+def test_parse_tolerates_junk():
+    tr = parse_swf([
+        "; Version: 2.2",
+        ";",
+        "",
+        "1 0 5 100 4 x -1 4 600 -1 1 1 1 -1 1 -1 -1 -1",
+        "2 10 0 50 2",
+    ])
+    assert len(tr) == 2
+    assert tr.jobs[0].run_time == 100
+    assert tr.jobs[1].status == -1  # padded
+
+
+# ---------------------------------------------------------------------------
+# degenerate jobs: clamp / drop / error (loader validation, satellite fix)
+def test_degenerate_jobs_clamped_by_default():
+    tr = load_swf(FIXTURE)
+    entries = swf_entries(tr, pool(),
+                          SWFMapOptions(keep_statuses=None,
+                                        min_runtime=7.0))
+    assert len(entries) == 32  # nothing dropped: all repaired
+    for e in entries:
+        for ts in e.dag.nodes.values():
+            assert ts.tx_mean > 0
+            assert ts.num_tasks >= 1 and ts.cpus_per_task >= 1
+    # the zero/-1 runtime rows got exactly the clamp floor
+    tx = {e.name: next(iter(e.dag.nodes.values())).tx_mean
+          for e in entries}
+    assert tx["job4"] == 7.0 and tx["job7"] == 7.0 and tx["job21"] == 7.0
+    # -1 procs fell back to the requested 24 cores -> one 24-wide task
+    j17 = next(e for e in entries if e.name == "job17")
+    ts = next(iter(j17.dag.nodes.values()))
+    assert ts.num_tasks * ts.cpus_per_task >= 24
+
+
+def test_degenerate_jobs_drop_and_error():
+    tr = load_swf(FIXTURE)
+    dropped = swf_entries(tr, pool(),
+                          SWFMapOptions(keep_statuses=None,
+                                        on_degenerate="drop"))
+    names = {e.name for e in dropped}
+    assert {"job4", "job7", "job13", "job21"}.isdisjoint(names)
+    assert "job1" in names
+    with pytest.raises(ValueError, match="degenerate SWF job"):
+        swf_entries(tr, pool(), SWFMapOptions(keep_statuses=None,
+                                              on_degenerate="error"))
+
+
+def test_status_filter_default_keeps_completed_only():
+    tr = load_swf(FIXTURE)
+    names = {e.name for e in swf_entries(tr, pool())}
+    # failed (0), cancelled (5) and out-of-spec (3) statuses are gone
+    assert {"job4", "job7", "job13", "job21", "job26"}.isdisjoint(names)
+    assert len(names) == 27
+
+
+def test_map_options_validate():
+    for bad in (dict(sample=0.0), dict(sample=1.5), dict(time_scale=0),
+                dict(on_degenerate="zap"), dict(min_runtime=0),
+                dict(cpus_per_proc=0)):
+        with pytest.raises(ValueError):
+            SWFMapOptions(**bad)
+
+
+# ---------------------------------------------------------------------------
+# footprint + arrival mapping
+def test_footprint_splits_wide_jobs_over_nodes():
+    tr = load_swf(FIXTURE)
+    entries = {e.name: e for e in swf_entries(
+        tr, pool(nodes=8, cpus=32, node_level=True))}
+    ts = next(iter(entries["job11"].dag.nodes.values()))  # 128 procs
+    assert ts.num_tasks == 4 and ts.cpus_per_task == 32
+    ts = next(iter(entries["job31"].dag.nodes.values()))  # 120 procs
+    assert ts.num_tasks == 4 and ts.cpus_per_task == 30
+    ts = next(iter(entries["job2"].dag.nodes.values()))   # 1 proc
+    assert ts.num_tasks == 1 and ts.cpus_per_task == 1
+
+
+def test_arrivals_shift_and_time_scale():
+    tr = load_swf(FIXTURE)
+    a = swf_entries(tr, pool())
+    assert a[0].arrival == 0.0
+    assert all(e.arrival >= 0 for e in a)
+    b = swf_entries(tr, pool(), SWFMapOptions(time_scale=10.0))
+    assert b[3].arrival == pytest.approx(a[3].arrival / 10.0)
+    tx_a = next(iter(a[0].dag.nodes.values())).tx_mean
+    tx_b = next(iter(b[0].dag.nodes.values())).tx_mean
+    assert tx_b == pytest.approx(tx_a / 10.0)
+
+
+def test_gpu_fraction_and_deadlines():
+    tr = load_swf(FIXTURE)
+    entries = swf_entries(tr, pool(gpus=4),
+                          SWFMapOptions(gpu_fraction=1.0,
+                                        deadline_slack=2.0))
+    assert all(next(iter(e.dag.nodes.values())).gpus_per_task >= 1
+               for e in entries)
+    assert all(e.deadline is not None and e.deadline > e.arrival
+               for e in entries)
+    # gpu draws ignored on a CPU-only pool
+    cpu_only = swf_entries(tr, pool(), SWFMapOptions(gpu_fraction=1.0))
+    assert all(next(iter(e.dag.nodes.values())).gpus_per_task == 0
+               for e in cpu_only)
+
+
+# ---------------------------------------------------------------------------
+# seeded down-sampling (the documented bounded-replay knob)
+def test_down_sampling_seeded_and_reproducible():
+    tr = load_swf(FIXTURE)
+    opt = SWFMapOptions(sample=0.5, seed=11)
+    a = swf_entries(tr, pool(), opt)
+    b = swf_entries(tr, pool(), opt)
+    assert [(e.name, e.arrival) for e in a] \
+        == [(e.name, e.arrival) for e in b]
+    assert 0 < len(a) < 27
+    c = swf_entries(tr, pool(), SWFMapOptions(sample=0.5, seed=12))
+    assert {e.name for e in c} != {e.name for e in a}
+    capped = swf_entries(tr, pool(), SWFMapOptions(max_jobs=5))
+    assert len(capped) == 5
+
+
+def test_down_sampling_draws_stable_under_status_filter():
+    # one Bernoulli draw per TRACE job: widening the status filter must
+    # not reshuffle which completed jobs survive thinning
+    tr = load_swf(FIXTURE)
+    base = {e.name for e in swf_entries(
+        tr, pool(), SWFMapOptions(sample=0.4, seed=5))}
+    wide = {e.name for e in swf_entries(
+        tr, pool(), SWFMapOptions(sample=0.4, seed=5,
+                                  keep_statuses=None))}
+    assert base == {n for n in wide
+                    if n not in {"job4", "job7", "job13", "job21",
+                                 "job26"}}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end replay + predictor-side guarantees for loader output
+def test_swf_campaign_and_stream_replay():
+    tr = load_swf(FIXTURE)
+    opt = SWFMapOptions(max_jobs=12, time_scale=20.0)
+    camp = swf_campaign(tr, pool(), opt)
+    assert isinstance(camp, Campaign) and len(camp) == 12
+    r = simulate(camp, pool())
+    assert len(r.workflows) == 12
+    assert all(w.finish >= w.start for w in r.workflows.values())
+    st = swf_stream(tr, pool(), opt)
+    assert isinstance(st, WorkflowStream)
+    rs = simulate(st, pool())
+    assert rs.stream["finished"] == 12
+
+
+def test_workflow_entry_rejects_degenerate_slo_fields():
+    # load-time validation backstop below the SWF mapper: entries with
+    # impossible SLO / slowdown denominators never enter a campaign
+    from repro.core import DAG, TaskSet, WorkflowEntry
+    g = DAG()
+    g.add(TaskSet("a", 1, 1, 0, 5.0))
+    with pytest.raises(ValueError, match="deadline"):
+        WorkflowEntry("w", g, arrival=10.0, deadline=10.0)
+    with pytest.raises(ValueError, match="reference_makespan"):
+        WorkflowEntry("w", g, reference_makespan=0.0)
+
+
+def test_swf_empty_after_filtering_raises():
+    tr = parse_swf(["1 0 0 0 0 -1 -1 0 -1 -1 5 1 1 -1 1 -1 -1 -1"])
+    with pytest.raises(ValueError, match="no SWF jobs"):
+        swf_campaign(tr, pool())  # status filter eats the only job
+
+
+def test_clamped_minimal_jobs_safe_for_predictor_and_estimator():
+    # the most degenerate workload the loader can emit: every repaired
+    # job clamped to the runtime floor — prediction and estimation must
+    # stay finite (regression: pre-validation, zero-TX sets reached the
+    # predictor and estimator as 0-mean inputs)
+    tr = load_swf(FIXTURE)
+    camp = swf_campaign(tr, pool(), SWFMapOptions(
+        keep_statuses=None, min_runtime=0.5, time_scale=20.0,
+        max_jobs=10))
+    view = camp.view()
+    pred = MakespanPredictor(view.dag, pool(),
+                             workflow_of=view.workflow_of)
+    p = pred.predict(lambda n: view.dag.node(n).tx_mean, 0.0,
+                     {n: ts.num_tasks
+                      for n, ts in view.dag.nodes.items()}, {})
+    assert math.isfinite(p.total) and p.total > 0
+    assert math.isfinite(p.remaining) and p.remaining > 0
+    r = simulate(camp, pool(),
+                 config=RunConfig(feedback=FeedbackOptions()))
+    assert math.isfinite(r.makespan)
+    assert r.predictions and all(math.isfinite(q.total)
+                                 for q in r.predictions)
+    est = TxEstimator()
+    for name, ts in view.dag.nodes.items():
+        assert ts.tx_mean > 0  # the loader's validation guarantee
+        for _ in range(3):
+            est.observe(name, ts.tx_mean)
+        assert est.mean(name) > 0
+        assert est.tail_ratio(name) is not None

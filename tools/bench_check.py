@@ -55,6 +55,15 @@ Failure conditions:
      ~1e5 workflows within 3x of ~1e4).  Wall-clock values in that
      file are machine-dependent and are NOT drift-compared; the
      deterministic per-seed ``makespan_throttled`` values are;
+   - the scenario matrix still selects policies (``scenarios.json``:
+     the full 6-policy x admission x feedback grid ran on every named
+     scenario, the adversarial compositions still separate the field
+     — best arm beats worst by >= 1.2x on each — the per-scenario
+     winning policy is seed-stable on most scenarios, no single policy
+     sweeps the whole matrix, and fresh scenario runs stay
+     bit-identical to the committed baseline — the scenario engine's
+     same-spec-same-seed determinism contract).  Per-arm ``makespan``
+     values are deterministic and drift-compared like any baseline;
    - priced recovery arbitration still matches-or-beats both pure
      recovery arms on every seed of the c-DG2 failure storm
      (``faults.json``: per-seed arbitrated <= min(always-rerun,
@@ -266,6 +275,33 @@ def check_headlines(name, fresh, problems):
                 f"seeds (revocations_total="
                 f"{st.get('revocations_total')!r})")
         check_identity(name, fresh, problems, "streaming run API")
+    if name == "scenarios.json":
+        hl = fresh.get("headlines", {})
+        if not hl.get("full_grid"):
+            problems.append(
+                f"{name}: policy x admission x feedback sweep grid "
+                f"incomplete — some scenario is missing arms or seeds")
+        if not hl.get("adversarial_separation"):
+            problems.append(
+                f"{name}: adversarial scenarios no longer separate the "
+                f"policy field (min spread "
+                f"{hl.get('adversarial_spread_min')!r}, needs >= 1.2x "
+                f"on each of {hl.get('adversarial')!r})")
+        stable = hl.get("winner_policy_stable_count")
+        if stable is None or stable < 4:
+            problems.append(
+                f"{name}: per-scenario winning policy seed-stable on "
+                f"only {stable!r} scenarios (needs >= 4)")
+        if hl.get("single_policy_sweep"):
+            problems.append(
+                f"{name}: a single policy now wins every scenario — the "
+                f"matrix no longer exercises policy selection")
+        winners = fresh.get("winners", {})
+        if len(winners) < 6:
+            problems.append(
+                f"{name}: policy-selection table covers only "
+                f"{len(winners)} scenarios (needs >= 6)")
+        check_identity(name, fresh, problems, "scenario engine run")
     if name == "faults.json":
         rec = fresh.get("recovery", {})
         arms = rec.get("arms", {})

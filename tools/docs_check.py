@@ -9,10 +9,10 @@ Verifies that README.md and DESIGN.md only reference things that exist:
    BOTH files, and every policy name the DESIGN.md policy table lists is
    actually registered (docs and registry cannot drift);
 3. the run-API knob dataclasses (`RunConfig`, `ElasticOptions`,
-   `AdmissionOptions`, `FaultOptions`, `FeedbackOptions`, `SimOptions`)
-   stay documented field-by-field: every field must be mentioned in
-   README.md or DESIGN.md, so adding a knob without documenting it
-   fails CI.
+   `AdmissionOptions`, `FaultOptions`, `FeedbackOptions`, `SimOptions`,
+   `SWFMapOptions`, `Scenario`) stay documented field-by-field: every
+   field must be mentioned in README.md or DESIGN.md, so adding a knob
+   without documenting it fails CI.
 
 Exits non-zero with a list of problems; run by CI on every push.
 """
@@ -124,10 +124,11 @@ def main() -> int:
 
         from repro.core import (AdmissionOptions, ElasticOptions,
                                 FaultOptions, FeedbackOptions,
-                                PredictOptions, RunConfig, SimOptions)
+                                PredictOptions, RunConfig, Scenario,
+                                SimOptions, SWFMapOptions)
         knob_classes = (RunConfig, ElasticOptions, AdmissionOptions,
                         FaultOptions, FeedbackOptions, PredictOptions,
-                        SimOptions)
+                        SimOptions, SWFMapOptions, Scenario)
     except Exception as e:  # pragma: no cover - import environment broken
         problems.append(f"cannot import run-API knob classes: {e}")
         knob_classes = ()
